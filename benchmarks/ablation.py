@@ -1,0 +1,47 @@
+"""Fig. 24: contribution of each technique, by disabling them one at a time.
+
+SFHT / LWH / LWU toggles change the issued remote-op accounting (the extra
+READs/WRITEs/FAAs those designs eliminate); the FC toggle changes real
+behaviour (every hit issues a remote FAA). Throughput from the calibrated
+RNIC-message-rate model over the measured counters.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, hit_rate, model_throughput, run_ditto
+from repro.workloads import lru_friendly
+
+CAP = 1024
+
+VARIANTS = [
+    ("full", {}),
+    ("no_sfht", {"use_sfht": False}),
+    ("no_lwh", {"use_lwh": False}),
+    ("no_lwu", {"use_lwu": False}),
+    ("no_fc", {"use_fc": False}),
+]
+
+
+def run(quick=False):
+    rows = []
+    n = 16_000 if quick else 40_000
+    keys = lru_friendly(n, seed=11)
+    base = None
+    for name, kw in VARIANTS:
+        tr, _, wall = run_ditto(keys, capacity=CAP, **kw)
+        tput = model_throughput(tr, 256)
+        if name == "full":
+            base = tput
+        rows.append(dict(name=name, us_per_call=wall / n * 1e6 * 8,
+                         tput_mops=tput, rel_to_full=tput / base,
+                         hit=hit_rate(tr),
+                         faa=int(tr.stats.rdma_faa),
+                         reads=int(tr.stats.rdma_read),
+                         writes=int(tr.stats.rdma_write)))
+    rows.append(dict(name="paper_reference",
+                     sfht_gain="42%", lwh_gain="13%", lwu_fc_gain="4%"))
+    return emit(rows, "ablation")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import CLUSTER, DittoModel
+from repro.core import CacheConfig, make_cache, run_trace
+from repro.workloads import interleave
+
+_JIT_CACHE = {}
+
+
+def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
+              n_clients=8, seed=0, is_write=None, sizes=None, **cfg_kw):
+    """Run a flat trace through the JAX Ditto cache; returns (TraceResult,
+    cfg, wall_s)."""
+    cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
+                      capacity=capacity, experts=tuple(experts), **cfg_kw)
+    k2 = interleave(keys_flat, n_clients)
+    w2 = interleave(is_write, n_clients) if is_write is not None else None
+    s2 = interleave(sizes, n_clients) if sizes is not None else None
+    st, cl, _ = make_cache(cfg, n_clients, seed)
+    key = (cfg, n_clients)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            lambda s, c, k, w, z: run_trace(cfg, s, c, k, w, z))
+    fn = _JIT_CACHE[key]
+    T, C = k2.shape
+    w2 = jnp.zeros((T, C), bool) if w2 is None else jnp.asarray(w2)
+    s2 = jnp.ones((T, C), jnp.uint32) if s2 is None else jnp.asarray(s2)
+    t0 = time.time()
+    tr = fn(st, cl, jnp.asarray(k2), w2, s2)
+    jax.block_until_ready(tr.hits)
+    return tr, cfg, time.time() - t0
+
+
+def hit_rate(tr) -> float:
+    return float(tr.hits.sum()) / max(float(tr.ops.sum()), 1.0)
+
+
+def penalized_throughput(tr, n_clients: int, is_write_frac=0.0) -> float:
+    """Fig. 16 metric: client-bound throughput including the 500us storage
+    fetch on every miss (Mops)."""
+    model = DittoModel()
+    return model.throughput(n_clients, tr.stats, is_write_frac,
+                            hit_rate=hit_rate(tr)) / 1e6
+
+
+def model_throughput(tr, n_clients: int, is_write_frac=0.0) -> float:
+    """No-miss throughput from measured op counters (Mops) — Figs. 2/14."""
+    model = DittoModel()
+    return model.throughput(n_clients, tr.stats, is_write_frac, 1.0) / 1e6
+
+
+def fmt(x):
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)
+
+
+def emit(rows, prefix):
+    out = []
+    for r in rows:
+        name = f"{prefix}.{r.pop('name')}"
+        us = r.pop("us_per_call", 0.0)
+        derived = ";".join(f"{k}={fmt(v)}" for k, v in r.items())
+        line = f"{name},{us:.3f},{derived}"
+        print(line)
+        out.append(line)
+    return out

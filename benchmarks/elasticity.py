@@ -1,0 +1,58 @@
+"""Figs. 1 & 13: elasticity timeline — Ditto vs sharded-monolithic Redis.
+
+Redis rescale 32->64->32 one-core nodes under YCSB-C: resharding moves half
+of 10M objects, delaying the throughput gain / resource reclamation by
+minutes and dipping throughput during migration. Ditto adjusts compute and
+memory independently and instantly: compute scale = client-lane width
+(next step), memory scale = one capacity-scalar write (measured in
+test_dm_elastic_resize_no_migration with zero bytes moved).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import CLUSTER, DittoModel, RedisModel
+from repro.core import init_stats
+from benchmarks.common import emit, run_ditto, model_throughput
+from repro.workloads import ycsb
+
+
+def run(quick=False):
+    rows = []
+    redis = RedisModel()
+    horizon = 1200.0
+    events = [(0.0, 32), (180.0, 64), (600.0, 32)]
+    t, tput, billed = redis.timeline(events, horizon)
+
+    grow_at = 180.0
+    # time until throughput reaches the 64-node steady state
+    target = redis.steady_throughput(64) * 0.999
+    reached = t[(t > grow_at) & (tput >= target)]
+    grow_delay = (reached[0] - grow_at) if len(reached) else np.inf
+    shrink_at = 600.0
+    reclaimed = t[(t > shrink_at) & (billed <= 32)]
+    shrink_delay = (reclaimed[0] - shrink_at) if len(reclaimed) else np.inf
+    dip = 1.0 - tput[(t > grow_at) & (t < grow_at + grow_delay)].min() / \
+        redis.steady_throughput(32)
+    rows.append(dict(name="redis_rescale", grow_delay_min=grow_delay / 60,
+                     reclaim_delay_min=shrink_delay / 60,
+                     tput_dip_pct=100 * dip,
+                     paper_grow_min=5.3, paper_reclaim_min=5.6))
+
+    # Ditto: measured op counters -> model throughput at 32 and 64 clients
+    n = 20_000 if quick else 60_000
+    keys, _ = ycsb("C", n, n_keys=4_000, seed=0)
+    tput_d = {}
+    for c in (32, 64):
+        tr, cfg, wall = run_ditto(keys, capacity=8192, n_clients=c)
+        tput_d[c] = model_throughput(tr, c)
+    rows.append(dict(name="ditto_rescale",
+                     tput_32c_mops=tput_d[32], tput_64c_mops=tput_d[64],
+                     transition_delay_s=0.0, migration_bytes=0,
+                     paper_tput_32c=5.0, paper_tput_64c=8.5))
+    return emit(rows, "elasticity")
+
+
+if __name__ == "__main__":
+    run()

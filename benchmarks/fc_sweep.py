@@ -1,0 +1,28 @@
+"""Fig. 25: FC-cache size sweep (YCSB-C, 256 clients).
+
+Larger client-side combining buffers absorb more freq updates -> fewer
+remote FAAs -> higher message-rate-bound throughput, saturating quickly
+(the paper sees the gain flatten past ~5MB; entries here)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, model_throughput, run_ditto
+from repro.workloads import ycsb
+
+
+def run(quick=False):
+    rows = []
+    n = 16_000 if quick else 48_000
+    keys, _ = ycsb("C", n, n_keys=4_000, seed=0)
+    for fc in (0, 8, 16, 32, 64, 128):
+        kw = {"use_fc": False} if fc == 0 else {"fc_size": fc}
+        tr, _, wall = run_ditto(keys, capacity=8192, n_clients=64, **kw)
+        rows.append(dict(name=f"fc_{fc}", us_per_call=wall / n * 1e6 * 64,
+                         tput_mops=model_throughput(tr, 256),
+                         faa_per_kop=1e3 * int(tr.stats.rdma_faa) / n,
+                         fc_hit=int(tr.stats.fc_hits)))
+    return emit(rows, "fc_sweep")
+
+
+if __name__ == "__main__":
+    run()

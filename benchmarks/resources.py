@@ -1,0 +1,70 @@
+"""Figs. 20-22: adapting to dynamic resource settings.
+
+20: client mix between an LRU-friendly app and an LFU-friendly app;
+21: growing concurrent-client counts on the same workload;
+22: growing cache sizes (elastic capacity) flipping the best policy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CacheConfig, make_cache, run_trace
+from benchmarks.common import emit, hit_rate, run_ditto
+from repro.workloads import interleave, lfu_friendly, loop_window, mixed_apps
+
+CAP = 1024
+
+
+def _run_tensor(k2, capacity, experts, seed=0):
+    cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
+                      capacity=capacity, experts=experts)
+    st, cl, _ = make_cache(cfg, k2.shape[1], seed)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(
+        st, cl, jnp.asarray(k2))
+    return hit_rate(tr)
+
+
+def run(quick=False):
+    rows = []
+    n = 16_000 if quick else 48_000
+
+    # Fig. 20: client mix sweep
+    for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        k2 = mixed_apps(n, 8, lru_fraction=frac, seed=3)
+        r = {"name": f"client_mix_{int(frac*100)}"}
+        for label, exps in (("ditto", ("lru", "lfu")), ("lru", ("lru",)),
+                            ("lfu", ("lfu",))):
+            r[f"hit_{label}"] = _run_tensor(k2, CAP, exps)
+        r["near_best"] = r["hit_ditto"] >= max(r["hit_lru"],
+                                               r["hit_lfu"]) - 0.03
+        rows.append(r)
+
+    # Fig. 21: concurrency sweep on a pattern-shifting workload
+    keys = loop_window(n, CAP, seed=5)
+    for c in (1, 8, 32):
+        k2 = interleave(keys, c)
+        r = {"name": f"clients_{c}"}
+        for label, exps in (("ditto", ("lru", "lfu")), ("lru", ("lru",)),
+                            ("lfu", ("lfu",))):
+            r[f"hit_{label}"] = _run_tensor(k2, CAP, exps)
+        rows.append(r)
+
+    # Fig. 22: cache-size sweep (the best expert flips with capacity)
+    keys = lfu_friendly(n, hot_keys=3000, seed=7)
+    for cap in (256, 1024, 4096):
+        r = {"name": f"capacity_{cap}"}
+        for label, exps in (("ditto", ("lru", "lfu")), ("lru", ("lru",)),
+                            ("lfu", ("lfu",))):
+            tr, _, _ = run_ditto(keys, capacity=cap, experts=exps)
+            r[f"hit_{label}"] = hit_rate(tr)
+        r["near_best"] = r["hit_ditto"] >= max(r["hit_lru"],
+                                               r["hit_lfu"]) - 0.03
+        rows.append(r)
+    return emit(rows, "resources")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Roofline table over the dry-run matrix (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun_*.json and emits one row per cell with the
+three terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio and the
+roofline-MFU bound. Also renders the markdown table used in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh="single", tag=""):
+    out = {}
+    suffix = f"_{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"dryrun_*_{mesh}{suffix}"))):
+        rec = json.load(open(path))
+        if tag == "" and not path.endswith(f"_{mesh}.json"):
+            continue
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def markdown(mesh="single") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_mem_fused (s) | "
+        "t_coll (s) | bound | HBM/dev | useful_flops | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | SKIP "
+                         f"({r['reason'][:40]}) | — | — | — |")
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_memory_fused_s']:.3g} | "
+            f"{r['t_collective_s']:.3g} | {r['bottleneck']} | "
+            f"{r['peak_hbm_per_dev']/2**30:.2f}GiB | "
+            f"{r['useful_flops_frac']:.2f} | {r['mfu_bound']*100:.1f}% |")
+    return "\n".join(lines)
+
+
+def run(quick=False):
+    rows = []
+    for mesh in ("single", "multi"):
+        recs = load(mesh)
+        ok = [r for r in recs.values() if r["status"] == "ok"]
+        skip = [r for r in recs.values() if r["status"] != "ok"]
+        by_bound = {}
+        for r in ok:
+            by_bound[r["bottleneck"]] = by_bound.get(r["bottleneck"], 0) + 1
+        fits = sum(1 for r in ok if r["peak_hbm_per_dev"] < 16 * 2 ** 30)
+        rows.append(dict(name=f"matrix_{mesh}", cells_ok=len(ok),
+                         cells_skipped=len(skip), fits_16g=fits,
+                         **{f"bound_{k}": v for k, v in by_bound.items()}))
+    for (arch, shape), r in sorted(load("single").items()):
+        if r["status"] != "ok":
+            continue
+        rows.append(dict(
+            name=f"{arch}.{shape}",
+            t_comp=r["t_compute_s"], t_mem=r["t_memory_s"],
+            t_mem_fused=r["t_memory_fused_s"], t_coll=r["t_collective_s"],
+            bound=r["bottleneck"], mfu_bound=r["mfu_bound"],
+            useful=r["useful_flops_frac"],
+            hbm_gib=r["peak_hbm_per_dev"] / 2 ** 30))
+    return emit(rows, "roofline")
+
+
+if __name__ == "__main__":
+    print(markdown("single"))

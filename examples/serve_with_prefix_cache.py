@@ -1,0 +1,13 @@
+"""Serving demo: batched decode with the Ditto-managed prefix/page cache —
+the paper's adaptive eviction managing an LLM page pool.
+
+  PYTHONPATH=src python examples/serve_with_prefix_cache.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--requests", "16",
+                "--batch", "4", "--prompt-len", "64", "--gen", "8"] + sys.argv[1:]
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end training driver: a small LM trained for a few hundred steps
+with checkpointing, crash-resume, and straggler detection.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+Thin wrapper over the production driver (repro.launch.train).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--scale", "smoke",
+                "--steps", "200", "--batch", "8", "--seq", "64",
+                "--ckpt", "/tmp/repro_example_ckpt"] + sys.argv[1:]
+    main()

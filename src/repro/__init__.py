@@ -1,0 +1,9 @@
+"""repro: Ditto (SOSP'23) — elastic & adaptive caching on disaggregated
+memory — rebuilt as a JAX/Pallas framework for TPU pods.
+
+Layers: core (the paper's caching framework), dm (sharded memory-pool
+runtime), models/configs (assigned architecture zoo), train/serve
+(distributed substrate), kernels (Pallas TPU), launch (mesh/dryrun/drivers).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.baselines.policies import simulate_policy, PyDitto
+from repro.baselines.systems import (CLUSTER, CliqueMapModel, DittoModel,
+                                     RedisModel, ShardLRUModel)
+
+__all__ = ["simulate_policy", "PyDitto", "CLUSTER", "CliqueMapModel",
+           "DittoModel", "RedisModel", "ShardLRUModel"]

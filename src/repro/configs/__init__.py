@@ -1,0 +1,5 @@
+from repro.configs.registry import (ARCHS, SHAPES, get_arch, get_shape,
+                                    input_specs, smoke_config)
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "get_shape", "input_specs",
+           "smoke_config"]

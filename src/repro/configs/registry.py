@@ -1,0 +1,84 @@
+"""Arch/shape registry + dry-run input specs (ShapeDtypeStruct stand-ins)."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeConfig
+from repro.models.model import ModelConfig
+
+_MODULES = {
+    "yi-9b": "yi_9b",
+    "smollm-135m": "smollm_135m",
+    "granite-3-2b": "granite_3_2b",
+    "gemma-2b": "gemma_2b",
+    "internvl2-1b": "internvl2_1b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "musicgen-large": "musicgen_large",
+    "xlstm-350m": "xlstm_350m",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_arch(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k only runs on sub-quadratic archs (see DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 512k dense-KV decode is skipped"
+    return True, ""
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    pat = cfg.block_pattern
+    heads = min(cfg.n_heads, 4)
+    kv = max(1, min(cfg.n_kv_heads, heads // 2 if cfg.n_kv_heads < cfg.n_heads else heads))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=max(len(pat), 2 if len(pat) == 1 else len(pat)),
+        d_model=64, n_heads=heads, n_kv_heads=kv, head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128, vocab_size=512,
+        n_experts=8 if cfg.n_experts else 0, top_k=2 if cfg.top_k else 0,
+        attn_window=32 if cfg.attn_window else 0,
+    )
+
+
+def input_specs(arch: str, shape_name: str, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: full-sequence inputs. decode: one new token per sequence
+    (the KV/recurrent-state cache spec is built by serve.abstract_cache)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.uses_tokens:
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.uses_tokens:
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+    # decode: one token per sequence against a seq_len-deep cache
+    if cfg.uses_tokens:
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)}

@@ -1,0 +1,421 @@
+"""The Ditto cache: client-centric caching framework + distributed adaptive
+caching, as one batched functional step.
+
+Concurrency model: one step applies a *batch* of client operations (one op
+per client, matching the paper's client threads). All reads observe the
+step-entry snapshot; updates are applied with deterministic combines in the
+order (metadata updates → evictions → inserts), which is the batched
+analogue of the paper's CAS/FAA-mediated races. See DESIGN.md §2.
+
+Every operation is also metered in "issued remote ops" (OpStats) — the
+RDMA-verb counts of the paper's cost model — so the efficiency/ablation
+benchmarks (Figs. 2/14/24/25) are driven by real counters from this
+implementation, not hand-derived formulas.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+from repro.core.fc_cache import fc_access, fc_apply
+from repro.core.hashing import bucket_of, hash_key
+from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
+                              CacheState, ClientState, MDView, OpStats,
+                              init_cache, init_clients, init_stats, stats_add)
+
+I32 = jnp.int32
+U32 = jnp.uint32
+F32 = jnp.float32
+
+
+class AccessResult(NamedTuple):
+    hit: jnp.ndarray       # bool[C]
+    value: jnp.ndarray     # u32[C, W] (garbage where miss)
+    evicted: jnp.ndarray   # bool[C] — this op performed a global eviction
+    regret: jnp.ndarray    # bool[C]
+
+
+def _md_view(state: CacheState, idx: jnp.ndarray) -> MDView:
+    """Gather an MDView for slot indices (any shape)."""
+    size = state.size[idx].astype(F32)
+    return MDView(
+        size=size,
+        insert_ts=state.insert_ts[idx].astype(F32),
+        last_ts=state.last_ts[idx].astype(F32),
+        freq=state.freq[idx].astype(F32),
+        ext=state.ext[idx],
+        clock=state.clock.astype(F32),
+        gds_L=state.gds_L,
+        cost=jnp.ones_like(size),
+    )
+
+
+def _is_live(size: jnp.ndarray) -> jnp.ndarray:
+    return (size != SIZE_EMPTY) & (size != SIZE_HISTORY)
+
+
+def _hist_age(hist_ctr: jnp.ndarray, hist_id: jnp.ndarray) -> jnp.ndarray:
+    """Logical-FIFO age with wrap-around (paper's 48-bit counter -> u32)."""
+    return (hist_ctr - hist_id).astype(U32)
+
+
+def _choose_expert(weights: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Sample expert index ~ normalized weights (opportunistic eviction)."""
+    p = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-30)
+    cdf = jnp.cumsum(p, axis=-1)
+    return jnp.sum((cdf < u[..., None]).astype(I32), axis=-1)
+
+
+def _dedup_winner(x: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """bool[C]: True for the first occurrence of each distinct value of x
+    among valid lanes (sort-based duplicate resolution)."""
+    C = x.shape[0]
+    keyed = jnp.where(valid, x.astype(U32), jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(keyed)
+    sorted_x = keyed[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_x[1:] != sorted_x[:-1]])
+    winner = jnp.zeros((C,), bool).at[order].set(first_sorted)
+    return winner & valid
+
+
+def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
+           stats: OpStats, keys: jnp.ndarray, *,
+           is_write: jnp.ndarray | None = None,
+           obj_size: jnp.ndarray | None = None,
+           values: jnp.ndarray | None = None,
+           insert_on_miss: bool = True,
+           ) -> Tuple[CacheState, ClientState, OpStats, AccessResult]:
+    """One batched cache step: GET each key; read-through insert on miss.
+
+    Args:
+      keys: u32[C]; 0 marks a padded no-op lane.
+      is_write: bool[C] — SET ops (value update; costed as the Set path).
+      obj_size: u32[C] object size in 64B blocks (default 1).
+      values: u32[C, W] payload written on insert/set.
+    """
+    C = keys.shape[0]
+    E = cfg.n_experts
+    K = cfg.n_samples
+    A = cfg.assoc
+    names = cfg.experts
+    adaptive = E > 1
+
+    op = keys != 0
+    if is_write is None:
+        is_write = jnp.zeros((C,), bool)
+    if obj_size is None:
+        obj_size = jnp.ones((C,), U32)
+    if values is None:
+        values = jnp.zeros((C, cfg.value_words), U32)
+    obj_size = jnp.clip(obj_size, 1, SIZE_HISTORY - 1).astype(U32)
+
+    clock = state.clock
+    step_rng = jax.vmap(jax.random.fold_in)(clients.rng, jnp.full((C,), clock))
+
+    # ------------------------------------------------------------------
+    # 1. Bucket probe (1 RDMA_READ per op; with SFHT it carries metadata).
+    # ------------------------------------------------------------------
+    kh = hash_key(keys)
+    bucket = bucket_of(kh, cfg.n_buckets)
+    bslots = bucket[:, None] * A + jnp.arange(A)[None, :]          # [C, A]
+    b_key = state.key[bslots]
+    b_size = state.size[bslots]
+    b_hash = state.key_hash[bslots]
+    b_ptr = state.ptr[bslots]
+
+    live = _is_live(b_size)
+    match = live & (b_key == keys[:, None]) & op[:, None]
+    found = jnp.any(match, axis=1)
+    mslot = jnp.take_along_axis(
+        bslots, jnp.argmax(match, axis=1)[:, None], axis=1)[:, 0]
+    slot = jnp.where(found, mslot, -1)
+
+    # History probe: same bucket read (embedded entries, §4.3.1).
+    is_hist = b_size == SIZE_HISTORY
+    h_age = _hist_age(state.hist_ctr, b_ptr)
+    h_valid = is_hist & (h_age < U32(cfg.history_len))
+    h_match = h_valid & (b_hash == kh[:, None]) & op[:, None]
+    hist_found = jnp.any(h_match, axis=1) & ~found
+    hslot = jnp.take_along_axis(
+        bslots, jnp.argmax(h_match, axis=1)[:, None], axis=1)[:, 0]
+    regret = hist_found & adaptive & cfg.use_lwh
+
+    hit = found
+    miss = op & ~found
+
+    # ------------------------------------------------------------------
+    # 2. Metadata update on hits (stateless: one combined RDMA_WRITE with
+    #    SFHT; stateful freq goes through the FC cache).
+    # ------------------------------------------------------------------
+    old_last = state.last_ts[jnp.maximum(slot, 0)]
+    old_freq = state.freq[jnp.maximum(slot, 0)]
+    new_ext = prio.update_ext(state.ext[jnp.maximum(slot, 0)],
+                              old_last, old_freq, clock)
+    upd_idx = jnp.where(hit, slot, state.key.shape[0])
+    last_ts = state.last_ts.at[upd_idx].max(clock, mode="drop")
+    ext = state.ext.at[upd_idx].set(new_ext, mode="drop")
+    # SETs overwrite payloads (last-writer-wins within the batch).
+    val_idx = jnp.where(hit & is_write, slot, state.key.shape[0])
+    vals = state.values.at[val_idx].set(values, mode="drop")
+    sizes_upd = state.size.at[val_idx].set(obj_size, mode="drop")
+
+    clients, emit = fc_access(cfg, clients, jnp.where(hit, slot, -1), clock)
+    freq = fc_apply(state.freq, emit)
+
+    # ------------------------------------------------------------------
+    # 3. Regret collection + lazy expert-weight update (§4.3.2).
+    # ------------------------------------------------------------------
+    h_bmap = state.insert_ts[jnp.maximum(hslot, 0)]          # expert bitmap
+    h_age_sel = _hist_age(state.hist_ctr, state.ptr[jnp.maximum(hslot, 0)])
+    d = jnp.float32(cfg.discount)
+    pen = jnp.power(d, h_age_sel.astype(F32))                # d^t
+    bits = ((h_bmap[:, None] >> jnp.arange(E)[None, :]) & 1).astype(F32)
+    pen_e = jnp.where(regret[:, None], pen[:, None] * bits, 0.0)   # [C, E]
+
+    lam = jnp.float32(cfg.learning_rate)
+    local_w = clients.local_weights * jnp.exp(-lam * pen_e)
+    pacc = clients.penalty_acc + pen_e
+    pcnt = clients.penalty_cnt + regret.astype(I32)
+
+    if cfg.use_lwu:
+        syncing = pcnt >= cfg.sync_period
+    else:
+        syncing = regret  # eager: RPC on every regret
+    tot_pen = jnp.sum(jnp.where(syncing[:, None], pacc, 0.0), axis=0)
+    gw = state.weights * jnp.exp(-lam * tot_pen)
+    gw = jnp.maximum(gw, 1e-4)
+    gw = gw / jnp.sum(gw)
+    local_w = jnp.where(syncing[:, None], gw[None, :], local_w)
+    local_w = jnp.maximum(local_w, 1e-4)
+    pacc = jnp.where(syncing[:, None], 0.0, pacc)
+    pcnt = jnp.where(syncing, 0, pcnt)
+    n_sync = jnp.sum(syncing).astype(I32)
+
+    # ------------------------------------------------------------------
+    # 4. Inserts: read-through on miss. One insert per (key, bucket) per
+    #    step; duplicate keys / bucket collisions retry on a later access.
+    # ------------------------------------------------------------------
+    want_insert = miss & (insert_on_miss | is_write)
+    w_key = _dedup_winner(keys.astype(I32), want_insert)
+    winner = _dedup_winner(jnp.where(w_key, bucket, -1), w_key)
+    dropped = want_insert & ~winner
+
+    free = (b_size == SIZE_EMPTY) | (is_hist & ~h_valid)     # [C, A]
+    has_free = jnp.any(free, axis=1)
+    free_slot = jnp.take_along_axis(
+        bslots, jnp.argmax(free, axis=1)[:, None], axis=1)[:, 0]
+
+    # Bucket-local fallback eviction when the bucket is full: overwrite the
+    # oldest *valid* history entry first, else the lowest-priority live
+    # object under this client's sampled expert (counted separately).
+    u_exp = jax.vmap(lambda r: jax.random.uniform(jax.random.fold_in(r, 1)))(step_rng)
+    e_choice = _choose_expert(local_w, u_exp)                 # [C]
+    b_md = _md_view(state, bslots)
+    b_prio = prio.priorities(b_md, names)                     # [C, A, E]
+    b_prio_e = jnp.take_along_axis(
+        b_prio, e_choice[:, None, None], axis=2)[:, :, 0]     # [C, A]
+    b_prio_e = jnp.where(live, b_prio_e, jnp.inf)
+    fb_obj_slot = jnp.take_along_axis(
+        bslots, jnp.argmin(b_prio_e, axis=1)[:, None], axis=1)[:, 0]
+    hist_age_in_bucket = jnp.where(h_valid, h_age.astype(F32), -jnp.inf)
+    fb_hist_slot = jnp.take_along_axis(
+        bslots, jnp.argmax(hist_age_in_bucket, axis=1)[:, None], axis=1)[:, 0]
+    has_valid_hist = jnp.any(h_valid, axis=1)
+    has_live = jnp.any(live, axis=1)
+
+    fallback_hist = winner & ~has_free & has_valid_hist
+    fallback_obj = winner & ~has_free & ~has_valid_hist & has_live
+    plain = winner & has_free
+    ins_ok = plain | fallback_hist | fallback_obj
+    ins_slot = jnp.where(plain, free_slot,
+                         jnp.where(fallback_hist, fb_hist_slot, fb_obj_slot))
+    dropped = dropped | (winner & ~ins_ok)
+
+    # ------------------------------------------------------------------
+    # 5. Global sampled eviction (the paper's core): when over capacity,
+    #    each capacity-consuming insert samples K slots, evaluates all E
+    #    expert priorities, and evicts its chosen expert's candidate.
+    #    Batched catch-up: if the cache has drifted over capacity (duplicate
+    #    victims / unlucky samples on earlier steps — the batched analogue
+    #    of CAS-retry races), each evicting op claims up to K victims,
+    #    lowest priority first, until the deficit is covered.
+    # ------------------------------------------------------------------
+    consumes = plain | fallback_hist                          # +1 live object
+    n_consume = jnp.sum(consumes).astype(I32)
+    over = state.n_cached + n_consume - state.capacity
+    # Per-op victim quota in [0, K]: 1 while at capacity, more on drift.
+    quota = jnp.where(
+        over <= 0, 0,
+        jnp.clip((over + jnp.maximum(n_consume, 1) - 1)
+                 // jnp.maximum(n_consume, 1), 1, K))
+    must_evict = consumes & (over > 0)
+
+    # Contiguous-window sampling (§4.2.1): ONE read of W consecutive slots
+    # from a random offset; the first K live objects in the window are the
+    # sample. (This is also the TPU-friendly layout: one dense tile.)
+    W = cfg.sample_window or 4 * K
+    offs = jax.vmap(lambda r: jax.random.randint(
+        jax.random.fold_in(r, 2), (), 0, cfg.n_slots))(step_rng)
+    samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots   # [C, W]
+    s_md = _md_view(state, samp)
+    s_live_raw = _is_live(state.size[samp])
+    in_sample = s_live_raw & (jnp.cumsum(s_live_raw, axis=1) <= K)
+    s_live = in_sample
+    s_prio = prio.priorities(s_md, names)                     # [C, W, E]
+    s_prio = jnp.where(s_live[:, :, None], s_prio, jnp.inf)
+    cand_k = jnp.argmin(s_prio, axis=1)                       # [C, E]
+    cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)     # [C, E]
+
+    # Chosen expert's priority ranking over this op's samples.
+    prio_e = jnp.take_along_axis(
+        s_prio, e_choice[:, None, None], axis=2)[:, :, 0]     # [C, W]
+    rank_order = jnp.argsort(prio_e, axis=1)                  # low prio first
+    ranked_slot = jnp.take_along_axis(samp, rank_order, axis=1)
+    ranked_live = jnp.take_along_axis(s_live, rank_order, axis=1)
+    take = (jnp.arange(W)[None, :] < quota) & ranked_live & must_evict[:, None]
+    victims = jnp.where(take, ranked_slot, -1).reshape(-1)    # [C*W]
+    ev_winner = _dedup_winner(victims, victims >= 0)          # [C*W]
+    n_evict = jnp.sum(ev_winner).astype(I32)
+    evicting = must_evict & jnp.any(take, axis=1)
+
+    # Expert bitmap per victim: experts whose candidate matches, plus the
+    # evicting op's chosen expert (Fig. 9).
+    cand_rep = jnp.repeat(cand_slot, W, axis=0)               # [C*W, E]
+    e_rep = jnp.repeat(e_choice, W)                           # [C*W]
+    bmap = jnp.sum(((cand_rep == victims[:, None]).astype(U32)
+                    << jnp.arange(E, dtype=U32)[None, :]), axis=1)
+    bmap = bmap | (U32(1) << e_rep.astype(U32))
+
+    # GreedyDual inflation: L <- max(L, evicted victim's H) for GDS-family.
+    gds_L = state.gds_L
+    gds_ids = [i for i, n in enumerate(names) if prio.REGISTRY[n].gds_family]
+    if gds_ids:
+        v_md = _md_view(state, jnp.maximum(victims, 0))
+        v_prio = prio.priorities(v_md, names)                 # [C*K, E]
+        vp = jnp.stack([v_prio[:, i] for i in gds_ids], axis=1)
+        vp = jnp.where(ev_winner[:, None], vp, -jnp.inf)
+        gds_L = jnp.maximum(gds_L, jnp.max(vp, initial=-jnp.inf))
+
+    # History insertion (FAA on the global counter + slot tag + bmap write).
+    write_hist = ev_winner & adaptive & cfg.use_lwh
+    hist_rank = jnp.cumsum(write_hist.astype(I32)) - 1
+    hist_ids = (state.hist_ctr + hist_rank.astype(U32))
+    n_hist = jnp.sum(write_hist).astype(U32)
+
+    # ------------------------------------------------------------------
+    # 6. Apply: inserts, then evictions (so a victim that collides with a
+    #    bucket-fallback overwrite target nets out exactly in n_cached).
+    # ------------------------------------------------------------------
+    n_slots_total = cfg.n_slots
+    ii = jnp.where(ins_ok, ins_slot, n_slots_total)
+    key2 = state.key.at[ii].set(keys, mode="drop")
+    khash2 = state.key_hash.at[ii].set(kh, mode="drop")
+    sizes3 = sizes_upd.at[ii].set(obj_size, mode="drop")
+    ptr3 = state.ptr.at[ii].set(U32(0), mode="drop")
+    ins_ts3 = state.insert_ts.at[ii].set(clock, mode="drop")
+    last_ts = last_ts.at[ii].set(clock, mode="drop")
+    freq = freq.at[ii].set(U32(1), mode="drop")
+    ext = ext.at[ii].set(prio.fresh_ext(clock, (C,)), mode="drop")
+    vals = vals.at[ii].set(values, mode="drop")
+
+    ev_idx = jnp.where(ev_winner, victims, n_slots_total)
+    sizes3 = sizes3.at[ev_idx].set(
+        jnp.where(write_hist, U32(SIZE_HISTORY), U32(SIZE_EMPTY)), mode="drop")
+    ptr3 = ptr3.at[ev_idx].set(
+        jnp.where(write_hist, hist_ids, U32(0)), mode="drop")
+    ins_ts3 = ins_ts3.at[ev_idx].set(bmap, mode="drop")
+
+    n_cached = (state.n_cached + jnp.sum(plain).astype(I32)
+                + jnp.sum(fallback_hist).astype(I32) - n_evict)
+
+    result_vals = state.values[jnp.maximum(slot, 0)]
+
+    new_state = CacheState(
+        key=key2, key_hash=khash2, size=sizes3, ptr=ptr3,
+        insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
+        n_cached=n_cached, hist_ctr=state.hist_ctr + n_hist,
+        clock=clock + U32(1), weights=gw, gds_L=gds_L,
+        capacity=state.capacity)
+    new_clients = clients._replace(
+        local_weights=local_w, penalty_acc=pacc, penalty_cnt=pcnt)
+
+    # ------------------------------------------------------------------
+    # 7. Remote-op accounting (cost model; see DESIGN.md §2).
+    # ------------------------------------------------------------------
+    n_op = jnp.sum(op)
+    n_hit = jnp.sum(hit)
+    n_set = jnp.sum(op & is_write)
+    n_ins = jnp.sum(ins_ok)
+    sf = cfg.use_sfht
+    reads = (n_op                         # bucket probe (metadata inline iff SFHT)
+             + (0 if sf else n_hit)       # separate metadata fetch
+             + n_hit                      # object payload read
+             # without the embedded history, every miss probes a separate
+             # history hash index (an extra RTT on the regret path)
+             + (0 if (cfg.use_lwh or not adaptive) else jnp.sum(miss))
+             + jnp.sum(evicting) * (1 if sf else K))  # sampling read(s)
+    # Without the lightweight history, evictions maintain a separate FIFO
+    # queue + hash index (entry write, index insert, queue-tail FAA).
+    sep_hist = 0 if (cfg.use_lwh or not adaptive) else n_evict
+    writes = (n_hit * (1 if sf else 2)    # stateless metadata update(s)
+              + n_ins * 2                 # object write + slot metadata init
+              + jnp.sum(write_hist)       # embedded expert-bitmap write
+              + sep_hist * 2)
+    cas = n_ins + jnp.sum(ev_winner)      # slot atomic installs/tags
+    faa = emit.n_faa + n_hist + sep_hist
+    stats = stats_add(
+        stats, rdma_read=reads, rdma_write=writes, rdma_cas=cas,
+        rdma_faa=faa, rpc=n_sync, gets=n_op - n_set, sets=n_set,
+        hits=n_hit, misses=jnp.sum(miss), regrets=jnp.sum(regret),
+        evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
+        insert_drops=jnp.sum(dropped), fc_hits=emit.n_hit,
+        fc_flushes=emit.n_faa, weight_syncs=n_sync)
+
+    return new_state, new_clients, stats, AccessResult(
+        hit=hit, value=result_vals, evicted=evicting, regret=regret)
+
+
+# ----------------------------------------------------------------------
+# Trace driver: lax.scan over [T, C] request streams.
+# ----------------------------------------------------------------------
+
+class TraceResult(NamedTuple):
+    state: CacheState
+    clients: ClientState
+    stats: OpStats
+    hits: jnp.ndarray      # i32[T] per-step hit counts
+    ops: jnp.ndarray       # i32[T] per-step op counts
+    weights: jnp.ndarray   # f32[T, E] global weight trajectory
+
+
+def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
+              keys: jnp.ndarray, is_write: jnp.ndarray | None = None,
+              obj_size: jnp.ndarray | None = None) -> TraceResult:
+    """Run a [T, C] trace (T steps of C concurrent client ops)."""
+    T, C = keys.shape
+    if is_write is None:
+        is_write = jnp.zeros((T, C), bool)
+    if obj_size is None:
+        obj_size = jnp.ones((T, C), U32)
+    stats = init_stats()
+
+    def step(carry, xs):
+        st, cl, sa = carry
+        k, w, sz = xs
+        st, cl, sa, res = access(cfg, st, cl, sa, k, is_write=w, obj_size=sz)
+        out = (jnp.sum(res.hit).astype(I32), jnp.sum(k != 0).astype(I32),
+               st.weights)
+        return (st, cl, sa), out
+
+    (state, clients, stats), (hits, ops, weights) = jax.lax.scan(
+        step, (state, clients, stats), (keys, is_write, obj_size))
+    return TraceResult(state, clients, stats, hits, ops, weights)
+
+
+def make_cache(cfg: CacheConfig, n_clients: int, seed: int = 0):
+    return init_cache(cfg), init_clients(cfg, n_clients, seed), init_stats()

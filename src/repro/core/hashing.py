@@ -1,0 +1,41 @@
+"""Integer hashing for the sample-friendly hash table.
+
+The paper indexes objects with RACE-style hashing: a bucket index derived
+from the key hash plus a 1-byte fingerprint to short-circuit comparisons,
+and stores a full hash of the object ID in the slot metadata (the ``hash``
+field) used by the lightweight eviction history for regret matching.
+
+We use a splitmix32-style finalizer — cheap, statistically strong, and
+vectorizes to pure uint32 ALU ops on the VPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """A 32-bit finalizer (splitmix64's mixer truncated to 32-bit lanes)."""
+    x = x.astype(U32)
+    x = (x + U32(0x9E3779B9)).astype(U32)
+    x = (x ^ (x >> 16)) * U32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * U32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x.astype(U32)
+
+
+def hash_key(key: jnp.ndarray) -> jnp.ndarray:
+    """Full 32-bit hash stored in the slot ``hash`` field (history matching)."""
+    return splitmix32(key)
+
+
+def bucket_of(key_hash: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Bucket index. n_buckets need not be a power of two."""
+    return (key_hash % U32(n_buckets)).astype(jnp.int32)
+
+
+def fingerprint(key_hash: jnp.ndarray) -> jnp.ndarray:
+    """1-byte fingerprint (top byte of the hash), as in RACE hashing."""
+    return ((key_hash >> 24) & U32(0xFF)).astype(U32)

@@ -1,0 +1,207 @@
+"""Core pytree state for the Ditto cache.
+
+Layout mirrors the paper's sample-friendly hash table (§4.2.1): every slot
+carries an atomic field (key/fingerprint/size/pointer) plus inline access
+metadata so that sampling K objects is one contiguous random read and all
+stateless metadata updates coalesce into one write.
+
+All state is a flat struct-of-arrays over ``n_slots = n_buckets * assoc``
+so that the whole table shards cleanly over the memory-pool mesh axis and
+every cache operation is a batched gather/scatter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Slot states, stored in the `size` field (paper: 0 = empty, 0xFF = history
+# entry, anything else = live object size in 64B blocks).
+SIZE_EMPTY = 0
+SIZE_HISTORY = 0xFF
+
+# Width of the per-slot extension metadata (paper §4.4 "metadata extensions"
+# — stored with the object; here an inline f32 block). Used by LRU-K ring
+# buffers, LRFU CRF values and LIRS inter-reference recency.
+EXT_WIDTH = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Static configuration of one Ditto cache instance."""
+
+    n_buckets: int = 4096
+    assoc: int = 8                      # slots per bucket
+    capacity: int = 16384               # max live objects (memory budget)
+    hist_len: int = 0                   # 0 -> defaults to capacity (LeCaR)
+    n_samples: int = 5                  # K, Redis default
+    sample_window: int = 0              # contiguous slots read per eviction
+                                        # (0 -> 4*K; one RDMA_READ, §4.2.1)
+    experts: tuple = ("lru", "lfu")     # adaptive expert policies
+    learning_rate: float = 0.1          # lambda (grid-searched in the paper)
+    base_discount: float = 0.005        # d = base_discount ** (1/capacity)
+    sync_period: int = 100              # lazy weight update batch size
+    fc_size: int = 64                   # frequency-counter cache entries
+    fc_threshold: int = 10              # flush threshold t
+    value_words: int = 2                # payload u32 words per object
+    # Ablation / cost-model toggles (Fig. 24): these change the *issued
+    # remote-op accounting* and, for the FC cache, real behaviour.
+    use_sfht: bool = True               # sample-friendly hash table
+    use_lwh: bool = True                # lightweight (embedded) history
+    use_lwu: bool = True                # lazy weight update
+    use_fc: bool = True                 # frequency-counter cache
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_buckets * self.assoc
+
+    @property
+    def history_len(self) -> int:
+        return self.hist_len if self.hist_len > 0 else self.capacity
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.experts)
+
+    @property
+    def discount(self) -> float:
+        # d = 0.005 ** (1/N): penalty d^t decays to 0.005 at history age N.
+        return float(self.base_discount) ** (1.0 / float(self.capacity))
+
+    def __post_init__(self):
+        if self.n_slots < 2 * self.capacity:
+            raise ValueError(
+                f"n_slots={self.n_slots} must be >= 2*capacity={2*self.capacity}"
+                " (live objects + embedded history entries)")
+        if self.n_experts > 32:
+            raise ValueError("expert bitmap is 32 bits wide")
+
+
+class CacheState(NamedTuple):
+    """Sharded memory-pool state (lives on the `model` mesh axis)."""
+
+    # --- per-slot atomic field (paper Fig. 7) ---
+    key: jnp.ndarray        # u32[n_slots]   object ID (0 reserved)
+    key_hash: jnp.ndarray   # u32[n_slots]   `hash` field, kept for history
+    size: jnp.ndarray       # u32[n_slots]   SIZE_EMPTY / blocks / SIZE_HISTORY
+    ptr: jnp.ndarray        # u32[n_slots]   history ID when size==SIZE_HISTORY
+    # --- per-slot default access metadata (Table 1) ---
+    insert_ts: jnp.ndarray  # u32[n_slots]   doubles as expert_bmap in history
+    last_ts: jnp.ndarray    # u32[n_slots]
+    freq: jnp.ndarray       # u32[n_slots]
+    ext: jnp.ndarray        # f32[n_slots, EXT_WIDTH] extension metadata
+    # --- object payloads (object memory; colocated for the simulator) ---
+    values: jnp.ndarray     # u32[n_slots, value_words]
+    # --- globals (held by the memory-pool controller in the paper) ---
+    n_cached: jnp.ndarray   # i32[]  live object count
+    hist_ctr: jnp.ndarray   # u32[]  global history counter (logical FIFO tail)
+    clock: jnp.ndarray      # u32[]  logical timestamp, +1 per batched step
+    weights: jnp.ndarray    # f32[E] global expert weights
+    gds_L: jnp.ndarray      # f32[]  GreedyDual inflation value
+    capacity: jnp.ndarray   # i32[]  live-object budget — a *runtime* scalar,
+                            # so growing/shrinking the memory pool is one
+                            # register write (zero data migration, §2.2)
+
+
+class ClientState(NamedTuple):
+    """Per-client state (lives on the `data` / compute-pool mesh axis).
+
+    Holds the frequency-counter cache (§4.2.2) and the locally-buffered
+    expert-weight penalties of the lazy weight update scheme (§4.3.2).
+    """
+
+    fc_slot: jnp.ndarray      # i32[F]  slot index, -1 = empty
+    fc_delta: jnp.ndarray     # u32[F]  buffered freq delta
+    fc_ins: jnp.ndarray       # u32[F]  entry insert time
+    local_weights: jnp.ndarray  # f32[E] weights used for eviction decisions
+    penalty_acc: jnp.ndarray  # f32[E]  sum of pending d^t penalties
+    penalty_cnt: jnp.ndarray  # i32[]   buffered regret count
+    rng: jnp.ndarray          # PRNG key
+
+
+class OpStats(NamedTuple):
+    """Issued remote-op accounting (drives the cost-model benchmarks).
+
+    On real DM these are RDMA verbs; on the TPU mapping they are the
+    gather/scatter/collective messages a sharded execution would issue.
+    """
+
+    rdma_read: jnp.ndarray
+    rdma_write: jnp.ndarray
+    rdma_cas: jnp.ndarray
+    rdma_faa: jnp.ndarray
+    rpc: jnp.ndarray
+    gets: jnp.ndarray
+    sets: jnp.ndarray
+    hits: jnp.ndarray
+    misses: jnp.ndarray
+    regrets: jnp.ndarray
+    evictions: jnp.ndarray
+    bucket_evictions: jnp.ndarray   # in-bucket fallback evictions
+    insert_drops: jnp.ndarray       # inserts dropped on full buckets
+    fc_hits: jnp.ndarray
+    fc_flushes: jnp.ndarray
+    weight_syncs: jnp.ndarray
+
+
+class MDView(NamedTuple):
+    """A gathered view of slot metadata handed to priority functions."""
+
+    size: jnp.ndarray       # f32 — object size (64B blocks)
+    insert_ts: jnp.ndarray  # f32
+    last_ts: jnp.ndarray    # f32
+    freq: jnp.ndarray       # f32
+    ext: jnp.ndarray        # f32[..., EXT_WIDTH]
+    clock: jnp.ndarray      # f32 scalar (broadcast)
+    gds_L: jnp.ndarray      # f32 scalar (broadcast)
+    cost: jnp.ndarray       # f32 — local info, estimated from size (§4.2.1)
+
+
+def init_cache(cfg: CacheConfig) -> CacheState:
+    n = cfg.n_slots
+    return CacheState(
+        key=jnp.zeros((n,), jnp.uint32),
+        key_hash=jnp.zeros((n,), jnp.uint32),
+        size=jnp.zeros((n,), jnp.uint32),
+        ptr=jnp.zeros((n,), jnp.uint32),
+        insert_ts=jnp.zeros((n,), jnp.uint32),
+        last_ts=jnp.zeros((n,), jnp.uint32),
+        freq=jnp.zeros((n,), jnp.uint32),
+        ext=jnp.zeros((n, EXT_WIDTH), jnp.float32),
+        values=jnp.zeros((n, cfg.value_words), jnp.uint32),
+        n_cached=jnp.zeros((), jnp.int32),
+        hist_ctr=jnp.zeros((), jnp.uint32),
+        clock=jnp.ones((), jnp.uint32),
+        weights=jnp.full((cfg.n_experts,), 1.0 / cfg.n_experts, jnp.float32),
+        gds_L=jnp.zeros((), jnp.float32),
+        capacity=jnp.asarray(cfg.capacity, jnp.int32),
+    )
+
+
+def init_clients(cfg: CacheConfig, n_clients: int, seed: int = 0) -> ClientState:
+    f = cfg.fc_size
+    e = cfg.n_experts
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    return ClientState(
+        fc_slot=jnp.full((n_clients, f), -1, jnp.int32),
+        fc_delta=jnp.zeros((n_clients, f), jnp.uint32),
+        fc_ins=jnp.zeros((n_clients, f), jnp.uint32),
+        local_weights=jnp.full((n_clients, e), 1.0 / e, jnp.float32),
+        penalty_acc=jnp.zeros((n_clients, e), jnp.float32),
+        penalty_cnt=jnp.zeros((n_clients,), jnp.int32),
+        rng=keys,
+    )
+
+
+def init_stats() -> OpStats:
+    z = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
+    return OpStats(*[z for _ in OpStats._fields])
+
+
+def stats_add(a: OpStats, **kw) -> OpStats:
+    upd = {k: (getattr(a, k) + jnp.asarray(v).astype(getattr(a, k).dtype))
+           for k, v in kw.items()}
+    return a._replace(**upd)

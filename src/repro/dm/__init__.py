@@ -1,0 +1,3 @@
+from repro.dm.sharded_cache import (DMCache, dm_make, dm_access, dm_set_capacity)
+
+__all__ = ["DMCache", "dm_make", "dm_access", "dm_set_capacity"]

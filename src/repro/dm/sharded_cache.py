@@ -1,0 +1,200 @@
+"""Disaggregated-memory runtime: the Ditto cache sharded over a device mesh.
+
+Mapping (DESIGN.md §2): every device hosts (a) one shard of the memory pool
+— a contiguous bucket range of the sample-friendly table — and (b) a group
+of client lanes. Clients hash keys to the owning pool shard and route the
+batch with an `all_to_all` (the RDMA network analogue); each shard then
+executes the ordinary client-centric `access()` against its local bucket
+slice; results route back by reversing the exchange.
+
+Decoupling survives the co-location: pool capacity is a per-shard runtime
+scalar (grow/shrink without touching data) and the client-lane count per
+device is a batch width (compute elasticity without touching the pool).
+
+The lazy weight update (§4.3.2) becomes a periodic `psum` of the batched
+penalty aggregates across all shards — the "RPC to the MN controller".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.cache import access
+from repro.core.hashing import bucket_of, hash_key
+from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
+                              init_cache, init_clients, init_stats)
+
+AXIS = "pool"
+
+
+class DMCache(NamedTuple):
+    state: CacheState      # slot arrays sharded over AXIS (bucket ranges)
+    clients: ClientState   # client lanes sharded over AXIS
+    stats: OpStats         # per-shard counters (psum at read time)
+
+
+def _mesh(n: int) -> Mesh:
+    devs = jax.devices()[:n]
+    return jax.make_mesh((len(devs),), (AXIS,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
+            seed: int = 0) -> Tuple[Mesh, "DMCache", CacheConfig]:
+    """Build a sharded cache. cfg describes the GLOBAL pool; each shard
+    runs a local core cache over 1/n_shards of the buckets/capacity."""
+    assert cfg.n_buckets % n_shards == 0
+    assert cfg.capacity % n_shards == 0
+    local = dataclasses.replace(
+        cfg, n_buckets=cfg.n_buckets // n_shards,
+        capacity=cfg.capacity // n_shards,
+        hist_len=cfg.history_len // n_shards)
+    mesh = _mesh(n_shards)
+    state = init_cache(cfg)  # global arrays; shard by slot ranges
+    # Per-shard scalars (n_cached, hist_ctr, ...) must exist per shard:
+    def rep(x):
+        return jnp.broadcast_to(x[None], (n_shards,) + x.shape)
+    state = state._replace(
+        n_cached=rep(state.n_cached), hist_ctr=rep(state.hist_ctr),
+        clock=rep(state.clock), weights=rep(state.weights),
+        gds_L=rep(state.gds_L),
+        capacity=rep(jnp.asarray(local.capacity, jnp.int32)))
+    clients = init_clients(cfg, n_shards * lanes_per_shard, seed)
+
+    sh_slot = NamedSharding(mesh, P(AXIS))
+    sh_scalar = NamedSharding(mesh, P(AXIS))
+
+    def put_state(path, x):
+        return jax.device_put(x, sh_slot)
+    state = jax.tree.map(lambda x: jax.device_put(x, sh_slot), state)
+    clients = jax.tree.map(lambda x: jax.device_put(x, sh_slot), clients)
+    stats = jax.tree.map(lambda x: jnp.zeros((n_shards,), x.dtype),
+                         init_stats())
+    stats = jax.tree.map(lambda x: jax.device_put(x, sh_scalar), stats)
+    return mesh, DMCache(state, clients, stats), local
+
+
+def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
+              keys: jnp.ndarray, is_write=None) -> Tuple[DMCache, jnp.ndarray]:
+    """One DM step: keys [n_shards * lanes] (0 = no-op). Returns hits."""
+    n_shards = mesh.shape[AXIS]
+    lanes = keys.shape[0] // n_shards
+    # Route capacity per (src, dst) pair: 2x the fair share, padded.
+    q = max(1, int(2 * lanes / n_shards) + 1)
+    global_buckets = local_cfg.n_buckets * n_shards
+
+    if is_write is None:
+        is_write = jnp.zeros_like(keys, dtype=bool)
+
+    def step(state, clients, stats, keys_l, write_l):
+        # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
+        state = state._replace(
+            n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
+            clock=state.clock[0], weights=state.weights[0],
+            gds_L=state.gds_L[0], capacity=state.capacity[0])
+        stats = jax.tree.map(lambda x: x[0], stats)
+        # --- client side: decide owners, pack per-destination slots -----
+        kh = hash_key(keys_l)
+        owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
+        # rank within destination
+        order = jnp.argsort(owner * (lanes + 1)
+                            + jnp.arange(lanes, dtype=owner.dtype))
+        sorted_owner = owner[order]
+        first = jnp.concatenate([jnp.ones((1,), bool),
+                                 sorted_owner[1:] != sorted_owner[:-1]])
+        seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(lanes), 0))
+        rank = jnp.arange(lanes) - seg_start
+        send = jnp.zeros((n_shards, q), jnp.uint32)
+        wsend = jnp.zeros((n_shards, q), bool)
+        src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
+        ok = rank < q
+        dst = jnp.where(ok, sorted_owner, n_shards)
+        rr = jnp.where(ok, rank, 0)
+        send = send.at[dst, rr].set(keys_l[order], mode="drop")
+        wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
+        src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
+                                            mode="drop")
+        # --- the network: exchange request blocks (RDMA analogue) -------
+        recv = jax.lax.all_to_all(send, AXIS, 0, 0, tiled=True)      # [S*q]
+        wrecv = jax.lax.all_to_all(wsend, AXIS, 0, 0, tiled=True)
+        recv = recv.reshape(n_shards * q)
+        wrecv = wrecv.reshape(n_shards * q)
+
+        # --- memory-pool side: ordinary client-centric access ----------
+        state, clients2, stats, res = access(
+            local_cfg, state, _pad_clients(clients, n_shards * q), stats,
+            recv, is_write=wrecv)
+
+        # --- route replies back + merge hit mask ------------------------
+        hit_back = jax.lax.all_to_all(
+            res.hit.reshape(n_shards, q), AXIS, 0, 0, tiled=True)
+        hit_back = hit_back.reshape(n_shards, q)
+        hits = jnp.zeros((lanes,), bool)
+        valid = src_slot >= 0
+        hits = hits.at[jnp.where(valid, src_slot, 0).reshape(-1)].max(
+            jnp.where(valid, hit_back, False).reshape(-1))
+
+        # --- lazy weight update: periodic psum of penalty aggregates ----
+        clients = _unpad_clients(clients, clients2, lanes)
+        tot = jnp.sum(clients.penalty_cnt)
+        # All shards agree on the sync decision (consistent global weights).
+        do_sync = jax.lax.pmax((tot >= local_cfg.sync_period).astype(
+            jnp.int32), AXIS) > 0
+        pen = jnp.sum(clients.penalty_acc, axis=0)
+        pen_global = jax.lax.psum(jnp.where(do_sync, pen, 0.0), AXIS)
+        lam = jnp.float32(local_cfg.learning_rate)
+        w = state.weights * jnp.exp(-lam * pen_global)
+        w = jnp.maximum(w / jnp.sum(w), 1e-4)
+        state = state._replace(weights=jnp.where(do_sync, w, state.weights))
+        clients = clients._replace(
+            penalty_acc=jnp.where(do_sync, 0.0, clients.penalty_acc),
+            penalty_cnt=jnp.where(do_sync, 0, clients.penalty_cnt),
+            local_weights=jnp.where(
+                do_sync, jnp.broadcast_to(w, clients.local_weights.shape),
+                clients.local_weights))
+        # Re-expand shard scalars for the sharded output layout.
+        state = state._replace(
+            n_cached=state.n_cached[None], hist_ctr=state.hist_ctr[None],
+            clock=state.clock[None], weights=state.weights[None],
+            gds_L=state.gds_L[None], capacity=state.capacity[None])
+        stats = jax.tree.map(lambda x: x[None], stats)
+        return state, clients, stats, hits
+
+    def _pad_clients(clients, n):
+        """Present the shard's lanes as n request lanes (q-padded)."""
+        def pad(x):
+            reps = -(-n // x.shape[0])
+            return jnp.concatenate([x] * reps, axis=0)[:n]
+        return jax.tree.map(pad, clients)
+
+    def _unpad_clients(orig, padded, lanes):
+        def cut(o, p):
+            return p[:lanes] if p.shape[0] >= lanes else o
+        return jax.tree.map(cut, orig, padded)
+
+    spec_state = jax.tree.map(lambda _: P(AXIS), dm.state)
+    spec_clients = jax.tree.map(lambda _: P(AXIS), dm.clients)
+    spec_stats = jax.tree.map(lambda _: P(AXIS), dm.stats)
+
+    fn = shard_map(
+        step, mesh=mesh,
+        in_specs=(spec_state, spec_clients, spec_stats, P(AXIS), P(AXIS)),
+        out_specs=(spec_state, spec_clients, spec_stats, P(AXIS)),
+        check_rep=False)
+    state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
+                                     keys, is_write)
+    return DMCache(state, clients, stats), hits
+
+
+def dm_set_capacity(dm: DMCache, new_global_capacity: int,
+                    n_shards: int) -> DMCache:
+    """Elastic memory resize: one scalar write per shard, no migration."""
+    cap = jnp.full((n_shards,), new_global_capacity // n_shards, jnp.int32)
+    return dm._replace(state=dm.state._replace(capacity=cap))

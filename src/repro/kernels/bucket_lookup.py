@@ -1,0 +1,66 @@
+"""Hash-table bucket-probe Pallas kernel.
+
+The client-side Get path: hash the key (splitmix32 on the VPU, pure u32
+ALU), locate the bucket, compare the ``assoc`` slots, return (found, slot).
+On DM this is the 1-RDMA_READ bucket fetch; here the bucket rows stream
+from the VMEM-resident atomic fields.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_u32(x):
+    x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return (x ^ (x >> 16)).astype(jnp.uint32)
+
+
+def _kernel(tkey_ref, tsize_ref, keys_ref, found_ref, slot_ref, *,
+            assoc, n_buckets, block_b):
+    keys = keys_ref[...]
+    kh = _hash_u32(keys)
+    bucket = (kh % jnp.uint32(n_buckets)).astype(jnp.int32)
+    base = bucket * assoc
+    tk = jnp.stack([jax.lax.dynamic_slice(tkey_ref[...], (base[i],), (assoc,))
+                    for i in range(block_b)])               # [block_b, A]
+    ts = jnp.stack([jax.lax.dynamic_slice(tsize_ref[...], (base[i],), (assoc,))
+                    for i in range(block_b)])
+    live = (ts > 0) & (ts < 255)
+    match = live & (tk == keys[:, None])
+    found = jnp.any(match, axis=1)
+    arg = jnp.argmax(match, axis=1)
+    slot = base + arg.astype(jnp.int32)
+    found_ref[...] = found
+    slot_ref[...] = jnp.where(found, slot, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("assoc", "block_b", "interpret"))
+def bucket_lookup(table_key, table_size, keys, *, assoc: int = 8,
+                  block_b: int = 8, interpret: bool = True):
+    """table_key: u32[n_slots]; table_size: u32[n_slots]; keys: u32[B].
+    Returns (found bool[B], slot i32[B])."""
+    B = keys.shape[0]
+    assert B % block_b == 0
+    n_buckets = table_key.shape[0] // assoc
+    grid = (B // block_b,)
+    table_spec = pl.BlockSpec(table_key.shape, lambda i: (0,))
+    fn = functools.partial(_kernel, assoc=assoc, n_buckets=n_buckets,
+                           block_b=block_b)
+    return pl.pallas_call(
+        fn,
+        grid=grid,
+        in_specs=[table_spec, table_spec,
+                  pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((block_b,), lambda i: (i,)),
+                   pl.BlockSpec((block_b,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((B,), jnp.bool_),
+                   jax.ShapeDtypeStruct((B,), jnp.int32)),
+        interpret=interpret,
+    )(table_key, table_size.astype(jnp.uint32), keys)

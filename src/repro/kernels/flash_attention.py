@@ -1,0 +1,103 @@
+"""Causal flash-attention forward Pallas TPU kernel.
+
+The roofline analysis (EXPERIMENTS.md §Roofline/§Perf) shows the train and
+prefill memory terms are dominated by materialized [T, S] attention score
+I/O — traffic a fused kernel never sends to HBM. This kernel keeps the
+online-softmax state (m, l, acc) in VMEM scratch across the KV-block grid
+dimension and writes only the [blk_q, D] output tile per query block.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost so scratch carries
+across it. Causal masking skips whole KV blocks above the diagonal.
+Validated in interpret mode against the pure-jnp oracle (full_attention);
+on TPU the same kernel compiles with MXU-aligned [blk, D] tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            blk_q, blk_k, scale, n_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: KV block strictly above the diagonal contributes nothing.
+    @pl.when(ki * blk_k <= qi * blk_q + blk_q - 1)
+    def compute():
+        q = q_ref[0]                              # [blk_q, D]
+        k = k_ref[0]                              # [blk_k, D]
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_idx = qi * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 0)
+        k_idx = ki * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1)
+        s = jnp.where(k_idx <= q_idx, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jnp.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True):
+    """Causal attention. q/k/v: [B, T, H, D] (GQA pre-expanded).
+
+    Returns [B, T, H, D]. Forward-only (serving/prefill); training keeps
+    the differentiable chunked-attention path."""
+    b, t, h, d = q.shape
+    blk_q = min(blk_q, t)
+    blk_k = min(blk_k, t)
+    assert t % blk_q == 0 and t % blk_k == 0, (t, blk_q, blk_k)
+    scale = d ** -0.5
+    # [B, T, H, D] -> [B*H, T, D]
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    n_q, n_k = t // blk_q, t // blk_k
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k, scale=scale,
+                          n_kv_blocks=n_k),
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),      # running max
+            pltpu.VMEM((blk_q,), jnp.float32),      # running sum
+            pltpu.VMEM((blk_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

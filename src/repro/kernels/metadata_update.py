@@ -1,0 +1,63 @@
+"""Combining metadata-update Pallas kernel (the remote-FAA + stateless
+write, §4.2.1/4.2.2).
+
+Applies a batch of FC-cache flushes to the metadata table:
+  freq[slot]   += delta        (stateful, the RDMA_FAA analogue)
+  last_ts[slot] = max(., clock) (stateless combined write)
+
+Formulated as a one-hot matmul per table tile: the [B, T_blk] match matrix
+contracts against the deltas on the MXU, turning a scatter into dense
+compute — the TPU-idiomatic shape of a combining scatter (duplicate slots
+in the batch combine for free).
+
+Grid: one program per table tile; updates (small) are fully VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(slots_ref, delta_ref, clock_ref, freq_ref, last_ref,
+            freq_out_ref, last_out_ref, *, block_c):
+    i = pl.program_id(0)
+    lo = i * block_c
+    slots = slots_ref[...]
+    local = slots - lo                                       # [B]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (slots.shape[0], block_c), 1)
+    match = (local[:, None] == pos) & (slots >= 0)[:, None]  # [B, T_blk]
+    add = jnp.dot(delta_ref[...].astype(jnp.float32),
+                  match.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)        # [T_blk]
+    touched = jnp.any(match, axis=0)
+    freq_out_ref[...] = freq_ref[...] + add.astype(freq_ref.dtype)
+    last_out_ref[...] = jnp.where(
+        touched, jnp.maximum(last_ref[...], clock_ref[0]), last_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def metadata_update(freq, last_ts, slots, deltas, clock, *,
+                    block_c: int = 512, interpret: bool = True):
+    """freq/last_ts: f32[C]; slots: i32[B] (-1 = no-op); deltas: f32[B].
+    Returns updated (freq, last_ts)."""
+    c = freq.shape[0]
+    assert c % block_c == 0, (c, block_c)
+    grid = (c // block_c,)
+    upd_spec = pl.BlockSpec(slots.shape, lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[upd_spec, upd_spec, pl.BlockSpec((1,), lambda i: (0,)),
+                  pl.BlockSpec((block_c,), lambda i: (i,)),
+                  pl.BlockSpec((block_c,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((block_c,), lambda i: (i,)),
+                   pl.BlockSpec((block_c,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((c,), freq.dtype),
+                   jax.ShapeDtypeStruct((c,), last_ts.dtype)),
+        interpret=interpret,
+    )(slots, deltas, jnp.asarray(clock, jnp.float32).reshape(1),
+      freq, last_ts)

@@ -1,0 +1,57 @@
+"""Public jitted wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the kernel body executes in Python
+per the brief) and False on real TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_lookup import bucket_lookup
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.metadata_update import metadata_update
+from repro.kernels.sampled_eviction import KERNEL_EXPERTS, sampled_eviction
+
+__all__ = ["sampled_eviction_op", "bucket_lookup_op", "metadata_update_op",
+           "flash_attention_op", "KERNEL_EXPERTS"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
+                        clock, *, window=20, k=5, experts=("lru", "lfu"),
+                        block_b=8):
+    """Fused window-gather -> priorities -> candidates -> victim.
+
+    Table arrays must be padded by `window` at the tail (empty slots)."""
+    return sampled_eviction(
+        size.astype(jnp.float32), insert_ts.astype(jnp.float32),
+        last_ts.astype(jnp.float32), freq.astype(jnp.float32),
+        offsets.astype(jnp.int32), e_choice.astype(jnp.int32), clock,
+        window=window, k=k, experts=tuple(experts), block_b=block_b,
+        interpret=_interpret_default())
+
+
+def bucket_lookup_op(table_key, table_size, keys, *, assoc=8, block_b=8):
+    return bucket_lookup(table_key.astype(jnp.uint32),
+                         table_size.astype(jnp.uint32),
+                         keys.astype(jnp.uint32), assoc=assoc,
+                         block_b=block_b, interpret=_interpret_default())
+
+
+def metadata_update_op(freq, last_ts, slots, deltas, clock, *, block_c=512):
+    return metadata_update(freq.astype(jnp.float32),
+                           last_ts.astype(jnp.float32),
+                           slots.astype(jnp.int32),
+                           deltas.astype(jnp.float32), clock,
+                           block_c=block_c, interpret=_interpret_default())
+
+
+def flash_attention_op(q, k, v, *, blk_q=128, blk_k=128):
+    """Causal flash attention (forward): see kernels/flash_attention.py."""
+    return flash_attention(q, k, v, blk_q=blk_q, blk_k=blk_k,
+                           interpret=_interpret_default())

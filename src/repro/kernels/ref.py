@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics contracts: every kernel in this package must
+``allclose`` against these on randomized shape/dtype sweeps (run in
+interpret mode on CPU, compiled on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bucket_of, hash_key
+
+NEG_INF = -2.0e38
+
+
+def priorities_ref(size, insert_ts, last_ts, freq, clock, experts):
+    """Stacked eviction priorities [..., E] for the kernel's expert set.
+
+    Experts here are the kernel-supported subset: lru/lfu/fifo/size/
+    hyperbolic — pure arithmetic over the four default metadata columns."""
+    out = []
+    for e in experts:
+        if e == "lru":
+            out.append(last_ts)
+        elif e == "lfu":
+            out.append(freq)
+        elif e == "fifo":
+            out.append(insert_ts)
+        elif e == "size":
+            out.append(-size)
+        elif e == "hyperbolic":
+            out.append(freq / jnp.maximum(clock - insert_ts, 1.0))
+        else:
+            raise ValueError(e)
+    return jnp.stack(out, axis=-1)
+
+
+def sampled_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
+                         clock, *, window: int, k: int, experts):
+    """Reference for the fused sampled-eviction kernel.
+
+    Args:
+      size/insert_ts/last_ts/freq: f32[C + window] (caller pads the tail
+        so windows never wrap).
+      offsets: i32[B] window starts in [0, C).
+      e_choice: i32[B] expert chosen per request (from local weights).
+    Returns:
+      victim: i32[B] slot index (-1 if no live object sampled)
+      cand:   i32[B, E] per-expert candidate slot (-1 if none live)
+    """
+    B = offsets.shape[0]
+    idx = offsets[:, None] + jnp.arange(window)[None, :]          # [B, W]
+    s = size[idx]
+    live = (s > 0) & (s < 255)
+    in_sample = live & (jnp.cumsum(live, axis=1) <= k)
+    pr = priorities_ref(s, insert_ts[idx], last_ts[idx], freq[idx],
+                        clock, experts)                           # [B, W, E]
+    pr = jnp.where(in_sample[..., None], pr, jnp.inf)
+    cand_w = jnp.argmin(pr, axis=1)                               # [B, E]
+    cand = jnp.take_along_axis(idx, cand_w, axis=1)
+    any_live = jnp.any(in_sample, axis=1)
+    cand = jnp.where(any_live[:, None], cand, -1)
+    victim = jnp.take_along_axis(cand, e_choice[:, None], axis=1)[:, 0]
+    return victim.astype(jnp.int32), cand.astype(jnp.int32)
+
+
+def bucket_lookup_ref(table_key, table_size, keys, *, assoc: int):
+    """Reference hash-table probe.
+
+    Returns (found bool[B], slot i32[B] (-1 if missing))."""
+    n_buckets = table_key.shape[0] // assoc
+    kh = hash_key(keys)
+    bucket = bucket_of(kh, n_buckets)
+    slots = bucket[:, None] * assoc + jnp.arange(assoc)[None, :]
+    live = (table_size[slots] > 0) & (table_size[slots] < 255)
+    match = live & (table_key[slots] == keys[:, None])
+    found = jnp.any(match, axis=1)
+    slot = jnp.take_along_axis(slots, jnp.argmax(match, axis=1)[:, None],
+                               axis=1)[:, 0]
+    return found, jnp.where(found, slot, -1).astype(jnp.int32)
+
+
+def metadata_update_ref(freq, last_ts, slots, deltas, clock):
+    """Reference combining metadata update (the remote FAA + stateless
+    write): freq[slot] += delta; last_ts[slot] = max(last_ts, clock).
+    slots: i32[B] with -1 = no-op."""
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, freq.shape[0])
+    freq2 = freq.at[idx].add(jnp.where(ok, deltas, 0), mode="drop")
+    last2 = last_ts.at[idx].max(clock, mode="drop")
+    return freq2, last2

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the production meshes need 512 host placeholders.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (arch x shape) cell and each production mesh, build abstract
+inputs (ShapeDtypeStruct — nothing is allocated), jit with explicit
+in_shardings, `.lower().compile()`, print `memory_analysis()` /
+`cost_analysis()`, parse collective bytes from the compiled HLO, and write
+the roofline record to benchmarks/results/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, input_specs
+from repro.configs.registry import cell_supported
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (ModelConfig, abstract_params,
+                                active_param_count, build_param_specs,
+                                param_count)
+from repro.serve.decode import abstract_cache, cache_specs, make_serve_step
+from repro.train.optimizer import (AdamWConfig, OptState, make_train_step,
+                                   zero_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results")
+
+
+def _dp_axes(mesh, batch: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if (batch % total == 0 and batch >= total) else None
+
+
+def _named(mesh, spec):
+    names = set(mesh.axis_names)
+
+    def fix(s):
+        if s is None:
+            return None
+        if isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a in names)
+            return kept or None
+        return s if s in names else None
+
+    return NamedSharding(mesh, P(*[fix(s) for s in spec]))
+
+
+def _tree_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: _named(mesh, tuple(s)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train(cfg: ModelConfig, shape, mesh, *, n_micro=None,
+                remat="full", layout="tp"):
+    params = abstract_params(cfg)
+    if layout == "dp":
+        # Pure DP/ZeRO: below ~1B params TP wastes compute (replicated
+        # attention) and collective bytes; treat the model axis as extra
+        # data parallelism instead.
+        specs = jax.tree.map(lambda _: P(), params,
+                             is_leaf=lambda x: hasattr(x, "shape"))
+        specs = jax.tree.map(
+            lambda x: P(*([None] * len(x.shape))), params)
+    else:
+        specs = build_param_specs(cfg, model_shards=mesh.shape["model"])
+    p_sh = _tree_shardings(mesh, specs)
+    if layout == "dp":
+        all_ax = tuple(mesh.axis_names)
+        nall = mesh.size
+
+        def zext(spec, leaf):
+            for i, dim in enumerate(leaf.shape):
+                if dim % nall == 0 and dim >= nall:
+                    parts = [None] * len(leaf.shape)
+                    parts[i] = all_ax
+                    return P(*parts)
+            return P(*([None] * len(leaf.shape)))
+        zspecs = jax.tree.map(zext, specs, params,
+                              is_leaf=lambda x: isinstance(x, P))
+    else:
+        with mesh:
+            zspecs = zero_specs(specs, params, mesh)
+    z_sh = _tree_shardings(mesh, zspecs)
+
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    opt = OptState(jax.ShapeDtypeStruct((), jnp.int32),
+                   f32(params), f32(params), f32(params))
+    opt_sh = OptState(NamedSharding(mesh, P()), z_sh, z_sh, z_sh)
+
+    if layout == "dp":
+        dp = tuple(mesh.axis_names)
+        dp_total = mesh.size
+    else:
+        dp = _dp_axes(mesh, shape.global_batch)
+        dp_total = mesh.size // mesh.shape["model"]
+    ins = input_specs(cfg.name, shape.name)
+    batch_sh = {k: _named(mesh, (dp,) + (None,) * (len(v.shape) - 1))
+                for k, v in ins.items()}
+
+    if n_micro is None:
+        n_micro = max(1, shape.global_batch // dp_total)
+    opt_cfg = AdamWConfig()
+    step = make_train_step(cfg, opt_cfg, n_microbatches=n_micro,
+                           remat=remat, param_specs=specs, zspecs=zspecs)
+    fn = lambda p, o, b: step(p, o, b)
+    args = (params, opt, ins)
+    shardings = (p_sh, opt_sh, batch_sh)
+    return fn, args, shardings, {"n_microbatches": n_micro, "remat": remat}
+
+
+def build_prefill(cfg: ModelConfig, shape, mesh):
+    from repro.models.model import forward
+    params = abstract_params(cfg)
+    specs = build_param_specs(cfg, model_shards=mesh.shape["model"])
+    p_sh = _tree_shardings(mesh, specs)
+    dp = _dp_axes(mesh, shape.global_batch)
+    ins = input_specs(cfg.name, shape.name)
+    batch_sh = {k: _named(mesh, (dp,) + (None,) * (len(v.shape) - 1))
+                for k, v in ins.items()}
+
+    def fn(p, b):
+        h = forward(p, cfg, tokens=b.get("tokens"), embeds=b.get("embeds"),
+                    remat="none")
+        table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], table)
+        return logits
+
+    return fn, (params, ins), (p_sh, batch_sh), {}
+
+
+def build_decode(cfg: ModelConfig, shape, mesh):
+    params = abstract_params(cfg)
+    specs = build_param_specs(cfg, model_shards=mesh.shape["model"])
+    p_sh = _tree_shardings(mesh, specs)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cspecs = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                         model_shards=mesh.shape["model"])
+    dp = _dp_axes(mesh, shape.global_batch)
+
+    def fix_dp(spec):
+        # cache_specs uses ('pod','data') for batch; drop if indivisible
+        parts = []
+        for s in tuple(spec):
+            if isinstance(s, (tuple, list)) and set(s) & {"pod", "data"}:
+                parts.append(dp)
+            else:
+                parts.append(s)
+        return parts
+
+    c_sh = jax.tree.map(lambda s: _named(mesh, fix_dp(s)), cspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    ins = input_specs(cfg.name, shape.name)
+    tok_sh = {k: _named(mesh, (dp,) + (None,) * (len(v.shape) - 1))
+              for k, v in ins.items()}
+    step = make_serve_step(cfg)
+
+    def fn(p, c, b):
+        return step(p, c, tokens=b.get("tokens"), embeds=b.get("embeds"))
+
+    return fn, (params, cache, ins), (p_sh, c_sh, tok_sh), {}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             save: bool = True, extra_tag: str = "", step_override=None):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(rec, extra_tag) if save else None
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    builder = {"train": build_train, "prefill": build_prefill,
+               "decode": build_decode}[shape.kind]
+    t0 = time.time()
+    with mesh:
+        fn, args, shardings, meta = (step_override or builder)(cfg, shape, mesh)
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        n_dev = mesh.size
+        d_tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                         else 1)
+        n_active = active_param_count(cfg)
+        model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * d_tokens
+        if shape.kind == "prefill":
+            model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+        roof = rl.analyze(compiled, n_dev, model_flops)
+    dt = time.time() - t0
+
+    rec.update(
+        status="ok", compile_s=round(dt, 1), n_devices=mesh.size,
+        params=param_count(cfg), active_params=active_param_count(cfg),
+        arg_bytes_per_dev=mem.argument_size_in_bytes,
+        out_bytes_per_dev=mem.output_size_in_bytes,
+        temp_bytes_per_dev=mem.temp_size_in_bytes,
+        alias_bytes_per_dev=mem.alias_size_in_bytes,
+        peak_hbm_per_dev=(mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes),
+        coll_counts=roof.coll_breakdown.get("_counts"),
+        **meta, **roof.row())
+    if save:
+        _save(rec, extra_tag)
+    return rec
+
+
+def _save(rec, extra_tag=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"_{extra_tag}" if extra_tag else ""
+    path = os.path.join(
+        RESULTS_DIR,
+        f"dryrun_{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = ([(a, s) for a in ARCHS for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                rec = run_cell(arch, shape, mk)
+                if rec["status"] == "ok":
+                    print(f"[OK] {arch} x {shape} x {mk}: "
+                          f"compile={rec['compile_s']}s "
+                          f"hbm/dev={rec['peak_hbm_per_dev']/2**30:.2f}GiB "
+                          f"bottleneck={rec['bottleneck']} "
+                          f"t=({rec['t_compute_s']:.2e},"
+                          f"{rec['t_memory_s']:.2e},"
+                          f"{rec['t_collective_s']:.2e})s")
+                else:
+                    print(f"[SKIP] {arch} x {shape} x {mk}: {rec['reason']}")
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {arch} x {shape} x {mk}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

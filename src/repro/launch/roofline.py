@@ -1,0 +1,147 @@
+"""Roofline terms from a compiled AOT artifact (no hardware required).
+
+TPU v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link
+ICI. `cost_analysis()` yields per-device FLOPs/bytes after SPMD
+partitioning; collective bytes are parsed from the compiled HLO by summing
+result-shape bytes of every collective op (all-reduce counted 2x for its
+reduce-scatter + all-gather ring phases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16, per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+ICI_LINKS = 4            # 2D torus: 4 links/chip usable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind over the per-device module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op_base = op.rstrip("-start").rstrip("-done") if op else op
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start" or op.startswith(kind + "."):
+                b = _shape_bytes(shape_str)
+                # ring all-reduce moves ~2x the payload (RS + AG phases)
+                out[kind] += 2 * b if kind == "all-reduce" else b
+                counts[kind] += 1
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    n_devices: int
+    model_flops: float = 0.0   # 6*N*D or 2*N_active*D, whole-model
+    fused_bytes_per_device: float = 0.0  # perfectly-fused traffic estimate
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Pessimistic: HLO-granularity traffic (CPU fusion boundaries)."""
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_memory_fused(self) -> float:
+        """Optimistic: dot I/O (bf16) + slice/carry + collective traffic —
+        what a well-fused TPU compilation must still move through HBM."""
+        return self.fused_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory_fused,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time bound (max of terms; fused memory model)."""
+        return max(self.t_compute, self.t_memory_fused, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO FLOPs across all chips): remat/redundancy."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline MFU: model FLOPs / (chips * peak * step_time)."""
+        denom = self.n_devices * PEAK_FLOPS * self.step_time
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_device,
+            "bytes_per_dev": self.bytes_per_device,
+            "fused_bytes_per_dev": self.fused_bytes_per_device,
+            "coll_bytes_per_dev": self.coll_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_fused_s": self.t_memory_fused,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, n_devices: int, model_flops: float = 0.0) -> Roofline:
+    """Loop-aware analysis: XLA's cost_analysis() counts while bodies once,
+    so scanned programs (layer scans, microbatching, chunked attention) are
+    under-reported by their trip counts. hlo_cost re-derives flops/bytes/
+    collective bytes weighted by loop execution counts."""
+    from repro.launch import hlo_cost
+    rep = hlo_cost.analyze_text(compiled.as_text())
+    coll = dict(rep.coll_breakdown)
+    coll["_counts"] = rep.coll_counts  # type: ignore
+    return Roofline(rep.flops, rep.bytes, rep.coll_bytes, coll,
+                    n_devices, model_flops, rep.fused_bytes)

@@ -1,0 +1,78 @@
+"""Production serving driver: batched decode with the Ditto-managed
+prefix/page cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --requests 24 --prompt-len 96 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.models import init_params
+from repro.serve import DittoPageCache, init_cache, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--scale", choices=("smoke", "full"), default="smoke")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.scale == "smoke":
+        cfg = smoke_config(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_serve_step(cfg))
+    pagecache = DittoPageCache(args.pool_pages, args.page_size)
+
+    # Request stream with shared prefixes (few-shot/system-prompt shape).
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, args.prompt_len // 2
+                          ).astype(np.uint32)
+    t0 = time.time()
+    total_new = 0
+    skipped_pages = 0
+    for r in range(0, args.requests, args.batch):
+        prompts = []
+        for b in range(args.batch):
+            tail = rng.integers(1, cfg.vocab_size, args.prompt_len
+                                - len(shared)).astype(np.uint32)
+            p = np.concatenate([shared, tail])
+            _, _, n_hit = pagecache.lookup_or_allocate(p)
+            skipped_pages += n_hit
+            prompts.append(p)
+        toks = jnp.asarray(np.stack(prompts), jnp.int32)
+        cache = init_cache(cfg, args.batch, args.prompt_len + args.gen + 1)
+        # prefill via teacher-forced decode (cached pages would skip this)
+        nxt = None
+        for i in range(args.prompt_len):
+            nxt, cache = step(params, cache, tokens=toks[:, i:i + 1])
+        out = [nxt]
+        for _ in range(args.gen):
+            nxt, cache = step(params, cache, tokens=out[-1][:, None])
+            out.append(nxt)
+            total_new += args.batch
+    dt = time.time() - t0
+    print(f"served {args.requests} requests: {total_new} new tokens in "
+          f"{dt:.1f}s ({total_new/dt:.1f} tok/s)")
+    print(f"prefix cache: hit_rate={pagecache.hit_rate:.2f} "
+          f"pages_skipped={skipped_pages} "
+          f"weights={np.round(pagecache.weights, 3)} "
+          f"evictions={int(pagecache.stats.evictions)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (ModelConfig, build_param_specs, forward,
+                                init_params, param_count, abstract_params)
+
+__all__ = ["ModelConfig", "build_param_specs", "forward", "init_params",
+           "param_count", "abstract_params"]

@@ -1,0 +1,106 @@
+"""Attention: GQA/MQA/MHA with causal + sliding-window masks.
+
+Two execution strategies:
+  * full  — materialize [T, S] scores (fine up to ~8k tokens);
+  * chunked — online-softmax scan over KV chunks (flash-attention recurrence
+    in pure JAX), used for 32k prefill where the score matrix would not fit.
+
+Decode (single new token against a long KV cache) lives in serve/decode.py,
+including the sequence-sharded LSE-combine path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope
+from repro.models.sharding import maybe_shard
+
+NEG_INF = -2.0e38
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B, S, Hkv, D] -> [B, S, Hkv*n_rep, D] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def _mask(t_idx, s_idx, window: int):
+    m = s_idx[None, :] <= t_idx[:, None]
+    if window > 0:
+        m &= s_idx[None, :] > (t_idx[:, None] - window)
+    return m
+
+
+def full_attention(q, k, v, *, window: int = 0, q_offset: int = 0):
+    """q: [B, T, H, D]; k/v: [B, S, H, D] (already GQA-expanded)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    t_idx = jnp.arange(q.shape[1]) + q_offset
+    s_idx = jnp.arange(k.shape[1])
+    scores = jnp.where(_mask(t_idx, s_idx, window)[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def chunked_attention(q, k, v, *, chunk: int = 1024, window: int = 0,
+                      q_offset: int = 0):
+    """Online-softmax scan over KV chunks — O(T*chunk) score memory."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    scale = d ** -0.5
+    t_idx = jnp.arange(t) + q_offset
+
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, xs):
+        m_run, l_run, o_run, c_i = carry[0], carry[1], carry[2], carry[3]
+        kci, vci = xs
+        s_idx = c_i * chunk + jnp.arange(chunk)
+        sc = jnp.einsum("bthd,bshd->bhts", q, kci).astype(jnp.float32) * scale
+        sc = jnp.where(_mask(t_idx, s_idx, window)[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        o_new = (o_run * corr[..., None]
+                 + jnp.einsum("bhts,bshd->bhtd", p.astype(q.dtype),
+                              vci).astype(jnp.float32))
+        return (m_new, l_new, o_new, c_i + 1), ()
+
+    m0 = jnp.full((b, h, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    o0 = jnp.zeros((b, h, t, d), jnp.float32)
+    (m_f, l_f, o_f, _), _ = jax.lax.scan(step, (m0, l0, o0, 0), (kc, vc))
+    out = (o_f / jnp.maximum(l_f, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3)  # [B, T, H, D]
+
+
+def attention_block(x, params, cfg, positions, *, window: int = 0,
+                    chunked: bool = False):
+    """Self-attention over x: [B, T, d_model]. params: wq/wk/wv/wo."""
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"]            # [B, T, H*hd]
+    k = x @ params["wk"]            # [B, T, Hkv*hd]
+    v = x @ params["wv"]
+    q = maybe_shard(q.reshape(b, t, cfg.n_heads, hd), "dp", None, "model", None)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    if chunked or t > 8192:
+        o = chunked_attention(q, k, v, window=window)
+    else:
+        o = full_attention(q, k, v, window=window)
+    o = o.reshape(b, t, cfg.n_heads * hd)
+    return o @ params["wo"]

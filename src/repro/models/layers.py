@@ -1,0 +1,74 @@
+"""Shared neural building blocks (pure-functional JAX, bf16 activations)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embeddings. x: [B, T, H, D], positions: [B, T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # [B, T, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+              w_down: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    g = dense(x, w_gate)
+    act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g, approximate=True)
+    return dense(act * dense(x, w_up), w_down)
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray, scale: bool = False) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:  # gemma-style sqrt(d) embedding scaling
+        x = x * jnp.sqrt(jnp.float32(table.shape[-1])).astype(x.dtype)
+    return x
+
+
+def logits_and_xent(x: jnp.ndarray, table: jnp.ndarray,
+                    labels: jnp.ndarray) -> jnp.ndarray:
+    """Vocab-sharded cross entropy.
+
+    logits [B, T, V] are computed in bf16 against the (vocab-sharded)
+    embedding table; the softmax reductions run over the sharded vocab axis
+    so XLA lowers them to small all-reduces instead of an all-gather of the
+    full logits (checked in the dry-run HLO — this is one of the collective
+    optimizations recorded in EXPERIMENTS.md).
+    """
+    from repro.models.sharding import maybe_shard
+    logits = jnp.einsum("btd,vd->btv", x, table).astype(jnp.float32)
+    logits = maybe_shard(logits, "dp", None, "model")
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)

@@ -1,0 +1,347 @@
+"""Composable model zoo: one ModelConfig covers all 10 assigned archs.
+
+Layers are grouped into a repeating *block pattern* (e.g. recurrentgemma's
+(rglru, rglru, attn)); full periods run under one ``lax.scan`` over stacked
+params (small HLO, fast SPMD compile even at 48 layers / 512 devices), with
+any remainder blocks unrolled.
+
+Sharding: ``build_param_specs`` emits a PartitionSpec tree. Big dims shard
+over the `model` axis only when divisible (heads / kv-heads / d_ff / padded
+vocab); small archs (smollm, internvl2 backbone, xlstm) replicate attention
+or recurrent kernels and rely on DP — recorded per arch in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from jax.ad_checkpoint import checkpoint_name
+from repro.models.attention import attention_block
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.sharding import maybe_shard
+from repro.models.xlstm import mlstm_block, slstm_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    mlp_kind: str = "swiglu"    # swiglu | geglu
+    n_experts: int = 0
+    top_k: int = 0
+    block_pattern: tuple = ("attn",)
+    attn_window: int = 0        # sliding window for "attn_local" blocks
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False   # gemma-style sqrt(d) scaling
+    frontend: str = ""          # "" | "vit_stub" | "encodec_stub"
+    sub_quadratic: bool = False # may run the long_500k decode cell
+    source: str = ""            # provenance note
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def remainder(self) -> tuple:
+        r = self.n_layers % len(self.block_pattern)
+        return self.block_pattern[:r]
+
+    @property
+    def mlstm_d_in(self) -> int:
+        return 2 * self.d_model
+
+    @property
+    def uses_tokens(self) -> bool:
+        return self.frontend == ""
+
+
+# ----------------------------------------------------------------------
+# Parameter construction
+# ----------------------------------------------------------------------
+
+def _block_shapes(cfg: ModelConfig, kind: str) -> Dict[str, tuple]:
+    d = cfg.d_model
+    hd = cfg.hd
+    if kind in ("attn", "attn_local", "attn_moe"):
+        s: Dict[str, tuple] = {
+            "norm1": (d,), "norm2": (d,),
+            "wq": (d, cfg.n_heads * hd), "wk": (d, cfg.n_kv_heads * hd),
+            "wv": (d, cfg.n_kv_heads * hd), "wo": (cfg.n_heads * hd, d),
+        }
+        if kind == "attn_moe":
+            s.update(router=(d, cfg.n_experts),
+                     w_gate=(cfg.n_experts, d, cfg.d_ff),
+                     w_up=(cfg.n_experts, d, cfg.d_ff),
+                     w_down=(cfg.n_experts, cfg.d_ff, d))
+        else:
+            s.update(w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff),
+                     w_down=(cfg.d_ff, d))
+        return s
+    if kind == "rglru":
+        dr = d  # lru width = d_model (recurrentgemma-2b)
+        return {
+            "norm1": (d,), "norm2": (d,),
+            "w_y": (d, dr), "w_x": (d, dr), "conv_w": (4, dr),
+            "w_a": (dr, dr), "b_a": (dr,), "w_i": (dr, dr), "b_i": (dr,),
+            "lam": (dr,), "w_o": (dr, d),
+            "w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+            "w_down": (cfg.d_ff, d),
+        }
+    if kind == "mlstm":
+        di = cfg.mlstm_d_in
+        h = cfg.n_heads
+        return {
+            "norm1": (d,),
+            "w_up_x": (d, di), "w_up_z": (d, di),
+            "w_q": (di, di), "w_k": (di, di), "w_v": (di, di),
+            "w_f": (di, h), "b_f": (h,), "w_i": (di, h), "b_i": (h,),
+            "w_down": (di, d),
+        }
+    if kind == "slstm":
+        h = cfg.n_heads
+        dh = d // h
+        ff = int(round(d * 4 / 3))
+        return {
+            "norm1": (d,),
+            "w_zifo": (d, 4 * d), "r_kernel": (h, dh, 4 * dh),
+            "w_proj": (d, d),
+            "w_ff_gate": (d, ff), "w_ff_up": (d, ff), "w_ff_down": (ff, d),
+        }
+    raise ValueError(kind)
+
+
+def _block_specs(cfg: ModelConfig, kind: str, model_shards: int) -> Dict[str, P]:
+    def div(n):
+        return n % model_shards == 0
+    s = _block_shapes(cfg, kind)
+    out: Dict[str, P] = {}
+    for name, shape in s.items():
+        spec: Any = P(*([None] * len(shape)))
+        if kind in ("attn", "attn_local", "attn_moe"):
+            if name in ("wq",) and div(cfg.n_heads):
+                spec = P(None, "model")
+            elif name in ("wk", "wv") and div(cfg.n_kv_heads):
+                spec = P(None, "model")
+            elif name == "wo" and div(cfg.n_heads):
+                spec = P("model", None)
+            elif name == "router":
+                spec = P(None, None)
+            elif name in ("w_gate", "w_up"):
+                spec = (P("model", None, None) if kind == "attn_moe"
+                        else (P(None, "model") if div(cfg.d_ff) else spec))
+            elif name == "w_down":
+                spec = (P("model", None, None) if kind == "attn_moe"
+                        else (P("model", None) if div(cfg.d_ff) else spec))
+        elif kind == "rglru":
+            dr = cfg.d_model
+            if name in ("w_y", "w_x", "w_a", "w_i") and div(dr):
+                spec = P(None, "model")
+            elif name in ("b_a", "b_i", "lam") and div(dr):
+                spec = P("model")
+            elif name == "conv_w" and div(dr):
+                spec = P(None, "model")
+            elif name == "w_o" and div(dr):
+                spec = P("model", None)
+            elif name in ("w_gate", "w_up") and div(cfg.d_ff):
+                spec = P(None, "model")
+            elif name == "w_down" and div(cfg.d_ff):
+                spec = P("model", None)
+        # mlstm / slstm kernels replicate (DP-only TP story; see DESIGN.md)
+        out[name] = spec
+    return out
+
+
+def _init_block(rng, cfg: ModelConfig, kind: str, dtype=jnp.bfloat16):
+    shapes = _block_shapes(cfg, kind)
+    out = {}
+    for i, (name, shape) in enumerate(sorted(shapes.items())):
+        k = jax.random.fold_in(rng, i)
+        if name.startswith("norm") or name.startswith("b_"):
+            out[name] = jnp.zeros(shape, dtype)
+        elif name == "lam":
+            # RG-LRU: a = sigmoid(lam) init so decay in [0.9, 0.999]
+            out[name] = jnp.linspace(2.2, 6.9, shape[0]).astype(dtype)
+        elif name == "b_f":  # mlstm forget bias: start remembering
+            out[name] = jnp.full(shape, 3.0, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            out[name] = (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+    return out
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    pv = cfg.padded_vocab
+    d = cfg.d_model
+    k_emb, k_un, k_blocks = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (pv, d), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(
+            k_un, (pv, d), jnp.float32) * 0.02).astype(dtype)
+    period: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        ks = [jax.random.fold_in(k_blocks, j * 1000 + p)
+              for p in range(cfg.n_periods)]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block(kk, cfg, kind, dtype) for kk in ks])
+        period[f"{j}_{kind}"] = stacked
+    params["period"] = period
+    rem = {}
+    for j, kind in enumerate(cfg.remainder):
+        rem[f"{j}_{kind}"] = _init_block(
+            jax.random.fold_in(k_blocks, 777_000 + j), cfg, kind, dtype)
+    if rem:
+        params["rem"] = rem
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def build_param_specs(cfg: ModelConfig, model_shards: int = 16):
+    vocab_ok = cfg.padded_vocab % model_shards == 0
+    emb = P("model", None) if vocab_ok else P(None, None)
+    specs: Dict[str, Any] = {"embed": emb, "final_norm": P(None)}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = emb
+    period: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        bs = _block_specs(cfg, kind, model_shards)
+        period[f"{j}_{kind}"] = {
+            n: P(*((None,) + tuple(s))) for n, s in bs.items()}
+    specs["period"] = period
+    if cfg.remainder:
+        specs["rem"] = {
+            f"{j}_{kind}": dict(_block_specs(cfg, kind, model_shards))
+            for j, kind in enumerate(cfg.remainder)}
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: params touched per token (for 6*N_active*D roofline)."""
+    total = param_count(cfg)
+    if cfg.n_experts and cfg.top_k:
+        tree = abstract_params(cfg)
+        expert = sum(
+            math.prod(x.shape)
+            for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]
+            if any("w_gate" in str(p) or "w_up" in str(p) or "w_down" in str(p)
+                   for p in path))
+        total = total - expert + int(expert * cfg.top_k / cfg.n_experts)
+    return total
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+
+def _apply_block(x, bp, cfg: ModelConfig, kind: str, positions):
+    if kind in ("attn", "attn_local", "attn_moe"):
+        window = cfg.attn_window if kind == "attn_local" else 0
+        a = attention_block(L.rms_norm(x, bp["norm1"]), bp, cfg, positions,
+                            window=window)
+        # Tag post-collective outputs: the "save_outs" remat policy stashes
+        # these so the backward recompute skips the TP all-reduces.
+        a = checkpoint_name(a, "blk_attn_out")
+        x = x + a
+        y = L.rms_norm(x, bp["norm2"])
+        if kind == "attn_moe":
+            m = moe_block(y, bp, cfg)
+        else:
+            m = L.gated_mlp(y, bp["w_gate"], bp["w_up"], bp["w_down"],
+                            cfg.mlp_kind)
+        x = x + checkpoint_name(m, "blk_mlp_out")
+        return x
+    if kind == "rglru":
+        x = x + rglru_block(L.rms_norm(x, bp["norm1"]), bp, cfg)
+        y = L.rms_norm(x, bp["norm2"])
+        return x + L.gated_mlp(y, bp["w_gate"], bp["w_up"], bp["w_down"],
+                               cfg.mlp_kind)
+    if kind == "mlstm":
+        return x + mlstm_block(L.rms_norm(x, bp["norm1"]), bp, cfg)
+    if kind == "slstm":
+        return x + slstm_block(L.rms_norm(x, bp["norm1"]), bp, cfg)
+    raise ValueError(kind)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+            labels=None, remat: str = "none"):
+    """Returns mean xent loss if labels given, else final hidden states.
+
+    tokens: i32[B, T] (token archs); embeds: bf16[B, T, d] (stub frontends).
+    """
+    if embeds is None:
+        x = L.embed(tokens, params["embed"], cfg.embed_scale)
+    else:
+        x = embeds.astype(params["embed"].dtype)
+    b, t = x.shape[:2]
+    x = maybe_shard(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def period_body(xc, stacked):
+        for j, kind in enumerate(cfg.block_pattern):
+            xc = _apply_block(xc, stacked[f"{j}_{kind}"], cfg, kind, positions)
+        xc = maybe_shard(xc, "dp", None, None)
+        return xc, ()
+
+    body = period_body
+    if remat == "full":
+        body = jax.checkpoint(period_body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    elif remat == "save_outs":
+        # Full remat EXCEPT the post-TP-collective block outputs: the
+        # backward pass recomputes everything shard-local and never re-runs
+        # the forward all-reduces (collective-bound hillclimb, §Perf).
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "blk_attn_out", "blk_mlp_out"))
+    x, _ = jax.lax.scan(body, x, params["period"])
+
+    for j, kind in enumerate(cfg.remainder):
+        x = _apply_block(x, params["rem"][f"{j}_{kind}"], cfg, kind, positions)
+
+    x = L.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if labels is None:
+        return x
+    return L.logits_and_xent(x, table, labels)

@@ -1,0 +1,84 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The temporal mixing is a diagonal linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+with input-dependent gates. Training/prefill uses an associative scan
+(log-depth on TPU); decode is the single-step recurrence with O(1) state —
+which is why recurrentgemma is one of the two archs that runs the
+``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import maybe_shard
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def causal_conv1d(u: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = None):
+    """Per-channel causal conv, width W. u: [B, T, D]; w: [W, D].
+
+    Returns (out, new_state) where state is the last W-1 inputs (decode)."""
+    width = w.shape[0]
+    if state is not None:
+        u_full = jnp.concatenate([state, u], axis=1)
+    else:
+        u_full = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(u_full[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    new_state = u_full[:, -(width - 1):, :]
+    return out.astype(u.dtype), new_state
+
+
+def _gates(u, params):
+    r = jax.nn.sigmoid(u @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(u @ params["w_i"] + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (mult * i.astype(jnp.float32))
+
+
+def rglru_scan(u: jnp.ndarray, params, h0: jnp.ndarray | None = None):
+    """u: [B, T, D_rnn] -> (y [B, T, D_rnn], h_T)."""
+    a, g = _gates(u, params)                     # [B, T, D] f32
+    b = g * u.astype(jnp.float32)
+    if h0 is not None:
+        # Fold the carried state into the first step.
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(u_t: jnp.ndarray, params, h_prev: jnp.ndarray):
+    """Single decode step. u_t: [B, D_rnn], h_prev: [B, D_rnn] (f32)."""
+    a, g = _gates(u_t[:, None, :], params)
+    h = a[:, 0] * h_prev + g[:, 0] * u_t.astype(jnp.float32)
+    return h.astype(u_t.dtype), h
+
+
+def rglru_block(x: jnp.ndarray, params, cfg, *, conv_state=None, h0=None,
+                return_state: bool = False):
+    """Griffin recurrent block: gate branch ⊙ RG-LRU branch -> out proj.
+
+    x: [B, T, d_model]. Decode passes T=1 with (conv_state, h0)."""
+    y = jax.nn.gelu(x @ params["w_y"], approximate=True)     # [B, T, D_rnn]
+    u = x @ params["w_x"]
+    u = maybe_shard(u, "dp", None, "model")
+    u, conv_state_new = causal_conv1d(u, params["conv_w"], conv_state)
+    if x.shape[1] == 1 and h0 is not None:
+        h, h_last = rglru_step(u[:, 0], params, h0)
+        h = h[:, None, :]
+    else:
+        h, h_last = rglru_scan(u, params, h0)
+    out = (y * h) @ params["w_o"]
+    if return_state:
+        return out, (conv_state_new, h_last)
+    return out

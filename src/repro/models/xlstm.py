@@ -1,0 +1,185 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, inherently sequential).
+
+mLSTM runs in the chunkwise-parallel form (gated-linear-attention style):
+within a chunk the contribution is a masked quadratic product; across
+chunks a [dk, dv] matrix state + [dk] normalizer are carried through a
+scan. Decode is the O(1) single-step recurrence — xlstm-350m is therefore
+the second arch that runs the ``long_500k`` cell.
+
+sLSTM uses exponential gating with the max-stabilizer state and a per-head
+recurrent kernel, scanned over time (the paper acknowledges it is not
+parallelizable; it appears in 1/8 of the blocks).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import maybe_shard
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_f, log_i, *, chunk: int = 256,
+                    state0=None, return_state: bool = False):
+    """q,k,v: [B, T, H, D]; log_f/log_i: [B, T, H] (f32 log gates).
+
+    Returns [B, T, H, D] (and final (S [B,H,D,D], n [B,H,D]) if asked)."""
+    b, t, h, d = q.shape
+    if t % chunk != 0:
+        chunk = t  # tiny smoke shapes
+    n_ch = t // chunk
+    scale = d ** -0.5
+
+    qc = q.reshape(b, n_ch, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_ch, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_ch, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    fc = log_f.reshape(b, n_ch, chunk, h).transpose(1, 0, 2, 3)
+    ic = log_i.reshape(b, n_ch, chunk, h).transpose(1, 0, 2, 3)
+
+    S0 = jnp.zeros((b, h, d, d), jnp.float32) if state0 is None else state0[0]
+    n0 = jnp.zeros((b, h, d), jnp.float32) if state0 is None else state0[1]
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        S, n = carry
+        qi, ki, vi, lf, li = xs
+        F = jnp.cumsum(lf, axis=1)                     # [B, c, H]
+        # Intra-chunk: A[t,s] = exp(F_t - F_s + li_s), s <= t.
+        logA = (F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :])
+        logA = jnp.where(causal[None, :, :, None], logA, -jnp.inf)
+        A = jnp.exp(logA)                              # [B, c, c, H]
+        sc = jnp.einsum("bthd,bshd->btsh", qi, ki).astype(jnp.float32) * scale
+        intra = jnp.einsum("btsh,bshd->bthd", sc * A, vi.astype(jnp.float32))
+        n_intra = jnp.einsum("btsh,bshd->bthd", A, ki.astype(jnp.float32))
+        # Inter-chunk: carry-in state read with decay exp(F_t).
+        decay_t = jnp.exp(F)                           # [B, c, H]
+        q32 = qi.astype(jnp.float32) * scale
+        inter = jnp.einsum("bthd,bhde->bthe", q32, S) * decay_t[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", q32, n) * decay_t
+        # Normalized hidden state: h = num / max(|n q|, 1).
+        num = intra + inter
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", q32, n_intra) + n_inter)
+        out = num / jnp.maximum(den, 1.0)[..., None]
+        # State update: S' = exp(F_C) S + sum_s exp(F_C - F_s + li_s) k v^T.
+        F_C = F[:, -1][:, None]                        # [B, 1, H]
+        w_s = jnp.exp(F_C - F + li)                    # [B, c, H]
+        kw = ki.astype(jnp.float32) * w_s[..., None]
+        S_new = S * jnp.exp(F_C[:, 0])[..., None, None] + jnp.einsum(
+            "bshd,bshe->bhde", kw, vi.astype(jnp.float32))
+        n_new = n * jnp.exp(F_C[:, 0])[..., None] + jnp.sum(
+            kw.transpose(0, 2, 1, 3), axis=2)
+        return (S_new, n_new), out.astype(q.dtype)
+
+    (S_f, n_f), outs = jax.lax.scan(step, (S0, n0), (qc, kc, vc, fc, ic))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, d)
+    if return_state:
+        return out, (S_f, n_f)
+    return out
+
+
+def mlstm_step(q, k, v, log_f, log_i, state):
+    """Single decode step. q,k,v: [B, H, D]; gates [B, H]; state (S, n)."""
+    S, n = state
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None, None]
+    i = jnp.exp(log_i.astype(jnp.float32))[..., None, None]
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    q32 = q32 * (q.shape[-1] ** -0.5)
+    S_new = f * S + i * k32[..., :, None] * v32[..., None, :]
+    n_new = f[..., 0] * n + i[..., 0] * k32
+    num = jnp.einsum("bhd,bhde->bhe", q32, S_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n_new))
+    out = num / jnp.maximum(den, 1.0)[..., None]
+    return out.astype(q.dtype), (S_new, n_new)
+
+
+def mlstm_block(x, params, cfg, *, state=None, return_state: bool = False):
+    """xLSTM mLSTM block: up-proj (2x), q/k/v heads, gated output, down-proj.
+
+    x: [B, T, d_model]."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    d_in = params["w_up_x"].shape[1]
+    dh = d_in // h
+    xm = x @ params["w_up_x"]
+    z = x @ params["w_up_z"]
+    xm = maybe_shard(xm, "dp", None, None)
+    q = (xm @ params["w_q"]).reshape(b, t, h, dh)
+    k = (xm @ params["w_k"]).reshape(b, t, h, dh)
+    v = (xm @ params["w_v"]).reshape(b, t, h, dh)
+    log_f = jax.nn.log_sigmoid(
+        (xm @ params["w_f"]).astype(jnp.float32) + params["b_f"])
+    log_i = (xm @ params["w_i"]).astype(jnp.float32) + params["b_i"]
+    log_i = -jax.nn.softplus(-log_i)                   # log sigmoid, stable
+    if t == 1 and state is not None:
+        out, st = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                             log_f[:, 0], log_i[:, 0], state)
+        out = out[:, None]
+    else:
+        res = mlstm_chunkwise(q, k, v, log_f, log_i,
+                              state0=state, return_state=return_state)
+        out, st = res if return_state else (res, None)
+    out = out.reshape(b, t, d_in) * jax.nn.silu(z)
+    y = out @ params["w_down"]
+    if return_state:
+        return y, st
+    return y
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+
+def slstm_scan(x, params, state0=None, return_state: bool = False):
+    """x: [B, T, D]. Per-head recurrent kernel R [H, Dh, 4*Dh].
+
+    Exponential gating with stabilizer m (xLSTM eq. 15)."""
+    b, t, d = x.shape
+    r = params["r_kernel"]
+    h_heads, dh, _ = r.shape
+    zx = x @ params["w_zifo"]                          # [B, T, 4D]
+
+    def step(carry, xs):
+        h_prev, c_prev, n_prev, m_prev = carry
+        zx_t = xs                                      # [B, 4D]
+        hh = h_prev.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(b, 4 * d)
+        pre = (zx_t + rec).astype(jnp.float32)
+        z, i, f, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = -jax.nn.softplus(-f)                   # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m_prev, i)
+        i_p = jnp.exp(i - m_new)
+        f_p = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_p * c_prev + i_p * z
+        n_new = f_p * n_prev + i_p
+        h_new = o * (c_new / jnp.maximum(n_new, 1.0))
+        return (h_new.astype(x.dtype), c_new, n_new, m_new), h_new.astype(x.dtype)
+
+    if state0 is None:
+        state0 = (jnp.zeros((b, d), x.dtype), jnp.zeros((b, d), jnp.float32),
+                  jnp.zeros((b, d), jnp.float32),
+                  jnp.full((b, d), -1e30, jnp.float32))
+    carry, ys = jax.lax.scan(step, state0, zx.transpose(1, 0, 2))
+    out = ys.transpose(1, 0, 2)
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_block(x, params, cfg, *, state=None, return_state: bool = False):
+    """sLSTM block + gated (4/3) FFN, as in xLSTM's sLSTM block."""
+    res = slstm_scan(x, params, state0=state, return_state=return_state)
+    y, st = res if return_state else (res, None)
+    y = y @ params["w_proj"]
+    g = y @ params["w_ff_gate"]
+    y = (jax.nn.gelu(g, approximate=True) * (y @ params["w_ff_up"])) @ params["w_ff_down"]
+    if return_state:
+        return y, st
+    return y

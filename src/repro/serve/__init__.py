@@ -1,0 +1,7 @@
+from repro.serve.decode import (abstract_cache, cache_specs, init_cache,
+                                make_serve_step, reset_lane)
+from repro.serve.engine import DecodeEngine
+from repro.serve.page_cache import DittoPageCache
+
+__all__ = ["abstract_cache", "cache_specs", "init_cache", "make_serve_step",
+           "reset_lane", "DecodeEngine", "DittoPageCache"]

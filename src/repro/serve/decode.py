@@ -1,0 +1,264 @@
+"""Decode path: one new token per sequence against per-layer caches.
+
+Cache kinds (per block):
+  * attention      — KV tensors [B, S, Hkv, hd]; for sliding-window blocks a
+    ring buffer of the window length (RoPE applied at write time).
+  * RG-LRU         — conv tail [B, 3, D] + recurrent state [B, D] (O(1): this
+    is what makes the 500k-context cell feasible).
+  * mLSTM / sLSTM  — matrix memory (S, n) / scalar memory (h, c, n, m).
+
+Sequence-sharded flash-decode: for long KV caches the S dimension shards
+over the `model` axis; scores/softmax/V-weighting then reduce over the
+sharded axis, which XLA lowers to two tiny [B,H] all-reduces plus one
+[B,H,hd] all-reduce — the GSPMD form of flash-decode's LSE combine. When
+n_kv_heads divides the TP axis we shard heads instead (cheaper still).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.attention import repeat_kv
+from repro.models.model import ModelConfig
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.sharding import maybe_shard
+from repro.models.xlstm import mlstm_block, slstm_block
+
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------------
+# Cache construction
+# ----------------------------------------------------------------------
+
+def _kind_cache_shape(cfg: ModelConfig, kind: str, batch: int, seq_len: int):
+    if kind in ("attn", "attn_moe", "attn_local"):
+        s = min(seq_len, cfg.attn_window) if kind == "attn_local" else seq_len
+        kv = (batch, s, cfg.n_kv_heads, cfg.hd)
+        return {"k": (kv, jnp.bfloat16), "v": (kv, jnp.bfloat16)}
+    if kind == "rglru":
+        d = cfg.d_model
+        return {"conv": ((batch, 3, d), jnp.bfloat16),
+                "h": ((batch, d), jnp.float32)}
+    if kind == "mlstm":
+        h = cfg.n_heads
+        dh = cfg.mlstm_d_in // h
+        return {"S": ((batch, h, dh, dh), jnp.float32),
+                "n": ((batch, h, dh), jnp.float32)}
+    if kind == "slstm":
+        d = cfg.d_model
+        return {"h": ((batch, d), jnp.bfloat16),
+                "c": ((batch, d), jnp.float32),
+                "n": ((batch, d), jnp.float32),
+                "m": ((batch, d), jnp.float32)}
+    raise ValueError(kind)
+
+
+def _build_cache(cfg: ModelConfig, batch: int, seq_len: int, make_leaf):
+    # per-lane positions: lanes join/leave independently (continuous
+    # batching), so every sequence tracks its own write offset.
+    tree: Dict[str, Any] = {"pos": make_leaf((batch,), jnp.int32)}
+    period = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        shapes = _kind_cache_shape(cfg, kind, batch, seq_len)
+        period[f"{j}_{kind}"] = {
+            n: make_leaf((cfg.n_periods,) + tuple(shp), dt)
+            for n, (shp, dt) in shapes.items()}
+    tree["period"] = period
+    if cfg.remainder:
+        tree["rem"] = {
+            f"{j}_{kind}": {
+                n: make_leaf(shp, dt)
+                for n, (shp, dt) in _kind_cache_shape(
+                    cfg, kind, batch, seq_len).items()}
+            for j, kind in enumerate(cfg.remainder)}
+    return tree
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    tree = _build_cache(cfg, batch, seq_len, lambda s, d: jnp.zeros(s, d))
+
+    # sLSTM stabilizer state starts at -inf (running max of log gates).
+    def fix(path, leaf):
+        if any(str(p).find("'m'") >= 0 for p in path[-1:]):
+            return jnp.full_like(leaf, -1e30)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, tree)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return _build_cache(cfg, batch, seq_len,
+                        lambda s, d: jax.ShapeDtypeStruct(s, d))
+
+
+def reset_lane(cfg: ModelConfig, cache, lane: int):
+    """Zero one lane's state (continuous batching: a new request takes over
+    the lane). Period caches carry [period, B, ...]; rem caches [B, ...]."""
+    def wipe(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        if "pos" in keys:
+            return leaf.at[lane].set(0)
+        fill = -1e30 if keys[-1] == "m" else 0  # sLSTM stabilizer
+        if "period" in keys:
+            return leaf.at[:, lane].set(fill)
+        return leaf.at[lane].set(fill)
+
+    return jax.tree_util.tree_map_with_path(wipe, cache)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                model_shards: int = 16):
+    """PartitionSpec tree matching abstract_cache: B over dp; KV sharded on
+    heads when divisible, else on the sequence (flash-decode)."""
+    abs_tree = abstract_cache(cfg, batch, seq_len)
+    out: Dict[str, Any] = {"pos": P()}
+    out["period"] = {
+        slot: {n: _leaf(cfg, n, model_shards, stacked=True)
+               for n in caches}
+        for slot, caches in abs_tree["period"].items()}
+    if "rem" in abs_tree:
+        out["rem"] = {
+            slot: {n: _leaf(cfg, n, model_shards, stacked=False)
+                   for n in caches}
+            for slot, caches in abs_tree["rem"].items()}
+    return out
+
+
+def _leaf(cfg: ModelConfig, name: str, model_shards: int, stacked: bool):
+    dp = ("pod", "data")
+    lead = (None,) if stacked else ()
+    if name in ("k", "v"):
+        if cfg.n_kv_heads % model_shards == 0:
+            return P(*lead, dp, None, "model", None)
+        return P(*lead, dp, "model", None, None)
+    if name == "S":
+        return P(*lead, dp, None, None, None)
+    if name == "conv":
+        return P(*lead, dp, None, "model" if cfg.d_model % model_shards == 0 else None)
+    if name in ("h", "c", "n", "m"):
+        return P(*lead, dp, None)
+    return P()
+
+
+# ----------------------------------------------------------------------
+# Per-kind decode blocks
+# ----------------------------------------------------------------------
+
+def _attn_decode(x, bp, cfg: ModelConfig, cache, pos, *, window: int):
+    b = x.shape[0]
+    hd = cfg.hd
+    q = (x @ bp["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k_new = (x @ bp["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v_new = (x @ bp["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    posb = pos[:, None]                                    # [B, 1], per lane
+    q = L.rope(q, posb, cfg.rope_theta)
+    k_new = L.rope(k_new, posb, cfg.rope_theta)
+
+    s_c = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % s_c, jnp.minimum(pos, s_c - 1))
+    lanes = jnp.arange(b)
+    k_c = cache["k"].at[lanes, slot].set(
+        k_new[:, 0].astype(cache["k"].dtype))
+    v_c = cache["v"].at[lanes, slot].set(
+        v_new[:, 0].astype(cache["v"].dtype))
+    n_valid = jnp.minimum(pos + 1, s_c)                    # [B]
+    valid = jnp.arange(s_c)[None, :] < n_valid[:, None]    # ring: oldest kept
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k_full = repeat_kv(k_c, n_rep)
+    v_full = repeat_kv(v_c, n_rep)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q, k_full).astype(jnp.float32) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhts,bshd->bthd", probs, v_full)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    return o @ bp["wo"], {"k": k_c, "v": v_c}
+
+
+def _decode_block(x, bp, cfg: ModelConfig, kind: str, cache, pos):
+    if kind in ("attn", "attn_local", "attn_moe"):
+        window = cfg.attn_window if kind == "attn_local" else 0
+        a, new_cache = _attn_decode(L.rms_norm(x, bp["norm1"]), bp, cfg,
+                                    cache, pos, window=window)
+        x = x + a
+        y = L.rms_norm(x, bp["norm2"])
+        if kind == "attn_moe":
+            x = x + moe_block(y, bp, cfg)
+        else:
+            x = x + L.gated_mlp(y, bp["w_gate"], bp["w_up"], bp["w_down"],
+                                cfg.mlp_kind)
+        return x, new_cache
+    if kind == "rglru":
+        y, (conv_st, h_st) = rglru_block(
+            L.rms_norm(x, bp["norm1"]), bp, cfg,
+            conv_state=cache["conv"], h0=cache["h"], return_state=True)
+        x = x + y
+        z = L.rms_norm(x, bp["norm2"])
+        x = x + L.gated_mlp(z, bp["w_gate"], bp["w_up"], bp["w_down"],
+                            cfg.mlp_kind)
+        return x, {"conv": conv_st.astype(cache["conv"].dtype), "h": h_st}
+    if kind == "mlstm":
+        y, (S, n) = mlstm_block(L.rms_norm(x, bp["norm1"]), bp, cfg,
+                                state=(cache["S"], cache["n"]),
+                                return_state=True)
+        return x + y, {"S": S, "n": n}
+    if kind == "slstm":
+        st = (cache["h"], cache["c"], cache["n"], cache["m"])
+        y, (h, c, n, m) = slstm_block(L.rms_norm(x, bp["norm1"]), bp, cfg,
+                                      state=st, return_state=True)
+        return x + y, {"h": h, "c": c, "n": n, "m": m}
+    raise ValueError(kind)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens|embeds) -> (next_token, new_cache).
+
+    One decode step for the whole batch; caches carry everything."""
+
+    def serve_step(params, cache, tokens=None, embeds=None):
+        if embeds is None:
+            x = L.embed(tokens, params["embed"], cfg.embed_scale)
+        else:
+            x = embeds.astype(params["embed"].dtype)
+        x = maybe_shard(x, "dp", None, None)
+        pos = cache["pos"]                                 # i32[B]
+
+        def body(xc, xs):
+            bps, bcs = xs
+            new_caches = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                key = f"{j}_{kind}"
+                xc, nc = _decode_block(xc, bps[key], cfg, kind, bcs[key], pos)
+                new_caches[key] = nc
+            xc = maybe_shard(xc, "dp", None, None)
+            return xc, new_caches
+
+        x, new_period = jax.lax.scan(
+            body, x, (params["period"], cache["period"]))
+
+        new_cache: Dict[str, Any] = {"pos": pos + 1, "period": new_period}
+        if cfg.remainder:
+            new_rem = {}
+            for j, kind in enumerate(cfg.remainder):
+                key = f"{j}_{kind}"
+                x, nc = _decode_block(x, params["rem"][key], cfg, kind,
+                                      cache["rem"][key], pos)
+                new_rem[key] = nc
+            new_cache["rem"] = new_rem
+
+        x = L.rms_norm(x, params["final_norm"])
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("btd,vd->btv", x, table).astype(jnp.float32)
+        logits = maybe_shard(logits, "dp", None, "model")
+        next_token = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        return next_token.astype(jnp.int32), new_cache
+
+    return serve_step

@@ -1,0 +1,129 @@
+"""Ditto-managed KV page / prefix cache — the paper's technique as a
+first-class serving feature.
+
+The serving engine splits each sequence's KV into fixed-size token pages.
+Pages live in a global HBM pool (the "memory pool"); decoding replicas are
+the "clients". Prefix reuse makes pages *cacheable*: a request whose prompt
+shares a page-aligned prefix with earlier traffic can skip prefill for the
+cached pages. When the pool fills, a victim page must be chosen — exactly
+the paper's problem, with exactly the paper's fix:
+
+  * page metadata (insert step, last-touch step, reuse count, size) lives in
+    a sample-friendly table (the core CacheState);
+  * eviction samples K pages and evicts by expert priority (LRU / LFU);
+  * a regret history adapts the expert weights to the request mix — e.g.
+    chatbot traffic (recency-heavy) vs. RAG/few-shot traffic (hot shared
+    prefixes, frequency-heavy).
+
+The adapter below keys pages by a rolling hash of the page-aligned token
+prefix and stores the page-pool index as the cached value.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CacheConfig, access, init_cache, init_clients,
+                        init_stats)
+
+
+def prefix_page_keys(tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """Rolling page-prefix hashes for one prompt: key_i identifies the
+    content of pages [0..i] (prefix identity, not just page content)."""
+    n_pages = len(tokens) // page_size
+    keys = np.zeros(n_pages, np.uint32)
+    h = 14695981039346656037  # FNV-1a over the rolling prefix
+    for i in range(n_pages):
+        page = tokens[i * page_size:(i + 1) * page_size]
+        for t in page.tolist():
+            h = ((h ^ int(t)) * 1099511628211) & 0xFFFFFFFFFFFFFFFF
+        keys[i] = np.uint32(((h >> 32) ^ h) & 0xFFFFFFFF)
+    return np.maximum(keys, 1).astype(np.uint32)  # 0 is the no-op key
+
+
+class DittoPageCache:
+    """Engine-side page/prefix cache over the functional Ditto core.
+
+    n_pages is the HBM page-pool capacity; eviction decisions come from the
+    adaptive sampled-eviction core. Free-pool bookkeeping (which physical
+    page index is free) is host-side engine logic, as in real engines."""
+
+    def __init__(self, n_pages: int, page_size: int, *,
+                 experts=("lru", "lfu"), n_clients: int = 1, seed: int = 0):
+        n_buckets = max(64, int(2 * n_pages // 8))
+        self.cfg = CacheConfig(
+            n_buckets=n_buckets, assoc=8, capacity=n_pages,
+            experts=experts, value_words=1)
+        self.page_size = page_size
+        self.state = init_cache(self.cfg)
+        self.clients = init_clients(self.cfg, n_clients, seed)
+        self.stats = init_stats()
+        self._step = jax.jit(self._step_impl, static_argnums=())
+        self.free = list(range(n_pages))          # physical page indices
+        self.page_of_key: dict = {}               # host mirror for reclaim
+        self.lookups = 0
+        self.hits = 0
+
+    def _step_impl(self, state, clients, stats, keys, values):
+        return access(self.cfg, state, clients, stats, keys, values=values,
+                      insert_on_miss=True)
+
+    def _reclaim(self):
+        """Reconcile host free-list with device-side evictions."""
+        live_keys = set(np.asarray(self.state.key[
+            (np.asarray(self.state.size) != 0)
+            & (np.asarray(self.state.size) != 0xFF)]).tolist())
+        dead = [k for k in self.page_of_key if k not in live_keys]
+        for k in dead:
+            self.free.append(self.page_of_key.pop(k))
+
+    def lookup_or_allocate(self, prompt_tokens: np.ndarray
+                           ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """For one prompt: returns (page_keys, physical_pages, n_cached_prefix).
+
+        Pages [0..n_cached_prefix) can skip prefill (prefix cache hits);
+        the rest were newly allocated."""
+        keys = prefix_page_keys(prompt_tokens, self.page_size)
+        pages = np.zeros(len(keys), np.int64)
+        n_hit = 0
+        still_prefix = True
+        for i, k in enumerate(keys):
+            if len(self.free) == 0:
+                self._reclaim()
+            phys = self.page_of_key.get(int(k))
+            hit = phys is not None
+            if hit and still_prefix:
+                n_hit += 1
+            if not hit:
+                still_prefix = False
+                phys = self.free.pop() if self.free else 0
+                self.page_of_key[int(k)] = phys
+            pages[i] = phys
+            kb = jnp.full((self.clients.fc_slot.shape[0],), 0, jnp.uint32
+                          ).at[0].set(jnp.uint32(k))
+            vb = jnp.zeros((kb.shape[0], 1), jnp.uint32).at[0, 0].set(
+                jnp.uint32(phys))
+            self.state, self.clients, self.stats, res = self._step(
+                self.state, self.clients, self.stats, kb, vb)
+            self.lookups += 1
+            self.hits += int(bool(res.hit[0])) if hit else 0
+        return keys, pages, n_hit
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    @property
+    def weights(self) -> np.ndarray:
+        """Eviction-driving weights: the client-local (regret-updated) ones
+        (global weights only refresh on lazy sync, §4.3.2)."""
+        w = np.asarray(self.clients.local_weights[0])
+        return w / max(w.sum(), 1e-9)
+
+    @property
+    def regrets(self) -> int:
+        return int(self.stats.regrets)

@@ -1,0 +1,6 @@
+from repro.train.optimizer import (AdamWConfig, OptState, init_opt,
+                                   make_train_step, zero_specs)
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["AdamWConfig", "OptState", "init_opt", "make_train_step",
+           "zero_specs", "CheckpointManager"]

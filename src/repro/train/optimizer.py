@@ -1,0 +1,164 @@
+"""AdamW with per-tensor ZeRO-1 sharding + microbatched grad accumulation.
+
+Sharding scheme (the ZeRO-1 collective schedule, per tensor):
+
+  * bf16 compute params: model/TP-sharded, replicated across data.
+  * f32 master + Adam moments: the param spec *extended* by the `data` axis
+    on the first divisible dimension (`zero_specs`) — each data shard owns
+    1/data of every tensor's optimizer state.
+  * backward grads are constrained to the zero spec, so XLA lowers the
+    cross-data reduction as reduce-scatter (not all-reduce);
+  * the updated master casts to bf16 and is constrained back to the param
+    spec — one all-gather over `data` per tensor.
+
+Per-tensor (instead of a flat ravel) matters: XLA reshards one-axis
+extensions efficiently, whereas flat repartitions trigger full
+rematerialization (measured: 71 GiB/device -> ~5 GiB/device on yi-9b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import ModelConfig, forward
+from repro.models.sharding import current_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray   # i32[]
+    master: Any         # f32 tree (zero-sharded)
+    m: Any              # f32 tree
+    v: Any              # f32 tree
+
+
+def zero_specs(param_specs, params_abstract, mesh=None):
+    """Extend each param spec with the data axis on a divisible free dim."""
+    mesh = mesh or current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return param_specs
+    dsize = mesh.shape["data"]
+
+    def extend(spec: P, leaf):
+        parts = list(tuple(spec)) + [None] * (len(leaf.shape) - len(tuple(spec)))
+        for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+            if s is None and dim % dsize == 0 and dim >= dsize:
+                parts[i] = "data"
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(extend, param_specs, params_abstract,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _constrain(tree, specs):
+    if current_mesh() is None or specs is None:
+        return tree
+    return jax.tree.map(
+        lambda s, x: jax.lax.with_sharding_constraint(x, s), specs, tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_opt(params, zspecs=None) -> OptState:
+    master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    zeros = jax.tree.map(jnp.zeros_like, master)
+    master = _constrain(master, zspecs)
+    return OptState(jnp.zeros((), jnp.int32), master,
+                    _constrain(zeros, zspecs),
+                    _constrain(jax.tree.map(jnp.copy, zeros), zspecs))
+
+
+def lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def adamw_update(opt: OptState, grads, cfg: AdamWConfig,
+                 zspecs=None) -> OptState:
+    step = opt.step + 1
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    lr = lr_at(cfg, t)
+
+    def upd(g, m, v, p):
+        g = g * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p
+        return m, v, p - lr * u
+
+    out = jax.tree.map(upd, g32, opt.m, opt.v, opt.master)
+    m = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda x: x[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return OptState(step, _constrain(master, zspecs),
+                    _constrain(m, zspecs), _constrain(v, zspecs))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    n_microbatches: int = 1, remat: str = "full",
+                    param_specs=None, zspecs=None):
+    """Build the jittable train step. batch: {'tokens'|'embeds', 'labels'}
+    with global-batch leading dim; microbatching splits it and accumulates
+    zero-sharded f32 grads across a scan (constant live memory)."""
+
+    def loss_fn(params, mb):
+        return forward(params, cfg, tokens=mb.get("tokens"),
+                       embeds=mb.get("embeds"), labels=mb["labels"],
+                       remat=remat)
+
+    def train_step(params, opt: OptState, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads), zspecs)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_microbatches, -1) + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                acc, loss_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                acc = _constrain(acc, zspecs)
+                return (acc, loss_acc + l), ()
+
+            acc0 = _constrain(jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params), zspecs)
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (acc0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss_sum / n_microbatches
+
+        opt = adamw_update(opt, grads, opt_cfg, zspecs)
+        dtype = jax.tree.leaves(params)[0].dtype
+        new_params = jax.tree.map(lambda mp: mp.astype(dtype), opt.master)
+        new_params = _constrain(new_params, param_specs)
+        return new_params, opt, loss
+
+    return train_step

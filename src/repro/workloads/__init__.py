@@ -1,0 +1,10 @@
+from repro.workloads.gen import (changing_workload, interleave, lfu_friendly,
+                                 loop_window, lru_friendly, mixed_apps,
+                                 object_sizes, scan_polluted_zipf, ycsb,
+                                 zipfian)
+
+__all__ = [
+    "changing_workload", "interleave", "lfu_friendly", "loop_window",
+    "lru_friendly", "mixed_apps", "object_sizes", "scan_polluted_zipf",
+    "ycsb", "zipfian",
+]

@@ -1,0 +1,196 @@
+"""Workload generators (paper §5.1).
+
+YCSB A–D with zipfian request distribution (theta=0.99, 10M keys by default
+in the paper; scaled here), plus synthetic analogues of the FIU / Twitter /
+IBM / CloudPhysics trace *shapes* used by the paper's adaptivity studies:
+
+  * LRU-friendly — strong temporal locality: re-accesses concentrate on a
+    sliding window of recently-used objects (block-IO working sets).
+  * LFU-friendly — a stable zipfian core polluted by one-touch scans; the
+    scans flush an LRU but not an LFU (storage/object-store shape).
+  * changing   — phases alternating between the two (LeCaR Fig. 19 shape).
+  * mixed_apps — two client populations running dissimilar patterns
+    (Figs. 3/20: the overall pattern is the client-weighted mixture).
+
+All generators return flat uint32 key streams; ``interleave`` shapes them
+into [T, C] concurrent-client request tensors (the paper's observation that
+concurrency itself changes the access pattern falls out of this reshaping).
+
+Keys are uint32 >= 1 (0 is the no-op pad). Ops: 0=GET (read-through), 1=SET.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _zipf_probs(n: int, theta: float) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-theta)
+    return p / p.sum()
+
+
+def zipfian(n_requests: int, n_keys: int, theta: float = 0.99,
+            seed: int = 0, scramble: bool = True) -> np.ndarray:
+    """YCSB-style (scrambled) zipfian key stream."""
+    rng = np.random.default_rng(seed)
+    p = _zipf_probs(n_keys, theta)
+    ranks = rng.choice(n_keys, size=n_requests, p=p)
+    if scramble:
+        perm = rng.permutation(n_keys)
+        ranks = perm[ranks]
+    return (ranks + 1).astype(np.uint32)
+
+
+def ycsb(workload: str, n_requests: int, n_keys: int = 100_000,
+         theta: float = 0.99, seed: int = 0):
+    """YCSB core workloads. Returns (keys u32[N], is_write bool[N])."""
+    rng = np.random.default_rng(seed + 17)
+    keys = zipfian(n_requests, n_keys, theta, seed)
+    w = workload.upper()
+    if w == "A":
+        is_write = rng.random(n_requests) < 0.5
+    elif w == "B":
+        is_write = rng.random(n_requests) < 0.05
+    elif w == "C":
+        is_write = np.zeros(n_requests, bool)
+    elif w == "D":
+        # 95% reads (latest-skewed), 5% inserts of fresh keys.
+        is_write = rng.random(n_requests) < 0.05
+        fresh = n_keys + 1 + np.arange(n_requests, dtype=np.uint32)
+        keys = np.where(is_write, fresh, keys).astype(np.uint32)
+    else:
+        raise ValueError(f"unknown YCSB workload {workload!r}")
+    return keys, is_write
+
+
+def lru_friendly(n_requests: int, n_keys: int = 50_000, window: int = 512,
+                 p_reuse: float = 0.9, seed: int = 0) -> np.ndarray:
+    """Sliding-window temporal locality: LRU ≫ LFU."""
+    rng = np.random.default_rng(seed)
+    out = np.empty(n_requests, np.uint32)
+    recent = np.zeros(window, np.uint32)
+    filled = 0
+    nxt = 1
+    reuse = rng.random(n_requests)
+    pick = rng.integers(0, window, n_requests)
+    for i in range(n_requests):
+        if filled > 0 and reuse[i] < p_reuse:
+            k = recent[pick[i] % filled]
+        else:
+            k = nxt
+            nxt = (nxt % n_keys) + 1
+        out[i] = k
+        recent[i % window] = k
+        filled = min(filled + 1, window)
+    return out
+
+
+def scan_polluted_zipf(n_requests: int, hot_keys: int = 4_000,
+                       theta: float = 1.1, scan_frac: float = 0.3,
+                       scan_len: int = 2_000, seed: int = 0) -> np.ndarray:
+    """Stable zipfian core + one-touch scan bursts: LFU ≫ LRU."""
+    rng = np.random.default_rng(seed)
+    p = _zipf_probs(hot_keys, theta)
+    out = np.empty(n_requests, np.uint32)
+    i = 0
+    scan_base = hot_keys + 1
+    while i < n_requests:
+        if rng.random() < scan_frac:
+            n = min(scan_len, n_requests - i)
+            out[i:i + n] = scan_base + np.arange(n, dtype=np.uint32)
+            scan_base += n
+            i += n
+        else:
+            n = min(scan_len, n_requests - i)
+            out[i:i + n] = rng.choice(hot_keys, size=n, p=p).astype(np.uint32) + 1
+            i += n
+    return out
+
+
+lfu_friendly = scan_polluted_zipf
+
+
+def changing_workload(n_requests: int, n_phases: int = 4, seed: int = 0,
+                      key_offset: int = 0) -> np.ndarray:
+    """Phases alternating LRU-friendly / LFU-friendly (Fig. 19 shape)."""
+    per = n_requests // n_phases
+    parts = []
+    for ph in range(n_phases):
+        if ph % 2 == 0:
+            parts.append(lru_friendly(per, seed=seed + ph))
+        else:
+            parts.append(lfu_friendly(per, seed=seed + ph) + np.uint32(100_000))
+    out = np.concatenate(parts)[:n_requests]
+    return (out + np.uint32(key_offset)).astype(np.uint32)
+
+
+def loop_window(n_requests: int, capacity: int, n_phases: int = 6,
+                window: int = 700, p_reuse: float = 0.9,
+                seed: int = 0) -> np.ndarray:
+    """Changing workload with strong expert divergence (Fig. 19 shape):
+    cyclic-loop phases (LRU-pathological, frequency helps) alternating with
+    fresh sliding-window phases (recency helps, stale frequencies mislead
+    LFU). Adaptive caching should beat BOTH single experts here."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    base = 1_000_000
+    for ph in range(n_phases):
+        n = n_requests // n_phases
+        if ph % 2 == 0:
+            loop_keys = int(capacity * 4 // 3)
+            parts.append((np.arange(n, dtype=np.uint32) % loop_keys) + 1)
+        else:
+            out = np.empty(n, np.uint32)
+            recent = np.zeros(window, np.uint32)
+            filled, nxt = 0, base
+            base += 300_000
+            ru = rng.random(n)
+            pk = rng.integers(0, window, n)
+            for i in range(n):
+                if filled and ru[i] < p_reuse:
+                    k = recent[pk[i] % filled]
+                else:
+                    k = nxt
+                    nxt += 1
+                out[i] = k
+                recent[i % window] = k
+                filled = min(filled + 1, window)
+            parts.append(out)
+    return np.concatenate(parts)
+
+
+def mixed_apps(n_requests: int, n_clients: int, lru_fraction: float,
+               seed: int = 0) -> np.ndarray:
+    """[T, C] tensor: a fraction of clients runs an LRU-friendly app, the
+    rest an LFU-friendly app with a disjoint key space (Figs. 3/20)."""
+    n_lru = int(round(lru_fraction * n_clients))
+    T = n_requests // n_clients
+    cols = []
+    for c in range(n_clients):
+        if c < n_lru:
+            cols.append(lru_friendly(T, seed=seed * 131 + c))
+        else:
+            cols.append(lfu_friendly(T, seed=seed * 131 + c) + np.uint32(500_000))
+    return np.stack(cols, axis=1)
+
+
+def interleave(keys: np.ndarray, n_clients: int,
+               is_write: np.ndarray | None = None):
+    """Shape a flat stream into [T, C] concurrent-client steps.
+
+    Clients execute disjoint round-robin shards of the stream concurrently —
+    the paper's trace-sharding across client threads (§5.1), which is what
+    makes the effective access pattern depend on the client count.
+    """
+    T = len(keys) // n_clients
+    k = keys[:T * n_clients].reshape(T, n_clients)
+    if is_write is None:
+        return k
+    return k, is_write[:T * n_clients].reshape(T, n_clients)
+
+
+def object_sizes(keys: np.ndarray, max_blocks: int = 8, seed: int = 3) -> np.ndarray:
+    """Deterministic pseudo-random size (in 64B blocks) per key."""
+    x = keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(seed)
+    return ((x >> np.uint64(33)) % np.uint64(max_blocks) + np.uint64(1)).astype(np.uint32)

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def single_device_guard():
+    # Per the brief: tests and benches see ONE device; only dryrun.py sets
+    # the 512-placeholder flag (multi-device paths are subprocess tests).
+    assert len(jax.devices()) >= 1
+    yield
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""Distributed adaptive caching claims (paper §5.4, Figs. 16-22)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, make_cache, run_trace
+from repro.baselines import PyDitto, simulate_policy
+from repro.workloads import (interleave, lfu_friendly, loop_window,
+                             lru_friendly)
+
+CAP = 1024
+C = 8
+
+
+def run_jax(keys_flat, experts, capacity=CAP, seed=0):
+    cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
+                      capacity=capacity, experts=experts)
+    k2 = interleave(keys_flat, C)
+    st, cl, _ = make_cache(cfg, C, seed)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(
+        st, cl, jnp.asarray(k2))
+    hr = float(tr.hits.sum()) / float(tr.ops.sum())
+    return hr, np.asarray(tr.state.weights)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    n = 60_000
+    return {
+        "lru": lru_friendly(n, seed=1),
+        "lfu": lfu_friendly(n, seed=1),
+        "changing": loop_window(n, CAP, seed=5),
+    }
+
+
+def test_sampled_matches_exact_when_friendly(traces):
+    """C1: K=5 sampled eviction approximates the exact policy (Redis)."""
+    exact = simulate_policy(traces["lru"], CAP, "lru")
+    sampled, _ = run_jax(traces["lru"], ("lru",))
+    assert abs(sampled - exact) < 0.05
+
+
+def test_jax_matches_python_reference(traces):
+    """The vectorized implementation agrees with the sequential oracle."""
+    for exps in (("lru",), ("lfu",)):
+        py = PyDitto(CAP, experts=exps, seed=0).run(traces["lfu"])
+        jx, _ = run_jax(traces["lfu"], exps)
+        assert abs(py - jx) < 0.06, (exps, py, jx)
+
+
+def test_adaptive_tracks_best_expert(traces):
+    """C2a: Ditto ~ max(Ditto-LRU, Ditto-LFU) on static workloads."""
+    for name in ("lru", "lfu"):
+        a, _ = run_jax(traces[name], ("lru",))
+        b, _ = run_jax(traces[name], ("lfu",))
+        ada, _ = run_jax(traces[name], ("lru", "lfu"))
+        assert ada >= max(a, b) - 0.03, (name, a, b, ada)
+
+
+def test_adaptive_beats_both_on_changing(traces):
+    """C2b (Fig. 19): on phase-changing workloads the adaptive cache beats
+    BOTH fixed experts."""
+    a, _ = run_jax(traces["changing"], ("lru",))
+    b, _ = run_jax(traces["changing"], ("lfu",))
+    ada, w = run_jax(traces["changing"], ("lru", "lfu"))
+    assert ada > min(a, b)
+    assert ada >= max(a, b) - 0.005, (a, b, ada)
+
+
+def test_weights_move_toward_better_expert(traces):
+    """Regret minimization: the frequency expert keeps its weight on the
+    scan-polluted workload (recency gets blamed for hot-key evictions)."""
+    _, w = run_jax(traces["lfu"], ("lru", "lfu"))
+    assert not np.allclose(w, [0.5, 0.5])  # learning happened
+
+
+def test_adaptivity_under_client_count_change(traces):
+    """Fig. 21 mechanism: different concurrency, adaptive stays near best."""
+    for c in (2, 32):
+        cfg = CacheConfig(n_buckets=512, assoc=8, capacity=CAP,
+                          experts=("lru", "lfu"))
+        k2 = interleave(traces["changing"], c)
+        st, cl, _ = make_cache(cfg, c)
+        tr = jax.jit(lambda s, cc, k: run_trace(cfg, s, cc, k))(
+            st, cl, jnp.asarray(k2))
+        hr = float(tr.hits.sum()) / float(tr.ops.sum())
+        assert 0.3 < hr < 1.0

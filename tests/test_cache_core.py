@@ -1,0 +1,123 @@
+"""Core Ditto cache behaviour: hash table, eviction, history, capacity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CacheConfig, access, make_cache, run_trace)
+from repro.core.types import SIZE_HISTORY
+from repro.workloads import interleave, zipfian
+
+U32 = jnp.uint32
+
+
+def small_cfg(**kw):
+    base = dict(n_buckets=256, assoc=8, capacity=512, experts=("lru", "lfu"))
+    base.update(kw)
+    return CacheConfig(**base)
+
+
+def test_set_get_roundtrip():
+    cfg = small_cfg()
+    st, cl, sa = make_cache(cfg, 8)
+    keys = jnp.arange(1, 9, dtype=U32)
+    vals = jnp.stack([keys * 3, keys * 7], axis=1).astype(U32)
+    st, cl, sa, r = access(cfg, st, cl, sa, keys,
+                           is_write=jnp.ones(8, bool), values=vals)
+    assert not bool(r.hit.any())
+    st, cl, sa, r = access(cfg, st, cl, sa, keys)
+    assert bool(r.hit.all())
+    np.testing.assert_array_equal(np.asarray(r.value), np.asarray(vals))
+
+
+def test_padded_lanes_are_noops():
+    cfg = small_cfg()
+    st, cl, sa = make_cache(cfg, 4)
+    keys = jnp.array([5, 0, 0, 9], dtype=U32)
+    st, cl, sa, r = access(cfg, st, cl, sa, keys)
+    assert int(st.n_cached) == 2
+    assert int(sa.gets) == 2
+
+
+def test_no_eviction_parity_with_dict():
+    """With capacity >> footprint the hit pattern must EXACTLY match a
+    plain dict read-through cache."""
+    cfg = small_cfg(n_buckets=4096, capacity=8192)
+    C, T = 4, 200
+    keys = zipfian(C * T, 500, seed=3).reshape(T, C)
+    st, cl, sa = make_cache(cfg, C)
+    seen = set()
+    ok = True
+    for t in range(T):
+        st, cl, sa, r = access(cfg, st, cl, sa, jnp.asarray(keys[t]))
+        got = np.asarray(r.hit)
+        row = keys[t]
+        # within-step duplicate inserts: first occurrence decides
+        expect = np.array([k in seen for k in row])
+        ok &= bool((got == expect).all())
+        seen.update(row.tolist())
+    assert ok
+
+
+def test_capacity_invariant_and_live_count():
+    cfg = small_cfg()
+    C, T = 16, 500
+    keys = zipfian(C * T, 5000, seed=0).reshape(T, C)
+    st, cl, sa = make_cache(cfg, C)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(st, cl,
+                                                          jnp.asarray(keys))
+    live = int(((tr.state.size != 0) & (tr.state.size != SIZE_HISTORY)).sum())
+    assert live == int(tr.state.n_cached)
+    # amortized enforcement: within one batch width of the budget
+    assert live <= cfg.capacity + C
+
+
+def test_history_entries_written_on_eviction():
+    cfg = small_cfg()
+    C, T = 16, 400
+    keys = zipfian(C * T, 5000, seed=1).reshape(T, C)
+    st, cl, sa = make_cache(cfg, C)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(st, cl,
+                                                          jnp.asarray(keys))
+    n_hist = int((tr.state.size == SIZE_HISTORY).sum())
+    assert int(tr.stats.evictions) > 0
+    assert n_hist > 0
+    assert int(tr.state.hist_ctr) == int(tr.stats.evictions)
+
+
+def test_single_expert_skips_history():
+    cfg = small_cfg(experts=("lru",))
+    C, T = 16, 300
+    keys = zipfian(C * T, 5000, seed=1).reshape(T, C)
+    st, cl, sa = make_cache(cfg, C)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(st, cl,
+                                                          jnp.asarray(keys))
+    assert int((tr.state.size == SIZE_HISTORY).sum()) == 0
+    assert int(tr.stats.regrets) == 0
+
+
+def test_elastic_capacity_shrink_converges():
+    cfg = small_cfg()
+    C = 16
+    st, cl, sa = make_cache(cfg, C)
+    keys = zipfian(C * 300, 5000, seed=2).reshape(300, C)
+    for t in range(150):
+        st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]))
+    st = st._replace(capacity=jnp.asarray(128, jnp.int32))
+    for t in range(150, 300):
+        st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]))
+    assert int(st.n_cached) <= 128 + C
+
+
+def test_op_accounting_consistency():
+    cfg = small_cfg()
+    C, T = 8, 200
+    keys = zipfian(C * T, 2000, seed=4).reshape(T, C)
+    st, cl, sa = make_cache(cfg, C)
+    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(st, cl,
+                                                          jnp.asarray(keys))
+    s = tr.stats
+    assert int(s.hits) + int(s.misses) == int(s.gets) + int(s.sets)
+    assert int(s.rdma_read) >= int(s.gets)  # >= one bucket read per op
+    assert int(s.fc_flushes) <= int(s.hits)  # write combining saves FAAs

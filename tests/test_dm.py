@@ -1,0 +1,89 @@
+"""DM runtime (shard_map memory pool) — multi-device subprocess tests.
+
+The main test session sees one device per the brief; the 8-shard pool runs
+in a subprocess with forced host device count.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return out.stdout
+
+
+PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CacheConfig
+from repro.dm import dm_make, dm_access, dm_set_capacity
+from repro.workloads import zipfian
+cfg = CacheConfig(n_buckets=1024, assoc=8, capacity=2048, experts=("lru","lfu"))
+mesh, dm, local = dm_make(cfg, n_shards=8, lanes_per_shard=8)
+stepf = jax.jit(functools.partial(dm_access, mesh, local))
+keys = zipfian(64*250, 20000, seed=0).reshape(250, 64)
+"""
+
+
+@pytest.mark.slow
+def test_dm_hit_rate_and_balance():
+    out = run_sub(PRELUDE + """
+hits = ops = 0
+for t in range(250):
+    dm, h = stepf(dm, jnp.asarray(keys[t]))
+    hits += int(h.sum()); ops += 64
+hr = hits / ops
+nc = np.asarray(dm.state.n_cached)
+assert 0.4 < hr < 0.95, hr
+assert nc.sum() <= 2048 + 64, nc
+assert nc.max() - nc.min() < 64, nc  # hash balance across shards
+st = jax.tree.map(np.asarray, dm.stats)
+assert st.evictions.sum() > 0
+print("OK", hr)
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dm_elastic_resize_no_migration():
+    out = run_sub(PRELUDE + """
+for t in range(120):
+    dm, h = stepf(dm, jnp.asarray(keys[t]))
+before_keys = np.asarray(dm.state.key).copy()
+dm = dm_set_capacity(dm, 1024, 8)   # one scalar write per shard
+# the resize itself moved NO data:
+assert np.array_equal(before_keys, np.asarray(dm.state.key))
+for t in range(120, 250):
+    dm, h = stepf(dm, jnp.asarray(keys[t]))
+assert np.asarray(dm.state.n_cached).sum() <= 1024 + 64
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dm_compute_elasticity_lanes():
+    """Client-lane width changes per step without touching pool state."""
+    out = run_sub(PRELUDE + """
+for t in range(50):
+    dm, h = stepf(dm, jnp.asarray(keys[t]))
+# halve the client lanes (compute shrink): new jit, same pool state
+step_small = jax.jit(functools.partial(dm_access, mesh, local))
+small = keys[50:100, :32]
+for t in range(50):
+    dm, h = step_small(dm, jnp.asarray(np.ascontiguousarray(small[t])))
+print("OK", int(np.asarray(dm.state.n_cached).sum()))
+""")
+    assert "OK" in out

@@ -1,0 +1,69 @@
+"""Continuous-batching engine: lane isolation + prefix reuse."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.models import init_params
+from repro.serve.engine import DecodeEngine
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(get_arch("smollm-135m"))
+    params = init_params(RNG, cfg)
+    return cfg, params
+
+
+def gen_one(cfg, params, prompt, max_new):
+    eng = DecodeEngine(cfg, params, lanes=1, max_len=64)
+    eng.submit(prompt, max_new, rid=0)
+    done = eng.run()
+    return done[0].out
+
+
+def test_lane_isolation_staggered(setup):
+    """Two requests staggered across shared lanes produce the same tokens
+    as each run alone (per-lane positions + lane reset are correct)."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(1, cfg.vocab_size, 12).astype(np.uint32)
+    p2 = rng.integers(1, cfg.vocab_size, 20).astype(np.uint32)
+    solo1 = gen_one(cfg, params, p1, 6)
+    solo2 = gen_one(cfg, params, p2, 6)
+
+    eng = DecodeEngine(cfg, params, lanes=2, max_len=64)
+    eng.submit(p1, 6, rid=1)
+    eng.submit(p2, 6, rid=2)
+    done = {r.rid: r.out for r in eng.run()}
+    assert done[1] == solo1
+    assert done[2] == solo2
+
+
+def test_lane_reuse_after_finish(setup):
+    """A third request admitted onto a freed lane decodes correctly."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.uint32)
+               for n in (8, 24, 8)]
+    solo = [gen_one(cfg, params, p, 4) for p in prompts]
+    eng = DecodeEngine(cfg, params, lanes=1, max_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 4, rid=i)
+    done = {r.rid: r.out for r in eng.run()}
+    assert [done[i] for i in range(3)] == solo
+
+
+def test_prefix_cache_accounting(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    shared = rng.integers(1, cfg.vocab_size, 32).astype(np.uint32)
+    eng = DecodeEngine(cfg, params, lanes=2, max_len=64, page_size=16)
+    for i in range(4):
+        eng.submit(shared, 2, rid=i)
+    done = eng.run()
+    assert len(done) == 4
+    assert sum(r.pages_skipped for r in done) >= 2  # later requests reuse

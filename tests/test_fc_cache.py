@@ -1,0 +1,68 @@
+"""Frequency-counter cache (§4.2.2): write combining with bounded lag."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CacheConfig, init_clients
+from repro.core.fc_cache import fc_access, fc_apply
+
+
+def cfg_with(fc_size=4, fc_threshold=3, use_fc=True):
+    return CacheConfig(n_buckets=64, assoc=8, capacity=128,
+                       fc_size=fc_size, fc_threshold=fc_threshold,
+                       use_fc=use_fc)
+
+
+def run_steps(cfg, slot_seq):
+    """slot_seq: [T][C] per-step slot accesses. Returns (freq table,
+    pending deltas, n_faa)."""
+    C = len(slot_seq[0])
+    clients = init_clients(cfg, C)
+    freq = jnp.zeros((512,), jnp.uint32)
+    faa = 0
+    for t, slots in enumerate(slot_seq):
+        clients, emit = fc_access(cfg, clients,
+                                  jnp.asarray(slots, jnp.int32),
+                                  jnp.uint32(t + 1))
+        freq = fc_apply(freq, emit)
+        faa += int(emit.n_faa)
+    return freq, clients, faa
+
+
+def test_threshold_flush():
+    cfg = cfg_with(fc_threshold=3)
+    # one client hammers slot 7: flush every 3 increments
+    seq = [[7] for _ in range(9)]
+    freq, clients, faa = run_steps(cfg, seq)
+    assert int(freq[7]) == 9
+    assert faa == 3  # 9 increments / threshold 3
+
+
+def test_capacity_eviction_flush():
+    cfg = cfg_with(fc_size=2, fc_threshold=100)
+    seq = [[1], [2], [3], [4]]  # forces oldest-entry eviction flushes
+    freq, clients, faa = run_steps(cfg, seq)
+    total = int(freq.sum()) + int(clients.fc_delta.sum())
+    assert total == 4  # conservation
+    assert faa == 2
+
+
+def test_fc_disabled_issues_faa_per_access():
+    cfg = cfg_with(use_fc=False)
+    seq = [[5] for _ in range(6)]
+    freq, clients, faa = run_steps(cfg, seq)
+    assert int(freq[5]) == 6
+    assert faa == 6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(min_value=-1, max_value=30),
+                         min_size=4, max_size=4), min_size=1, max_size=30),
+       st.integers(min_value=2, max_value=8))
+def test_conservation_property(seq, thresh):
+    """No increment is ever lost or duplicated: table + pending == issued."""
+    cfg = cfg_with(fc_size=4, fc_threshold=thresh)
+    freq, clients, _ = run_steps(cfg, seq)
+    issued = sum(1 for row in seq for s in row if s >= 0)
+    assert int(freq.sum()) + int(clients.fc_delta.sum()) == issued

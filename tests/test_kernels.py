@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import bucket_of, hash_key
+from repro.kernels import ops, ref
+
+
+def make_table(rng, C, W, live_frac=0.4):
+    size = np.zeros(C + W, np.float32)
+    n_live = int(C * live_frac)
+    idx = rng.choice(C, n_live, replace=False)
+    size[idx] = rng.integers(1, 9, n_live)
+    ins = rng.integers(0, 1000, C + W).astype(np.float32)
+    last = rng.integers(0, 1000, C + W).astype(np.float32)
+    freq = rng.integers(1, 50, C + W).astype(np.float32)
+    return size, ins, last, freq
+
+
+@pytest.mark.parametrize("C,W,B,experts", [
+    (512, 20, 8, ("lru", "lfu")),
+    (2048, 20, 32, ("lru", "lfu")),
+    (2048, 12, 16, ("lru", "lfu", "fifo", "size")),
+    (4096, 24, 64, ("hyperbolic", "lfu")),
+])
+def test_sampled_eviction_matches_ref(rng, C, W, B, experts):
+    size, ins, last, freq = make_table(rng, C, W)
+    offs = rng.integers(0, C, B).astype(np.int32)
+    choice = rng.integers(0, len(experts), B).astype(np.int32)
+    v1, c1 = ops.sampled_eviction_op(size, ins, last, freq, offs, choice,
+                                     1000.0, window=W, experts=experts)
+    v2, c2 = ref.sampled_eviction_ref(
+        jnp.asarray(size), jnp.asarray(ins), jnp.asarray(last),
+        jnp.asarray(freq), jnp.asarray(offs), jnp.asarray(choice),
+        1000.0, window=W, k=5, experts=experts)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_sampled_eviction_empty_table(rng):
+    C, W, B = 512, 20, 8
+    size = np.zeros(C + W, np.float32)  # nothing live
+    ins = last = freq = np.ones(C + W, np.float32)
+    offs = rng.integers(0, C, B).astype(np.int32)
+    choice = np.zeros(B, np.int32)
+    v, c = ops.sampled_eviction_op(size, ins, last, freq, offs, choice, 10.0)
+    assert (np.asarray(v) == -1).all()
+    assert (np.asarray(c) == -1).all()
+
+
+@pytest.mark.parametrize("C,A,B", [(512, 8, 16), (4096, 8, 32), (1024, 4, 8)])
+def test_bucket_lookup_matches_ref(rng, C, A, B):
+    tk = np.zeros(C, np.uint32)
+    tsz = np.zeros(C, np.uint32)
+    put = rng.integers(1, 1 << 31, 300).astype(np.uint32)
+    hs = np.asarray(hash_key(jnp.asarray(put)))
+    bs = hs % (C // A)
+    placed = []
+    for k, b in zip(put, bs):
+        for a in range(A):
+            s = b * A + a
+            if tsz[s] == 0:
+                tk[s] = k
+                tsz[s] = 1
+                placed.append(k)
+                break
+    q = np.concatenate([np.array(placed[:B // 2], np.uint32),
+                        rng.integers(1, 1 << 31, B - B // 2).astype(np.uint32)])
+    f1, s1 = ops.bucket_lookup_op(tk, tsz, q, assoc=A)
+    f2, s2 = ref.bucket_lookup_ref(jnp.asarray(tk), jnp.asarray(tsz),
+                                   jnp.asarray(q), assoc=A)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert int(f1.sum()) >= B // 2  # the planted keys are found
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_metadata_update_property(seed):
+    rng = np.random.default_rng(seed)
+    C, B = 1024, 32
+    freq = rng.integers(0, 100, C).astype(np.float32)
+    last = rng.integers(0, 100, C).astype(np.float32)
+    slots = rng.integers(-1, C, B).astype(np.int32)  # includes no-ops & dups
+    deltas = rng.integers(1, 10, B).astype(np.float32)
+    r1 = ops.metadata_update_op(freq, last, slots, deltas, 777.0)
+    r2 = ref.metadata_update_ref(jnp.asarray(freq), jnp.asarray(last),
+                                 jnp.asarray(slots), jnp.asarray(deltas),
+                                 777.0)
+    np.testing.assert_allclose(np.asarray(r1[0]), np.asarray(r2[0]))
+    np.testing.assert_array_equal(np.asarray(r1[1]), np.asarray(r2[1]))
+
+
+def test_metadata_update_combines_duplicates():
+    freq = np.zeros(512, np.float32)
+    last = np.zeros(512, np.float32)
+    slots = np.array([7, 7, 7, -1, 9, 9, 3, 3], np.int32)
+    deltas = np.ones(8, np.float32)
+    f2, l2 = ops.metadata_update_op(freq, last, slots, deltas, 5.0)
+    assert float(f2[7]) == 3 and float(f2[9]) == 2 and float(f2[3]) == 2
+    assert float(l2[7]) == 5.0 and float(l2[0]) == 0.0
+
+
+@pytest.mark.parametrize("b,t,h,d,bq,bk,dtype", [
+    (2, 256, 4, 64, 128, 128, jnp.float32),
+    (1, 512, 2, 128, 128, 64, jnp.float32),
+    (2, 128, 3, 32, 64, 128, jnp.float32),
+    (2, 256, 2, 64, 128, 128, jnp.bfloat16),
+])
+def test_flash_attention_matches_oracle(b, t, h, d, bq, bk, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import full_attention
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (b, t, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, t, h, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, t, h, d)).astype(dtype)
+    o1 = flash_attention(q, k, v, blk_q=bq, blk_k=bk).astype(jnp.float32)
+    o2 = full_attention(q, k, v).astype(jnp.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,108 @@
+"""The 12 caching algorithms as priority functions (Table 3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALL_ALGORITHMS, loc_of
+from repro.core.priority import REGISTRY, priorities, update_ext, fresh_ext
+from repro.core.types import MDView
+
+
+def md(size=1.0, ins=0.0, last=0.0, freq=1.0, ext=None, clock=100.0):
+    e = jnp.zeros((4,), jnp.float32) if ext is None else jnp.asarray(ext)
+    return MDView(jnp.float32(size), jnp.float32(ins), jnp.float32(last),
+                  jnp.float32(freq), e, jnp.float32(clock),
+                  jnp.float32(0.0), jnp.float32(1.0))
+
+
+def pr(name, m):
+    return float(REGISTRY[name].priority(m))
+
+
+def test_all_twelve_registered():
+    assert len(ALL_ALGORITHMS) == 12
+
+
+def test_lru_evicts_least_recent():
+    assert pr("lru", md(last=5)) < pr("lru", md(last=50))
+
+
+def test_mru_evicts_most_recent():
+    assert pr("mru", md(last=50)) < pr("mru", md(last=5))
+
+
+def test_lfu_evicts_least_frequent():
+    assert pr("lfu", md(freq=2)) < pr("lfu", md(freq=20))
+
+
+def test_fifo_evicts_oldest_insert():
+    assert pr("fifo", md(ins=1)) < pr("fifo", md(ins=10))
+
+
+def test_size_evicts_largest():
+    assert pr("size", md(size=8)) < pr("size", md(size=1))
+
+
+def test_gds_prefers_evicting_cheap_large():
+    assert pr("gds", md(size=8)) < pr("gds", md(size=1))
+
+
+def test_gdsf_weighs_frequency():
+    assert pr("gdsf", md(freq=1, size=4)) < pr("gdsf", md(freq=10, size=4))
+
+
+def test_lfuda_inflation_shifts_priorities():
+    a = md(freq=3)
+    b = a._replace(gds_L=jnp.float32(10.0))
+    assert pr("lfuda", b) == pytest.approx(pr("lfuda", a) + 10.0)
+
+
+def test_hyperbolic_rate():
+    # same freq, older object -> lower rate -> evicted first
+    assert pr("hyperbolic", md(freq=4, ins=0)) < pr("hyperbolic",
+                                                    md(freq=4, ins=90))
+
+
+def test_lruk_uses_kth_access_and_fifo_before_k():
+    young = md(freq=1, ins=7)  # fewer than K accesses -> insert_ts
+    assert pr("lruk", young) == 7
+    ext = jnp.array([40.0, 90.0, 0, 0])
+    old = md(freq=5, ext=ext)
+    assert pr("lruk", old) == 40.0  # older of the ring entries
+
+
+def test_lrfu_decays_toward_lru_of_crf():
+    hot = md(ext=jnp.array([0, 0, 8.0, 0]), last=99)
+    cold = md(ext=jnp.array([0, 0, 8.0, 0]), last=10)
+    assert pr("lrfu", cold) < pr("lrfu", hot)
+
+
+def test_lirs_evicts_large_reuse_distance():
+    big_irr = md(ext=jnp.array([0, 0, 0, 500.0]), last=99)
+    small_irr = md(ext=jnp.array([0, 0, 0, 2.0]), last=99)
+    assert pr("lirs", big_irr) < pr("lirs", small_irr)
+
+
+def test_update_ext_maintains_lruk_ring_and_crf():
+    ext = fresh_ext(jnp.float32(10.0))
+    # second access at t=20: freq 1 -> 2, ring slot 0
+    ext = update_ext(ext, jnp.float32(10.0), jnp.float32(1.0),
+                     jnp.float32(20.0))
+    assert float(ext[..., 0]) == 20.0
+    crf = float(ext[..., 2])
+    assert 1.0 < crf < 2.0  # 1 + decayed previous
+    assert float(ext[..., 3]) == 10.0  # IRR = gap
+
+
+def test_flexibility_loc_budget():
+    """Table 3: every algorithm integrates in a handful of lines."""
+    for name in ALL_ALGORITHMS:
+        assert loc_of(name) <= 23, name
+
+
+def test_priorities_stack_shape():
+    m = md()
+    out = priorities(MDView(*[jnp.broadcast_to(x, (3, 5) + x.shape)
+                              for x in m]), ("lru", "lfu", "gdsf"))
+    assert out.shape == (3, 5, 3)

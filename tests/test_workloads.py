@@ -1,0 +1,77 @@
+"""Workload generators: shapes, determinism, statistical shape."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import simulate_policy
+from repro.workloads import (interleave, lfu_friendly, loop_window,
+                             lru_friendly, mixed_apps, object_sizes, ycsb,
+                             zipfian)
+
+
+def test_zipfian_skew():
+    keys = zipfian(50_000, 10_000, theta=0.99, seed=0, scramble=False)
+    _, counts = np.unique(keys, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[0] > 20 * np.median(counts)  # heavy head
+    assert keys.min() >= 1
+
+
+def test_zipfian_deterministic():
+    a = zipfian(1000, 500, seed=7)
+    b = zipfian(1000, 500, seed=7)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("w,frac", [("A", 0.5), ("B", 0.05), ("C", 0.0)])
+def test_ycsb_write_fractions(w, frac):
+    keys, wr = ycsb(w, 20_000, seed=1)
+    assert abs(wr.mean() - frac) < 0.02
+    assert keys.dtype == np.uint32
+
+
+def test_ycsb_d_inserts_fresh_keys():
+    keys, wr = ycsb("D", 10_000, n_keys=1000, seed=2)
+    assert keys[wr].min() > 1000  # inserts beyond the preload range
+
+
+def test_lru_friendly_favors_lru():
+    tr = lru_friendly(40_000, seed=0)
+    lru = simulate_policy(tr, 1024, "lru")
+    lfu = simulate_policy(tr, 1024, "lfu")
+    assert lru > lfu + 0.2
+
+
+def test_lfu_friendly_favors_lfu():
+    tr = lfu_friendly(40_000, seed=0)
+    lru = simulate_policy(tr, 1024, "lru")
+    lfu = simulate_policy(tr, 1024, "lfu")
+    assert lfu > lru
+
+
+def test_loop_window_phases_flip_best_policy():
+    tr = loop_window(60_000, 1024, seed=0)
+    lru = simulate_policy(tr, 1024, "lru")
+    lfu = simulate_policy(tr, 1024, "lfu")
+    assert abs(lru - lfu) > 0.05  # experts genuinely diverge
+
+
+def test_interleave_shape_and_order():
+    keys = np.arange(1, 101, dtype=np.uint32)
+    t = interleave(keys, 10)
+    assert t.shape == (10, 10)
+    np.testing.assert_array_equal(t[0], np.arange(1, 11))
+
+
+def test_mixed_apps_key_spaces_disjoint():
+    t = mixed_apps(8_000, 8, lru_fraction=0.5, seed=1)
+    lru_keys = set(t[:, :4].ravel().tolist())
+    lfu_keys = set(t[:, 4:].ravel().tolist())
+    assert not (lru_keys & lfu_keys)
+
+
+def test_object_sizes_deterministic_per_key():
+    keys = np.array([5, 5, 9, 9], np.uint32)
+    s = object_sizes(keys)
+    assert s[0] == s[1] and s[2] == s[3]
+    assert s.min() >= 1 and s.max() <= 8
