@@ -1,0 +1,10 @@
+.PHONY: check check-fast test
+
+check:
+	scripts/check.sh
+
+check-fast:
+	scripts/check.sh --fast
+
+test:
+	PYTHONPATH=src python -m pytest -x -q

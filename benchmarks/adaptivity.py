@@ -9,6 +9,8 @@ Penalized throughput charges 500us per miss (storage fetch).
 from __future__ import annotations
 
 from repro.baselines import simulate_policy
+from repro.core import CacheConfig
+from repro.elastic import run_scenario
 from benchmarks.common import emit, hit_rate, penalized_throughput, run_ditto
 from repro.workloads import (lfu_friendly, loop_window, lru_friendly,
                              zipfian)
@@ -59,6 +61,36 @@ def run(quick=False):
                                                for k, v in res.items()},
                      beats_both=res["ditto"] >= max(res["ditto_lru"],
                                                     res["ditto_lfu"])))
+
+    # Live workload shift: the scenario driver switches the request stream
+    # mid-run (LFU-friendly -> LRU-friendly) on ONE cache instance; the
+    # measured per-window timeline shows the weight vector re-converging
+    # instead of two disconnected runs pretending to.
+    lanes = 16
+    horizon = n // lanes
+    shift = horizon // 2
+    streams = {"lfu": lfu_friendly(n // 2, seed=21),
+               "lru": lru_friendly(n // 2, seed=22)}
+    cfg_kw = dict(n_buckets=max(256, CAP // 2), assoc=8, capacity=CAP)
+    live = {}
+    for label, experts in (("ditto", ("lru", "lfu")), ("ditto_lru", ("lru",)),
+                           ("ditto_lfu", ("lfu",))):
+        sc = run_scenario(
+            CacheConfig(experts=experts, **cfg_kw), streams["lfu"],
+            [(shift, ("switch_workload", "lru"))], n_shards=1,
+            lanes_per_shard=lanes, horizon=horizon,
+            window=max(horizon // 32, 1), workloads=streams)
+        # settled hit rate of each phase: last windows before/after shift
+        live[label] = (float(sc.phase(shift // 2, shift, "hit_rate").mean()),
+                       float(sc.phase(shift + shift // 2, horizon,
+                                      "hit_rate").mean()))
+    rows.append(dict(
+        name="workload_shift_live",
+        hit_p1_ditto=live["ditto"][0], hit_p2_ditto=live["ditto"][1],
+        hit_p1_lru=live["ditto_lru"][0], hit_p2_lru=live["ditto_lru"][1],
+        hit_p1_lfu=live["ditto_lfu"][0], hit_p2_lfu=live["ditto_lfu"][1],
+        tracks_best_p2=live["ditto"][1] >= max(live["ditto_lru"][1],
+                                               live["ditto_lfu"][1]) - 0.05))
     return emit(rows, "adaptivity")
 
 

@@ -3,18 +3,27 @@
 Redis rescale 32->64->32 one-core nodes under YCSB-C: resharding moves half
 of 10M objects, delaying the throughput gain / resource reclamation by
 minutes and dipping throughput during migration. Ditto adjusts compute and
-memory independently and instantly: compute scale = client-lane width
-(next step), memory scale = one capacity-scalar write (measured in
-test_dm_elastic_resize_no_migration with zero bytes moved).
+memory independently and near-instantly.
+
+The Ditto side is a LIVE scenario through the DM runtime
+(`repro.elastic.scenario`): one grow->shrink timeline over a single cache
+instance, with lanes 32->64->32 and capacity 8192->16384->4096 (the final
+shrink reclaims below the starting budget so the drain is exercised even
+in quick mode). Per-window
+throughput comes from the measured OpStats counters, migration bytes are
+measured from real state deltas (a key appearing on a shard it did not
+occupy before — zero for both grow and shrink), and the shrink is drained
+online to the new capacity in a bounded number of batched eviction rounds.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.baselines import CLUSTER, DittoModel, RedisModel
-from repro.core import init_stats
-from benchmarks.common import emit, run_ditto, model_throughput
+from repro.baselines import CLUSTER, RedisModel
+from repro.core import CacheConfig
+from repro.elastic import run_scenario
+from benchmarks.common import emit
 from repro.workloads import ycsb
 
 
@@ -38,21 +47,48 @@ def run(quick=False):
     rows.append(dict(name="redis_rescale", grow_delay_min=grow_delay / 60,
                      reclaim_delay_min=shrink_delay / 60,
                      tput_dip_pct=100 * dip,
+                     migration_bytes=redis.migration_bytes(0.5),
                      paper_grow_min=5.3, paper_reclaim_min=5.6))
 
-    # Ditto: measured op counters -> model throughput at 32 and 64 clients
+    # Ditto: one live grow->shrink timeline through the DM cache.
+    # Keyspace >> shrink target so the reclamation actually drains.
     n = 20_000 if quick else 60_000
-    keys, _ = ycsb("C", n, n_keys=4_000, seed=0)
-    tput_d = {}
-    for c in (32, 64):
-        tr, cfg, wall = run_ditto(keys, capacity=8192, n_clients=c)
-        tput_d[c] = model_throughput(tr, c)
+    keys, _ = ycsb("C", n, n_keys=20_000, seed=0)
+    cfg = CacheConfig(n_buckets=4096, assoc=8, capacity=8192,
+                      experts=("lru", "lfu"))
+    lanes0 = 32
+    T = n // lanes0               # steps at the initial width
+    t1, t2 = T // 3, 2 * T // 3
+    timeline = [(t1, ("set_lanes", 64)), (t1, ("set_capacity", 16384)),
+                (t2, ("set_lanes", 32)), (t2, ("set_capacity", 4096))]
+    res = run_scenario(cfg, keys, timeline, n_shards=1,
+                       lanes_per_shard=lanes0, horizon=T,
+                       window=max(T // 40, 1))
+
+    tput_32 = res.phase(0, t1, "tput_mops")
+    tput_64 = res.phase(t1, t2, "tput_mops")
+    shrink_ev = [e for e in res.events
+                 if e["event"] == "set_capacity" and e["t"] >= t2][0]
+    mig_total = sum(e["report"]["migration_bytes"] for e in res.events)
+    drained = shrink_ev["report"]["drained_objects"]
+    # Transition cost in the cost model: the drain's CAS stream on the MN
+    # RNIC (grow and lane changes are scalar/CN-local: free).
+    delay_s = drained / CLUSTER.rnic_msg_rate
+    cap_after = int(np.asarray(res.dm.state.n_cached).sum())
     rows.append(dict(name="ditto_rescale",
-                     tput_32c_mops=tput_d[32], tput_64c_mops=tput_d[64],
-                     transition_delay_s=0.0, migration_bytes=0,
+                     tput_32c_mops=float(tput_32.mean()),
+                     tput_64c_mops=float(tput_64.mean()),
+                     transition_delay_s=delay_s,
+                     migration_bytes=mig_total,
+                     shrink_drain_steps=shrink_ev["report"]["drain_steps"],
+                     n_cached_after_shrink=cap_after,
                      paper_tput_32c=5.0, paper_tput_64c=8.5))
+    assert mig_total == 0, "elastic resize must not move data across shards"
+    assert shrink_ev["report"]["drain_steps"] >= 1, "shrink should drain"
+    assert cap_after <= 4096 + 64, "shrink must drain to the new capacity"
     return emit(rows, "elasticity")
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

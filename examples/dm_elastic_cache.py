@@ -1,6 +1,8 @@
 """Disaggregated-memory demo: the cache sharded over 8 (placeholder)
-devices with all_to_all request routing, then elastically resized —
-zero bytes migrate.
+devices with all_to_all request routing, then driven through a full
+elasticity timeline — memory grow (zero migration), compute grow/shrink
+(lane width with client-state carry-over), memory shrink (online drain),
+and a workload shift — via the elastic runtime's scenario driver.
 
   PYTHONPATH=src python examples/dm_elastic_cache.py
 (must be its own process: it forces an 8-device host platform)
@@ -10,32 +12,39 @@ import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            + os.environ.get("XLA_FLAGS", ""))
 
-import functools
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CacheConfig
-from repro.dm import dm_access, dm_make, dm_set_capacity
-from repro.workloads import zipfian
+from repro.elastic import run_scenario
+from repro.workloads import lru_friendly, zipfian
 
 cfg = CacheConfig(n_buckets=1024, assoc=8, capacity=2048,
                   experts=("lru", "lfu"))
-mesh, dm, local = dm_make(cfg, n_shards=8, lanes_per_shard=8)
-step = jax.jit(functools.partial(dm_access, mesh, local))
-keys = zipfian(64 * 300, 20_000, seed=0).reshape(300, 64)
 
-for t in range(150):
-    dm, h = step(dm, jnp.asarray(keys[t]))
-print("phase 1 (cap 2048):", np.asarray(dm.state.n_cached).sum(), "objects,",
-      "per-shard:", np.asarray(dm.state.n_cached))
+timeline = [
+    (100, ("set_capacity", 4096)),       # memory grow: one scalar/shard
+    (150, ("set_lanes", 16)),            # compute grow: 64 -> 128 lanes
+    (250, ("set_lanes", 8)),             # compute shrink: decommission flush
+    (300, ("set_capacity", 1024)),       # memory shrink: online drain
+    (350, ("switch_workload", "shift")),  # recency-heavy phase
+]
+res = run_scenario(
+    cfg, zipfian(64 * 500, 20_000, seed=0), timeline,
+    n_shards=8, lanes_per_shard=8, horizon=500, window=50,
+    workloads={"shift": lru_friendly(20_000, seed=3)})
 
-before = np.asarray(dm.state.key).copy()
-dm = dm_set_capacity(dm, 1024, 8)          # elastic shrink: scalar write
-assert np.array_equal(before, np.asarray(dm.state.key))
-print("resized pool 2048 -> 1024: zero bytes migrated")
+print(f"{'window':>10} {'cap':>5} {'lanes':>5} {'hit%':>6} "
+      f"{'cached':>6} {'Mops':>6} {'drain':>5} events")
+for w in res.windows:
+    print(f"{w['t0']:>4}-{w['t1']:<5} {w['capacity']:>5} {w['lanes']:>5} "
+          f"{100 * w['hit_rate']:>6.1f} {w['n_cached']:>6} "
+          f"{w['tput_mops']:>6.2f} {w['drain_steps']:>5} "
+          f"{','.join(w['events']) or '-'}")
 
-for t in range(150, 300):
-    dm, h = step(dm, jnp.asarray(keys[t]))
-print("phase 2 (cap 1024):", np.asarray(dm.state.n_cached).sum(), "objects")
+mig = sum(e["report"]["migration_bytes"] for e in res.events)
+print(f"\nresize events: {len(res.events)}, migrated bytes (measured): {mig}")
+per_shard = np.asarray(res.dm.state.n_cached)
+print(f"final occupancy {per_shard.sum()} <= capacity "
+      f"{res.windows[-1]['capacity']}, per-shard: {per_shard}")
+assert mig == 0
+assert per_shard.sum() <= res.windows[-1]["capacity"] + 64

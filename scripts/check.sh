@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Builder verification: tier-1 tests + quick-mode benchmark smoke runs.
+#   scripts/check.sh          # full tier-1 suite + bench smoke
+#   scripts/check.sh --fast   # skip the slow multi-device subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow")
+fi
+
+echo "== tier-1: python -m pytest ${PYTEST_ARGS[*]}"
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== bench smoke: elasticity (quick)"
+python benchmarks/elasticity.py --quick
+
+echo "== bench smoke: adaptivity (quick)"
+python -c "from benchmarks import adaptivity; adaptivity.run(quick=True)"
+
+echo "check: OK"

@@ -145,6 +145,12 @@ class RedisModel:
     def migration_seconds(self, frac_moved: float) -> float:
         return self.n_keys * frac_moved / self.c.migration_keys_per_s
 
+    def migration_bytes(self, frac_moved: float, obj_bytes: int = 256) -> int:
+        """Bytes resharding moves over the network (paper: half of 10M
+        256B objects on a 32->64 rescale) — the contrast line for the
+        Ditto scenario driver's measured migration_bytes."""
+        return int(self.n_keys * frac_moved * obj_bytes)
+
     def timeline(self, events, horizon_s: float, dt: float = 1.0):
         """events: [(t, n_nodes_new)] resize requests. Returns (t, tput,
         nodes_billed) arrays with migration-time penalties applied."""

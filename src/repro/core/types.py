@@ -205,3 +205,14 @@ def stats_add(a: OpStats, **kw) -> OpStats:
     upd = {k: (getattr(a, k) + jnp.asarray(v).astype(getattr(a, k).dtype))
            for k, v in kw.items()}
     return a._replace(**upd)
+
+
+def stats_sum(stats: OpStats) -> OpStats:
+    """Reduce per-shard counter arrays to global scalars (host-side read)."""
+    return OpStats(*[jnp.sum(f) for f in stats])
+
+
+def stats_delta(new: OpStats, old: OpStats) -> OpStats:
+    """Counter difference between two snapshots — the per-window counters
+    that drive the elastic runtime's feedback loop (DESIGN.md §8)."""
+    return OpStats(*[n - o for n, o in zip(new, old)])

@@ -42,8 +42,11 @@ class DMCache(NamedTuple):
 
 def _mesh(n: int) -> Mesh:
     devs = jax.devices()[:n]
-    return jax.make_mesh((len(devs),), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:  # axis_types / AxisType only exist on newer jax releases
+        return jax.make_mesh((len(devs),), (AXIS,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        return jax.make_mesh((len(devs),), (AXIS,))
 
 
 def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
@@ -71,8 +74,6 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
     sh_slot = NamedSharding(mesh, P(AXIS))
     sh_scalar = NamedSharding(mesh, P(AXIS))
 
-    def put_state(path, x):
-        return jax.device_put(x, sh_slot)
     state = jax.tree.map(lambda x: jax.device_put(x, sh_slot), state)
     clients = jax.tree.map(lambda x: jax.device_put(x, sh_slot), clients)
     stats = jax.tree.map(lambda x: jnp.zeros((n_shards,), x.dtype),
@@ -195,6 +196,10 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
 def dm_set_capacity(dm: DMCache, new_global_capacity: int,
                     n_shards: int) -> DMCache:
-    """Elastic memory resize: one scalar write per shard, no migration."""
-    cap = jnp.full((n_shards,), new_global_capacity // n_shards, jnp.int32)
-    return dm._replace(state=dm.state._replace(capacity=cap))
+    """Elastic memory resize: one scalar write per shard, no migration.
+
+    Thin alias for `repro.elastic.resize.set_capacity` (the single resize
+    entry point); use `repro.elastic.resize.resize_memory` for the online
+    path that also drains shrinks to the new capacity."""
+    from repro.elastic.resize import set_capacity
+    return set_capacity(dm, new_global_capacity, n_shards)

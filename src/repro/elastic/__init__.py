@@ -1,0 +1,15 @@
+"""Elastic resource runtime: online pool resize, feedback autoscaling,
+and scenario-driven elasticity timelines (DESIGN.md §8)."""
+
+from repro.elastic.controller import (Autoscaler, AutoscalerConfig, Decision,
+                                      WindowMetrics)
+from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
+                                  resize_memory, set_capacity)
+from repro.elastic.scenario import ScenarioResult, run_scenario
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "Decision", "WindowMetrics",
+    "ResizeReport", "enforce_budget", "resize_lanes", "resize_memory",
+    "set_capacity",
+    "ScenarioResult", "run_scenario",
+]

@@ -1,0 +1,156 @@
+"""Feedback autoscaler for the elastic runtime (DESIGN.md §8).
+
+Watches per-window counters (the `OpStats` deltas the scenario driver
+produces) and emits scale decisions against configurable targets. The
+design goal is *stability first*: every trigger has a patience streak
+(the violating condition must persist), the grow/shrink bands do not
+overlap (dead band between them), and every action starts a cooldown —
+so a steady workload can never make the controller oscillate.
+
+Memory decisions key off hit rate vs. eviction pressure: a hit rate
+below the floor only means "too small" when the pool is actually
+churning (evictions or insert drops); an over-provisioned pool shows a
+comfortable hit rate, low churn, and occupancy below the shrink
+watermark. Compute decisions key off utilization — offered load vs. the
+achievable throughput at the current lane count, which the scenario
+driver derives from measured counters via the cost model (`DittoModel`,
+the same model the benchmarks use) and reports in `WindowMetrics`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+
+class WindowMetrics(NamedTuple):
+    """One observation window, distilled from OpStats deltas."""
+
+    hit_rate: float
+    evictions_per_op: float
+    insert_drops_per_op: float
+    n_cached: int
+    capacity: int
+    lanes: int
+    offered_mops: Optional[float] = None   # demand, for compute scaling
+    tput_mops: float = 0.0                 # achievable at current lanes
+
+
+class Decision(NamedTuple):
+    action: str          # none | grow_memory | shrink_memory
+    #                    # | grow_lanes | shrink_lanes
+    target: int          # new global capacity / new total lane count
+    reason: str
+
+
+NONE = Decision("none", 0, "")
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    # --- memory targets ------------------------------------------------
+    hit_rate_floor: float = 0.80      # grow below this (if churning)
+    hit_rate_slack: float = 0.10      # shrink only above floor + slack
+    evict_pressure: float = 0.02      # evictions/op that count as churn
+    occupancy_low: float = 0.60       # shrink only if pool this empty OR
+    #                                 # hit rate comfortably above band
+    mem_step: float = 2.0             # multiplicative resize step
+    min_capacity: int = 1024
+    max_capacity: int = 1 << 20
+    # --- compute targets -----------------------------------------------
+    util_high: float = 0.90           # offered / achievable: add lanes
+    util_low: float = 0.35            # remove lanes below this
+    lane_step: float = 2.0
+    min_lanes: int = 1
+    max_lanes: int = 4096
+    # --- stability -----------------------------------------------------
+    patience: int = 3                 # consecutive violating windows
+    cooldown: int = 5                 # quiet windows after any action
+
+    def __post_init__(self):
+        # Non-overlapping bands are what make steady workloads stable:
+        # shrinking must not re-trigger the grow condition and vice versa.
+        assert self.hit_rate_slack > 0
+        assert self.util_low * self.lane_step < self.util_high, \
+            "lane bands overlap: shrinking would immediately re-grow"
+
+
+class Autoscaler:
+    """Hysteretic feedback controller: observe a window, maybe act."""
+
+    def __init__(self, cfg: Optional[AutoscalerConfig] = None):
+        self.cfg = cfg or AutoscalerConfig()
+        self._cooldown = 0
+        self._streak = {"grow_memory": 0, "shrink_memory": 0,
+                        "grow_lanes": 0, "shrink_lanes": 0}
+        self.log: list[Decision] = []
+
+    # -- trigger predicates (pure, per-window) --------------------------
+
+    def _memory_pressure(self, m: WindowMetrics) -> bool:
+        churning = (m.evictions_per_op > self.cfg.evict_pressure
+                    or m.insert_drops_per_op > self.cfg.evict_pressure)
+        return m.hit_rate < self.cfg.hit_rate_floor and churning
+
+    def _memory_surplus(self, m: WindowMetrics) -> bool:
+        comfortable = m.hit_rate > (self.cfg.hit_rate_floor
+                                    + self.cfg.hit_rate_slack)
+        idle = (m.evictions_per_op <= self.cfg.evict_pressure
+                and m.n_cached < self.cfg.occupancy_low * m.capacity)
+        return comfortable and idle
+
+    def _util(self, m: WindowMetrics) -> Optional[float]:
+        if m.offered_mops is None or m.tput_mops <= 0:
+            return None
+        return m.offered_mops / m.tput_mops
+
+    # -- main entry -----------------------------------------------------
+
+    def observe(self, m: WindowMetrics) -> Decision:
+        d = self._decide(m)
+        self.log.append(d)
+        return d
+
+    def _decide(self, m: WindowMetrics) -> Decision:
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return NONE
+
+        u = self._util(m)
+        triggers = {
+            "grow_memory": self._memory_pressure(m),
+            "shrink_memory": self._memory_surplus(m),
+            "grow_lanes": u is not None and u > self.cfg.util_high,
+            "shrink_lanes": u is not None and u < self.cfg.util_low,
+        }
+        for k, on in triggers.items():
+            self._streak[k] = self._streak[k] + 1 if on else 0
+
+        c = self.cfg
+        if self._streak["grow_memory"] >= c.patience:
+            target = min(int(m.capacity * c.mem_step), c.max_capacity)
+            if target > m.capacity:
+                return self._act("grow_memory", target,
+                                 f"hit_rate={m.hit_rate:.3f} under churn")
+        if self._streak["shrink_memory"] >= c.patience:
+            target = max(int(m.capacity / c.mem_step), c.min_capacity,
+                         m.n_cached)
+            if target < m.capacity:
+                return self._act("shrink_memory", target,
+                                 f"occupancy={m.n_cached}/{m.capacity}")
+        if self._streak["grow_lanes"] >= c.patience:
+            target = min(int(math.ceil(m.lanes * c.lane_step)), c.max_lanes)
+            if target > m.lanes:
+                return self._act("grow_lanes", target, f"util={u:.2f}")
+        if self._streak["shrink_lanes"] >= c.patience:
+            target = max(int(m.lanes / c.lane_step), c.min_lanes)
+            if target < m.lanes:
+                return self._act("shrink_lanes", target, f"util={u:.2f}")
+        return NONE
+
+    def _act(self, action: str, target: int, reason: str) -> Decision:
+        self._cooldown = self.cfg.cooldown
+        for k in self._streak:
+            self._streak[k] = 0
+        return Decision(action, target, reason)

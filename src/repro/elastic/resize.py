@@ -1,0 +1,312 @@
+"""Online pool resize for the DM runtime (DESIGN.md §8).
+
+The paper's elasticity story has two halves and this module implements
+both against the live sharded cache:
+
+* **Memory scale.** Growing the pool is the paper's headline: one
+  capacity-scalar write per shard, zero bytes migrated (§2.2). Shrinking
+  is where real systems fall over — a capacity clamp alone leaves the
+  pool over budget until organic evictions catch up, which can take
+  arbitrarily long on a read-heavy trace. `resize_memory` therefore
+  *drains* on shrink: bounded batches of priority-ordered evictions per
+  shard (lowest priority first under the dominant expert, victims filed
+  into the embedded history like any other eviction) until every shard
+  is at its new capacity.
+
+* **Compute scale.** Client lanes are just a batch width, but lanes own
+  state: the FC cache (§4.2.2) and the lazy-weight-update penalty
+  buffers (§4.3.2). `resize_lanes` decommissions lanes by flushing their
+  buffered freq deltas into the table and folding their pending expert
+  penalties into the global weights (a client shutdown RPC), and brings
+  new lanes up with the current global weights and an empty FC cache.
+
+Both paths return a `ResizeReport` with *measured* numbers: migration
+bytes are computed from real state deltas (a live key appearing on a
+shard it did not occupy before), not asserted to be zero.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import priority as prio
+from repro.core.cache import _is_live, _md_view
+from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
+                              init_clients, stats_add)
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+# Axis name shared with repro.dm.sharded_cache (kept literal to avoid a
+# circular import: dm.sharded_cache delegates dm_set_capacity here).
+AXIS = "pool"
+
+
+class ResizeReport(NamedTuple):
+    """Measured outcome of one resize event."""
+
+    migration_bytes: int    # bytes that moved between shards (real delta)
+    drained_objects: int    # objects evicted by the shrink drain
+    drained_bytes: int      # payload bytes those objects held
+    drain_steps: int        # batched drain rounds until at-capacity
+
+
+def set_capacity(dm, new_global_capacity: int, n_shards: int):
+    """The paper's elastic resize primitive: one scalar write per shard,
+    no data movement. Shrinks done through this alone leave the pool over
+    budget until organic evictions drain it — use `resize_memory` for the
+    online path."""
+    cap = jnp.full((n_shards,), new_global_capacity // n_shards, jnp.int32)
+    return dm._replace(state=dm.state._replace(capacity=cap))
+
+
+# ----------------------------------------------------------------------
+# Shrink drain: priority-ordered batched evictions per shard.
+# ----------------------------------------------------------------------
+
+def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
+    """Evict up to `batch` lowest-priority live objects on one shard,
+    bounded by the shard's capacity deficit. Scalars arrive [1]-sliced."""
+    names = local_cfg.experts
+    E = local_cfg.n_experts
+    adaptive = E > 1
+    state = state._replace(
+        n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
+        clock=state.clock[0], weights=state.weights[0],
+        gds_L=state.gds_L[0], capacity=state.capacity[0])
+    stats = jax.tree.map(lambda x: x[0], stats)
+
+    n_slots = state.key.shape[0]
+    deficit = jnp.maximum(state.n_cached - state.capacity, 0)
+    k = jnp.minimum(deficit, batch)
+
+    live = _is_live(state.size)
+    md = _md_view(state, jnp.arange(n_slots))
+    prios = prio.priorities(md, names)                       # [n, E]
+    # Drain under the dominant expert — the policy the weight vector
+    # currently trusts most (same signal opportunistic eviction samples).
+    e = jnp.argmax(state.weights)
+    pe = jnp.where(live, jnp.take_along_axis(
+        prios, jnp.full((n_slots, 1), e), axis=1)[:, 0], jnp.inf)
+    order = jnp.argsort(pe)                                  # low prio first
+    take = (jnp.arange(n_slots) < k) & live[order]
+    victims = jnp.where(take, order, n_slots)
+
+    # Victims enter the embedded history (§4.3.1) exactly as sampled
+    # evictions do, so the adaptive regret signal survives the resize.
+    write_hist = take & adaptive & local_cfg.use_lwh
+    hist_rank = jnp.cumsum(write_hist.astype(I32)) - 1
+    hist_ids = state.hist_ctr + jnp.where(write_hist, hist_rank, 0).astype(U32)
+    n_hist = jnp.sum(write_hist).astype(U32)
+    bmap = jnp.full((n_slots,), U32(1) << e.astype(U32))
+
+    freed = jnp.sum(jnp.where(take, state.size[jnp.minimum(victims,
+                                                           n_slots - 1)], 0))
+    size2 = state.size.at[victims].set(
+        jnp.where(write_hist, U32(SIZE_HISTORY), U32(SIZE_EMPTY)), mode="drop")
+    ptr2 = state.ptr.at[victims].set(
+        jnp.where(write_hist, hist_ids, U32(0)), mode="drop")
+    ins2 = state.insert_ts.at[victims].set(bmap, mode="drop")
+
+    n_evict = jnp.sum(take).astype(I32)
+    state = state._replace(
+        size=size2, ptr=ptr2, insert_ts=ins2,
+        n_cached=state.n_cached - n_evict,
+        hist_ctr=state.hist_ctr + n_hist)
+    # Cost accounting: the drain is a server-driven sweep — one sampling
+    # read per victim batch, one CAS per victim, history writes + FAA.
+    stats = stats_add(
+        stats, rdma_read=jnp.where(n_evict > 0, 1, 0), rdma_cas=n_evict,
+        rdma_write=n_hist, rdma_faa=jnp.where(n_hist > 0, 1, 0),
+        evictions=n_evict)
+
+    state = state._replace(
+        n_cached=state.n_cached[None], hist_ctr=state.hist_ctr[None],
+        clock=state.clock[None], weights=state.weights[None],
+        gds_L=state.gds_L[None], capacity=state.capacity[None])
+    stats = jax.tree.map(lambda x: x[None], stats)
+    return state, stats, n_evict[None], freed.astype(I32)[None]
+
+
+@functools.lru_cache(maxsize=32)
+def _drain_fn(mesh: Mesh, local_cfg: CacheConfig, batch: int):
+    def run(state, stats):
+        spec_state = jax.tree.map(lambda _: P(AXIS), state)
+        spec_stats = jax.tree.map(lambda _: P(AXIS), stats)
+        fn = shard_map(
+            functools.partial(_drain_shard, local_cfg, batch), mesh=mesh,
+            in_specs=(spec_state, spec_stats),
+            out_specs=(spec_state, spec_stats, P(AXIS), P(AXIS)),
+            check_rep=False)
+        return fn(state, stats)
+    return jax.jit(run)
+
+
+def _measured_migration_bytes(before, after) -> int:
+    """Bytes that crossed a shard boundary: live keys present after the
+    resize on a shard where they did not live before (real state delta)."""
+    n_shards, value_words = before["shards"], before["value_words"]
+    key_b, size_b = before["key"], before["size"]
+    key_a, size_a = np.asarray(after.state.key), np.asarray(after.state.size)
+    local = key_b.shape[0] // n_shards
+    shard_of = np.arange(key_b.shape[0]) // local
+    live_b = (size_b != SIZE_EMPTY) & (size_b != SIZE_HISTORY)
+    live_a = (size_a != SIZE_EMPTY) & (size_a != SIZE_HISTORY)
+    home = {int(k): int(s) for k, s in zip(key_b[live_b], shard_of[live_b])}
+    moved = 0
+    for k, s, sz in zip(key_a[live_a], shard_of[live_a], size_a[live_a]):
+        if int(k) in home and home[int(k)] != int(s):
+            moved += int(sz) * 64 + 4 * value_words
+    return moved
+
+
+def _snapshot(dm, n_shards: int, value_words: int):
+    return dict(key=np.asarray(dm.state.key).copy(),
+                size=np.asarray(dm.state.size).copy(),
+                shards=n_shards, value_words=value_words)
+
+
+def resize_memory(mesh: Mesh, local_cfg: CacheConfig, dm,
+                  new_global_capacity: int, *, drain: bool = True,
+                  batch_per_shard: int = 64, max_steps: int = 256,
+                  ) -> Tuple["DMCache", ResizeReport]:
+    """Online memory resize: grow = scalar write (zero migration); shrink
+    = scalar write + bounded priority-ordered drain to the new capacity.
+
+    Returns the resized cache and a report with measured state deltas.
+    Raises RuntimeError if the drain cannot reach capacity in `max_steps`
+    batches (so callers see a stuck drain instead of a silent overrun).
+    """
+    n_shards = mesh.shape[AXIS]
+    assert new_global_capacity % n_shards == 0
+    before = _snapshot(dm, n_shards, local_cfg.value_words)
+    dm = set_capacity(dm, new_global_capacity, n_shards)
+
+    steps = drained = freed = 0
+    if drain:
+        fn = _drain_fn(mesh, local_cfg, batch_per_shard)
+        cap_per_shard = new_global_capacity // n_shards
+        while (np.asarray(dm.state.n_cached) > cap_per_shard).any():
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"shrink drain did not reach capacity={new_global_capacity}"
+                    f" in {max_steps} steps "
+                    f"(n_cached={int(np.asarray(dm.state.n_cached).sum())})")
+            state, stats, n_ev, n_freed = fn(dm.state, dm.stats)
+            dm = dm._replace(state=state, stats=stats)
+            drained += int(np.asarray(n_ev).sum())
+            freed += int(np.asarray(n_freed).sum())
+            steps += 1
+
+    report = ResizeReport(
+        migration_bytes=_measured_migration_bytes(before, dm),
+        drained_objects=drained, drained_bytes=freed * 64,
+        drain_steps=steps)
+    return dm, report
+
+
+def enforce_budget(mesh: Mesh, local_cfg: CacheConfig, dm, *,
+                   batch_per_shard: int = 64, max_steps: int = 8,
+                   ) -> Tuple["DMCache", int]:
+    """Maintenance sweep: drain any shard over its capacity budget.
+
+    The batched access path tolerates transient occupancy drift (duplicate
+    victims, hit-only steps, samples landing on empty slots at low live
+    density — see DESIGN.md §8), and after a deep shrink the sampler alone
+    may not hold the line. The memory-pool controller periodically runs
+    this bounded drain to re-establish the budget. Returns (dm, drained).
+    """
+    drained = 0
+    fn = _drain_fn(mesh, local_cfg, batch_per_shard)
+    for _ in range(max_steps):
+        nc = np.asarray(dm.state.n_cached)
+        cap = np.asarray(dm.state.capacity)
+        if not (nc > cap).any():
+            break
+        state, stats, n_ev, _ = fn(dm.state, dm.stats)
+        dm = dm._replace(state=state, stats=stats)
+        drained += int(np.asarray(n_ev).sum())
+    return dm, drained
+
+
+# ----------------------------------------------------------------------
+# Compute scale: client-lane width changes with state carry-over.
+# ----------------------------------------------------------------------
+
+def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
+                 new_lanes_per_shard: int, *, seed: int = 1,
+                 ) -> Tuple["DMCache", ResizeReport]:
+    """Change the client-lane count per shard without touching the pool.
+
+    Surviving lanes carry their FC cache and penalty buffers over.
+    Decommissioned lanes flush: buffered freq deltas land in the table
+    (the shutdown FAA burst) and pending expert penalties fold into the
+    global weights (one last lazy-weight-update RPC). New lanes start
+    from the current global weights with an empty FC cache.
+    """
+    n_shards = mesh.shape[AXIS]
+    old_total = dm.clients.fc_slot.shape[0]
+    old_lanes = old_total // n_shards
+    new_total = n_shards * new_lanes_per_shard
+    if new_lanes_per_shard == old_lanes:
+        return dm, ResizeReport(0, 0, 0, 0)
+    before = _snapshot(dm, n_shards, local_cfg.value_words)
+
+    E = local_cfg.n_experts
+    local_slots = local_cfg.n_slots
+    cl = jax.tree.map(np.asarray, dm.clients)
+    per_shard = jax.tree.map(
+        lambda x: x.reshape((n_shards, old_lanes) + x.shape[1:]), cl)
+
+    freq = np.asarray(dm.state.freq).copy()
+    weights = np.asarray(dm.state.weights).copy()     # [n_shards, E]
+    keep = min(old_lanes, new_lanes_per_shard)
+
+    if new_lanes_per_shard < old_lanes:
+        # --- decommission flush (lanes [keep:]) -------------------------
+        pen_total = np.zeros((E,), np.float32)
+        for s in range(n_shards):
+            fs = per_shard.fc_slot[s, keep:].reshape(-1)
+            fd = per_shard.fc_delta[s, keep:].reshape(-1)
+            ok = (fs >= 0) & (fs < local_slots)
+            np.add.at(freq, s * local_slots + fs[ok], fd[ok])
+            pen_total += per_shard.penalty_acc[s, keep:].sum(axis=0)
+        lam = np.float32(local_cfg.learning_rate)
+        w = weights[0] * np.exp(-lam * pen_total)
+        w = np.maximum(w / max(w.sum(), 1e-30), 1e-4)
+        weights = np.broadcast_to(w, weights.shape).copy()
+
+    fresh = jax.tree.map(
+        lambda x: x.reshape((n_shards, new_lanes_per_shard) + x.shape[1:]),
+        jax.tree.map(np.asarray,
+                     init_clients(local_cfg, new_total, seed)))
+
+    def merge(old, new):
+        out = np.array(new)
+        out[:, :keep] = old[:, :keep]
+        return out.reshape((new_total,) + out.shape[2:])
+    merged = jax.tree.map(merge, per_shard, fresh)
+    # New lanes adopt the (post-flush) global weights.
+    lw = merged.local_weights.reshape(n_shards, new_lanes_per_shard, E)
+    lw[:, keep:] = weights[:, None, :]
+    merged = merged._replace(
+        local_weights=lw.reshape(new_total, E))
+
+    sh = NamedSharding(mesh, P(AXIS))
+    clients = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sh),
+                           merged)
+    state = dm.state._replace(
+        freq=jax.device_put(jnp.asarray(freq), dm.state.freq.sharding),
+        weights=jax.device_put(jnp.asarray(weights),
+                               dm.state.weights.sharding))
+    dm = dm._replace(state=state, clients=clients)
+    return dm, ResizeReport(
+        migration_bytes=_measured_migration_bytes(before, dm),
+        drained_objects=0, drained_bytes=0, drain_steps=0)

@@ -1,0 +1,165 @@
+"""Scenario driver: declarative elasticity timelines (DESIGN.md §8).
+
+A scenario is a request trace plus a timeline of reconfiguration events
+
+    timeline = [(t, ("set_capacity", 16384)),
+                (t2, ("set_lanes", 16)),          # per-shard lane width
+                (t3, ("switch_workload", "scan"))]
+
+run through the live DM cache. The driver executes the trace step by
+step, applies events through the `elastic.resize` entry points at their
+step index, and records per-window timelines of measured counters:
+hit rate, model throughput, eviction/drop pressure, occupancy, and the
+migration bytes / drain steps each event actually cost. This is what the
+elasticity benchmarks plot — measured reconfigurations, not two
+disconnected static runs.
+
+Optionally an `Autoscaler` closes the loop: at every window boundary it
+sees the window's metrics and its decisions are applied as events.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.systems import DittoModel
+from repro.core.types import CacheConfig, stats_delta, stats_sum
+from repro.dm.sharded_cache import dm_access, dm_make
+from repro.elastic.controller import Autoscaler, WindowMetrics
+from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
+                                  resize_memory)
+
+Event = Tuple[str, object]          # ("set_capacity"|"set_lanes"|
+#                                   #  "switch_workload", arg)
+
+
+class ScenarioResult(NamedTuple):
+    windows: list       # per-window dicts (t0, t1, hit_rate, tput_mops, ...)
+    events: list        # applied events: dict(t, event, arg, report)
+    dm: object          # final DMCache (for state inspection in tests)
+
+    def phase(self, t0: float, t1: float, key: str) -> np.ndarray:
+        """Values of `key` for windows fully inside [t0, t1)."""
+        return np.array([w[key] for w in self.windows
+                         if w["t0"] >= t0 and w["t1"] <= t1])
+
+
+def _round_capacity(target: int, cfg: CacheConfig, n_shards: int) -> int:
+    target = min(int(target), cfg.n_slots // 2)   # table invariant
+    target = max(target, n_shards)
+    return (target // n_shards) * n_shards
+
+
+def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
+                 *, n_shards: int = 1, lanes_per_shard: int = 8,
+                 horizon: Optional[int] = None, window: int = 32,
+                 workloads: Optional[dict] = None,
+                 controller: Optional[Autoscaler] = None,
+                 offered_mops: Optional[Callable[[int], float]] = None,
+                 seed: int = 0, drain_batch: int = 64,
+                 drain_max_steps: int = 256) -> ScenarioResult:
+    """Run a [T, lanes] trace through the DM cache under an event stream.
+
+    Args:
+      keys: flat u32 request stream (wraps around); the initial workload.
+      timeline: [(step, (event, arg))] applied when the step begins.
+      workloads: name -> flat stream, for ("switch_workload", name).
+      controller: optional Autoscaler whose window decisions become events.
+      offered_mops: demand curve (step -> Mops) for compute decisions.
+    """
+    mesh, dm, local = dm_make(cfg, n_shards, lanes_per_shard)
+    step_fn = jax.jit(functools.partial(dm_access, mesh, local))
+    model = DittoModel()
+    workloads = workloads or {}
+
+    stream = np.asarray(keys, np.uint32)
+    lanes = lanes_per_shard
+    capacity = cfg.capacity
+    if horizon is None:
+        horizon = len(stream) // (n_shards * lanes)
+    pending = sorted(timeline, key=lambda e: e[0])
+
+    windows, events_log = [], []
+    pos = 0
+    win_t0 = 0
+    win_mig = win_drain = 0
+    win_events: list[str] = []
+    last_stats = stats_sum(jax.tree.map(np.asarray, dm.stats))
+
+    def apply_event(t: int, name: str, arg) -> None:
+        nonlocal dm, lanes, capacity, win_mig, win_drain, stream, pos
+        report = ResizeReport(0, 0, 0, 0)
+        if name == "set_capacity":
+            capacity = _round_capacity(int(arg), cfg, n_shards)
+            dm, report = resize_memory(
+                mesh, local, dm, capacity, batch_per_shard=drain_batch,
+                max_steps=drain_max_steps)
+        elif name == "set_lanes":
+            lanes = max(1, int(arg))
+            dm, report = resize_lanes(mesh, local, dm, lanes,
+                                      seed=seed + 1 + t)
+        elif name == "switch_workload":
+            stream = (np.asarray(workloads[arg], np.uint32)
+                      if isinstance(arg, str) else np.asarray(arg, np.uint32))
+            pos = 0
+        else:
+            raise ValueError(f"unknown scenario event {name!r}")
+        win_mig += report.migration_bytes
+        win_drain += report.drain_steps
+        win_events.append(name)
+        events_log.append(dict(t=t, event=name, arg=arg,
+                               report=report._asdict()))
+
+    for t in range(horizon):
+        while pending and pending[0][0] <= t:
+            _, (name, arg) = pending.pop(0)
+            apply_event(t, name, arg)
+
+        L = n_shards * lanes
+        idx = (pos + np.arange(L)) % len(stream)
+        pos += L
+        dm, _ = step_fn(dm, jnp.asarray(stream[idx]))
+
+        if (t + 1) % window == 0 or t == horizon - 1:
+            # Maintenance sweep: hold the occupancy budget between events
+            # (the batched sampler alone drifts at low live density).
+            dm, enforced = enforce_budget(mesh, local, dm,
+                                          batch_per_shard=drain_batch)
+            total = stats_sum(jax.tree.map(np.asarray, dm.stats))
+            d = stats_delta(total, last_stats)
+            last_stats = total
+            ops = float(d.gets + d.sets)
+            hr = float(d.hits) / max(ops, 1.0)
+            n_cached = int(np.asarray(dm.state.n_cached).sum())
+            tput = model.throughput(L, d, hit_rate=1.0) / 1e6 if ops else 0.0
+            m = WindowMetrics(
+                hit_rate=hr,
+                evictions_per_op=float(d.evictions) / max(ops, 1.0),
+                insert_drops_per_op=float(d.insert_drops) / max(ops, 1.0),
+                n_cached=n_cached, capacity=capacity, lanes=L,
+                offered_mops=offered_mops(t) if offered_mops else None,
+                tput_mops=tput)
+            windows.append(dict(
+                t0=win_t0, t1=t + 1, capacity=capacity, lanes=L,
+                hit_rate=hr, tput_mops=tput, n_cached=n_cached,
+                evictions=int(d.evictions), insert_drops=int(d.insert_drops),
+                migration_bytes=win_mig, drain_steps=win_drain,
+                enforced_evictions=enforced, events=list(win_events)))
+            win_t0 = t + 1
+            win_mig = win_drain = 0
+            win_events = []
+
+            if controller is not None:
+                dec = controller.observe(m)
+                if dec.action == "grow_memory" or dec.action == "shrink_memory":
+                    apply_event(t + 1, "set_capacity", dec.target)
+                elif dec.action in ("grow_lanes", "shrink_lanes"):
+                    per_shard = -(-dec.target // n_shards)
+                    apply_event(t + 1, "set_lanes", per_shard)
+
+    return ScenarioResult(windows, events_log, dm)

@@ -1,0 +1,239 @@
+"""Elastic resource runtime: online resize, autoscaler, scenario driver.
+
+Single-shard (1-device mesh) in-process — the multi-device variants of the
+same semantics are the subprocess tests in test_dm.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig
+from repro.dm import dm_access, dm_make, dm_set_capacity
+from repro.elastic import (Autoscaler, AutoscalerConfig, WindowMetrics,
+                           resize_lanes, resize_memory, run_scenario)
+from repro.workloads import zipfian
+
+
+def small_cache(capacity=256, lanes=8, experts=("lru", "lfu")):
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=capacity,
+                      experts=experts)
+    mesh, dm, local = dm_make(cfg, n_shards=1, lanes_per_shard=lanes)
+    step = jax.jit(functools.partial(dm_access, mesh, local))
+    return cfg, mesh, dm, local, step
+
+
+# ----------------------------------------------------------------------
+# resize_memory
+# ----------------------------------------------------------------------
+
+def test_grow_is_zero_migration_scalar_write():
+    cfg, mesh, dm, local, step = small_cache()
+    keys = zipfian(8 * 100, 2_000, seed=0).reshape(100, 8)
+    for t in range(100):
+        dm, _ = step(dm, jnp.asarray(keys[t]))
+    before = jax.tree.map(np.asarray, dm.state)
+    dm2, rep = resize_memory(mesh, local, dm, 512)
+    assert rep.migration_bytes == 0
+    assert rep.drained_objects == 0 and rep.drain_steps == 0
+    # grow touched ONLY the capacity scalar
+    for name in ("key", "size", "ptr", "values", "freq", "last_ts"):
+        assert np.array_equal(getattr(before, name),
+                              np.asarray(getattr(dm2.state, name))), name
+    assert int(dm2.state.capacity[0]) == 512
+
+
+def test_shrink_drains_and_every_step_stays_bounded():
+    cfg, mesh, dm, local, step = small_cache(capacity=256)
+    keys = zipfian(8 * 200, 2_000, seed=1).reshape(200, 8)
+    for t in range(100):
+        dm, _ = step(dm, jnp.asarray(keys[t]))
+    assert int(dm.state.n_cached[0]) > 128
+    dm, rep = resize_memory(mesh, local, dm, 128, batch_per_shard=16)
+    assert rep.migration_bytes == 0
+    assert 1 <= rep.drain_steps <= 256
+    assert int(dm.state.n_cached[0]) <= 128
+    # shrink-then-access: occupancy never exceeds capacity + batch drift
+    # (a hit-only step performs no evictions, so drift can linger for a
+    # step before the catch-up quota reclaims it: bound is two batches)
+    for t in range(100, 200):
+        dm, _ = step(dm, jnp.asarray(keys[t]))
+        assert int(dm.state.n_cached[0]) <= 128 + 2 * 8
+    assert int(np.asarray(dm.stats.evictions).sum()) > 0
+
+
+def test_shrink_evicts_lowest_priority_first():
+    # Single LRU expert, one key per step -> strictly increasing last_ts;
+    # the drain must evict exactly the oldest half.
+    cfg = CacheConfig(n_buckets=64, assoc=8, capacity=64, experts=("lru",))
+    mesh, dm, local = dm_make(cfg, n_shards=1, lanes_per_shard=1)
+    step = jax.jit(functools.partial(dm_access, mesh, local))
+    for k in range(1, 65):
+        dm, _ = step(dm, jnp.asarray([k], jnp.uint32))
+    assert int(dm.state.n_cached[0]) == 64
+    dm, rep = resize_memory(mesh, local, dm, 32, batch_per_shard=8)
+    size = np.asarray(dm.state.size)
+    live = (size != 0) & (size != 0xFF)
+    survivors = set(np.asarray(dm.state.key)[live].tolist())
+    assert survivors == set(range(33, 65)), sorted(survivors)
+    assert rep.drained_objects == 32 and rep.drain_steps == 4
+
+
+def test_dm_set_capacity_delegates_to_elastic():
+    cfg, mesh, dm, local, step = small_cache()
+    dm2 = dm_set_capacity(dm, 128, 1)
+    assert int(dm2.state.capacity[0]) == 128
+    assert np.array_equal(np.asarray(dm.state.key),
+                          np.asarray(dm2.state.key))
+
+
+# ----------------------------------------------------------------------
+# resize_lanes
+# ----------------------------------------------------------------------
+
+def test_lane_grow_carries_state_and_inits_new_lanes():
+    cfg, mesh, dm, local, step = small_cache(lanes=4)
+    keys = zipfian(4 * 80, 500, seed=2).reshape(80, 4)
+    for t in range(80):
+        dm, _ = step(dm, jnp.asarray(keys[t]))
+    old_lw = np.asarray(dm.clients.local_weights)
+    gw = np.asarray(dm.state.weights)[0]
+    dm, rep = resize_lanes(mesh, local, dm, 8)
+    assert rep.migration_bytes == 0
+    lw = np.asarray(dm.clients.local_weights)
+    assert lw.shape[0] == 8
+    np.testing.assert_allclose(lw[:4], old_lw)          # carry-over
+    np.testing.assert_allclose(lw[4:], np.broadcast_to(gw, (4, gw.size)))
+    assert (np.asarray(dm.clients.fc_slot)[4:] == -1).all()
+    # the pool itself is untouched by compute scaling
+    dm, _ = step(dm, jnp.asarray(zipfian(8, 500, seed=3)))
+
+
+def test_lane_shrink_flushes_decommissioned_state():
+    cfg, mesh, dm, local, step = small_cache(lanes=8)
+    keys = zipfian(8 * 120, 300, seed=4).reshape(120, 8)
+    for t in range(120):
+        dm, _ = step(dm, jnp.asarray(keys[t]))
+    pending = np.asarray(dm.clients.fc_delta)[4:][
+        np.asarray(dm.clients.fc_slot)[4:] >= 0].sum()
+    freq_before = np.asarray(dm.state.freq).sum()
+    dm, _ = resize_lanes(mesh, local, dm, 4)
+    assert np.asarray(dm.clients.fc_slot).shape[0] == 4
+    # decommission flush: buffered freq deltas landed in the table
+    assert np.asarray(dm.state.freq).sum() == freq_before + pending
+    w = np.asarray(dm.state.weights)[0]
+    assert w.sum() == pytest.approx(1.0, abs=1e-3)
+    for t in range(20):  # cache still serves after the shrink
+        dm, _ = step(dm, jnp.asarray(keys[t, :4]))
+
+
+# ----------------------------------------------------------------------
+# Autoscaler
+# ----------------------------------------------------------------------
+
+def steady(hr, ev=0.0, drops=0.0, nc=900, cap=1024, lanes=8, util=None):
+    return WindowMetrics(hit_rate=hr, evictions_per_op=ev,
+                         insert_drops_per_op=drops, n_cached=nc,
+                         capacity=cap, lanes=lanes,
+                         offered_mops=util, tput_mops=1.0)
+
+
+def test_controller_steady_workload_never_oscillates():
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=3))
+    # dead band: good hit rate but occupancy above the shrink watermark
+    for _ in range(100):
+        assert ctl.observe(steady(hr=0.88, nc=900)).action == "none"
+    # persistent pressure: only ever grows, never flip-flops
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=3))
+    acts = [ctl.observe(steady(hr=0.5, ev=0.1)).action for _ in range(100)]
+    assert "shrink_memory" not in acts and "grow_memory" in acts
+
+
+def test_controller_grow_and_shrink_triggers():
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=2))
+    acts = [ctl.observe(steady(hr=0.5, ev=0.1, cap=1024)).action
+            for _ in range(3)]
+    assert "grow_memory" in acts          # fires once patience is met
+    grow = [d for d in ctl.log if d.action == "grow_memory"][0]
+    assert grow.target == 2048
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=2))
+    acts = [ctl.observe(steady(hr=0.95, nc=100, cap=4096)).action
+            for _ in range(3)]
+    assert "shrink_memory" in acts
+
+
+def test_controller_lane_scaling_by_utilization():
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=2))
+    acts = [ctl.observe(steady(hr=0.9, util=0.95)).action for _ in range(3)]
+    assert "grow_lanes" in acts
+    ctl = Autoscaler(AutoscalerConfig(patience=2, cooldown=2))
+    acts = [ctl.observe(steady(hr=0.9, util=0.1)).action for _ in range(3)]
+    assert "shrink_lanes" in acts
+
+
+def test_controller_cooldown_quiets_after_action():
+    cfg = AutoscalerConfig(patience=1, cooldown=4)
+    ctl = Autoscaler(cfg)
+    assert ctl.observe(steady(hr=0.5, ev=0.1)).action == "grow_memory"
+    for _ in range(cfg.cooldown):
+        assert ctl.observe(steady(hr=0.5, ev=0.1)).action == "none"
+
+
+# ----------------------------------------------------------------------
+# Scenario driver
+# ----------------------------------------------------------------------
+
+def test_scenario_reproduces_elastic_resize_semantics():
+    """The scenario-driver analogue of test_dm_elastic_resize_no_migration:
+    grow is a pure scalar write, shrink drains online, nothing migrates."""
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=512,
+                      experts=("lru", "lfu"))
+    keys = zipfian(8 * 300, 3_000, seed=0)
+    timeline = [(100, ("set_capacity", 1024)),
+                (200, ("set_capacity", 128))]
+    res = run_scenario(cfg, keys, timeline, n_shards=1, lanes_per_shard=8,
+                       horizon=300, window=20)
+    grow, shrink = res.events
+    assert grow["report"]["migration_bytes"] == 0
+    assert grow["report"]["drain_steps"] == 0
+    assert shrink["report"]["migration_bytes"] == 0
+    assert 1 <= shrink["report"]["drain_steps"] <= 256
+    # post-shrink windows stay at the new budget
+    for w in res.windows:
+        if w["t0"] >= 220:
+            assert w["n_cached"] <= 128 + 8, w
+            assert w["capacity"] == 128
+
+
+def test_scenario_switch_workload_and_lanes():
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=256,
+                      experts=("lru", "lfu"))
+    res = run_scenario(
+        cfg, zipfian(4 * 200, 2_000, seed=1),
+        [(50, ("set_lanes", 8)), (100, ("switch_workload", "hot"))],
+        n_shards=1, lanes_per_shard=4, horizon=200, window=25,
+        workloads={"hot": zipfian(2_000, 100, seed=2)})
+    lanes = [w["lanes"] for w in res.windows]
+    assert lanes[0] == 4 and lanes[-1] == 8
+    # tiny hot set after the switch -> near-perfect hit rate at the end
+    assert res.windows[-1]["hit_rate"] > 0.9
+    assert [e["event"] for e in res.events] == ["set_lanes",
+                                                "switch_workload"]
+
+
+def test_scenario_closed_loop_autoscaler_acts():
+    cfg = CacheConfig(n_buckets=2048, assoc=8, capacity=512,
+                      experts=("lru", "lfu"))
+    ctl = Autoscaler(AutoscalerConfig(hit_rate_floor=0.9, patience=2,
+                                      cooldown=2, min_capacity=256,
+                                      max_capacity=4096))
+    res = run_scenario(cfg, zipfian(8 * 400, 2_000, seed=3), [],
+                       n_shards=1, lanes_per_shard=8, horizon=400,
+                       window=25, controller=ctl)
+    grows = [e for e in res.events if e["event"] == "set_capacity"]
+    assert grows, "undersized pool under a hot workload must trigger growth"
+    assert res.windows[-1]["capacity"] > 512
+    assert all(e["report"]["migration_bytes"] == 0 for e in res.events)

@@ -24,8 +24,10 @@ def test_flops_match_xla_on_loop_free():
 
     co = _compile(f, x)
     ours = analyze_text(co.as_text()).flops
-    xla = co.cost_analysis()["flops"]
-    assert ours == pytest.approx(xla, rel=0.01)
+    ca = co.cost_analysis()
+    if isinstance(ca, list):  # older jax wraps the dict in a list
+        ca = ca[0]
+    assert ours == pytest.approx(ca["flops"], rel=0.01)
 
 
 def test_scan_flops_scaled_by_trip_count():
@@ -71,7 +73,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_cost import analyze_text
-mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("x",))
 def f(a):
     return jax.lax.with_sharding_constraint(a.sum(axis=0), P())
 sh = NamedSharding(mesh, P("x", None))
