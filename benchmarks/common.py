@@ -16,11 +16,14 @@ _JIT_CACHE = {}
 
 
 def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
-              n_clients=8, seed=0, is_write=None, sizes=None, **cfg_kw):
+              n_clients=8, seed=0, is_write=None, sizes=None,
+              backend="reference", **cfg_kw):
     """Run a flat trace through the JAX Ditto cache; returns (TraceResult,
-    cfg, wall_s)."""
+    cfg, wall_s). ``backend`` selects the reference (pure jnp) or fused
+    (Pallas hot-path kernels) execution engine — decision-equivalent."""
     cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
-                      capacity=capacity, experts=tuple(experts), **cfg_kw)
+                      capacity=capacity, experts=tuple(experts),
+                      backend=backend, **cfg_kw)
     k2 = interleave(keys_flat, n_clients)
     w2 = interleave(is_write, n_clients) if is_write is not None else None
     s2 = interleave(sizes, n_clients) if sizes is not None else None

@@ -17,10 +17,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation, adaptivity, algorithms, efficiency,
-                            elasticity, fc_sweep, resources, roofline_table)
+                            elasticity, fc_sweep, resources, roofline_table,
+                            throughput)
     modules = [
         ("elasticity", elasticity),       # Figs. 1, 13
         ("efficiency", efficiency),       # Figs. 2, 14, 15
+        ("throughput", throughput),       # hot path: reference vs fused
         ("adaptivity", adaptivity),       # Figs. 16-19
         ("resources", resources),         # Figs. 20-22
         ("algorithms", algorithms),       # Fig. 23, Table 3

@@ -1,23 +1,36 @@
 #!/usr/bin/env bash
 # Builder verification: tier-1 tests + quick-mode benchmark smoke runs.
-#   scripts/check.sh          # full tier-1 suite + bench smoke
-#   scripts/check.sh --fast   # skip the slow multi-device subprocess tests
+#   scripts/check.sh          # full tier-1 suite + bench smoke (>300s)
+#   scripts/check.sh --fast   # fast lane: `fast`-marked tests only (~3min),
+#                             # throughput bench smoke, no subprocess tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 PYTEST_ARGS=(-x -q)
+FAST=0
 if [[ "${1:-}" == "--fast" ]]; then
-    PYTEST_ARGS+=(-m "not slow")
+    FAST=1
+    PYTEST_ARGS+=(-m "fast and not slow")
 fi
 
 echo "== tier-1: python -m pytest ${PYTEST_ARGS[*]}"
 python -m pytest "${PYTEST_ARGS[@]}"
+
+if [[ "$FAST" == "1" ]]; then
+    echo "== bench smoke: throughput (quick)"
+    python -c "from benchmarks import throughput; throughput.run(quick=True)"
+    echo "check --fast: OK"
+    exit 0
+fi
 
 echo "== bench smoke: elasticity (quick)"
 python benchmarks/elasticity.py --quick
 
 echo "== bench smoke: adaptivity (quick)"
 python -c "from benchmarks import adaptivity; adaptivity.run(quick=True)"
+
+echo "== bench smoke: throughput (quick)"
+python -c "from benchmarks import throughput; throughput.run(quick=True)"
 
 echo "check: OK"

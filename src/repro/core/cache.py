@@ -26,6 +26,7 @@ from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
                               CacheState, ClientState, MDView, OpStats,
                               init_cache, init_clients, init_stats, stats_add)
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -70,6 +71,18 @@ def _choose_expert(weights: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum((cdf < u[..., None]).astype(I32), axis=-1)
 
 
+def apply_penalties(weights: jnp.ndarray, penalties: jnp.ndarray,
+                    lam) -> jnp.ndarray:
+    """Multiplicative-weights regret update, clamp-THEN-normalize.
+
+    The single ordering shared by the core path and the DM weight-sync
+    RPC (`dm/sharded_cache.py`): normalizing last guarantees the global
+    weights always sum to exactly 1."""
+    w = weights * jnp.exp(-lam * penalties)
+    w = jnp.maximum(w, 1e-4)
+    return w / jnp.sum(w)
+
+
 def _dedup_winner(x: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """bool[C]: True for the first occurrence of each distinct value of x
     among valid lanes (sort-based duplicate resolution)."""
@@ -104,6 +117,13 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     A = cfg.assoc
     names = cfg.experts
     adaptive = E > 1
+    fused = cfg.backend == "fused"
+    if fused:
+        unsupported = [n for n in names if n not in kops.KERNEL_EXPERTS]
+        if unsupported:
+            raise ValueError(
+                f"backend='fused' supports experts {kops.KERNEL_EXPERTS}; "
+                f"got {unsupported} (use backend='reference')")
 
     op = keys != 0
     if is_write is None:
@@ -119,6 +139,8 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     # ------------------------------------------------------------------
     # 1. Bucket probe (1 RDMA_READ per op; with SFHT it carries metadata).
+    #    fused: one Pallas pass does the bucket match + history match;
+    #    the bucket gathers below are still needed by the insert path (4).
     # ------------------------------------------------------------------
     kh = hash_key(keys)
     bucket = bucket_of(kh, cfg.n_buckets)
@@ -129,20 +151,29 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     b_ptr = state.ptr[bslots]
 
     live = _is_live(b_size)
-    match = live & (b_key == keys[:, None]) & op[:, None]
-    found = jnp.any(match, axis=1)
-    mslot = jnp.take_along_axis(
-        bslots, jnp.argmax(match, axis=1)[:, None], axis=1)[:, 0]
-    slot = jnp.where(found, mslot, -1)
-
-    # History probe: same bucket read (embedded entries, §4.3.1).
     is_hist = b_size == SIZE_HISTORY
     h_age = _hist_age(state.hist_ctr, b_ptr)
     h_valid = is_hist & (h_age < U32(cfg.history_len))
-    h_match = h_valid & (b_hash == kh[:, None]) & op[:, None]
-    hist_found = jnp.any(h_match, axis=1) & ~found
-    hslot = jnp.take_along_axis(
-        bslots, jnp.argmax(h_match, axis=1)[:, None], axis=1)[:, 0]
+
+    if fused:
+        found, slot, hist_found, hslot = kops.access_probe_op(
+            state.key, state.size, state.key_hash, state.ptr, keys,
+            state.hist_ctr, assoc=A, history_len=cfg.history_len)
+        found = found & op
+        hist_found = hist_found & op
+        slot = jnp.where(found, slot, -1)
+    else:
+        match = live & (b_key == keys[:, None]) & op[:, None]
+        found = jnp.any(match, axis=1)
+        mslot = jnp.take_along_axis(
+            bslots, jnp.argmax(match, axis=1)[:, None], axis=1)[:, 0]
+        slot = jnp.where(found, mslot, -1)
+
+        # History probe: same bucket read (embedded entries, §4.3.1).
+        h_match = h_valid & (b_hash == kh[:, None]) & op[:, None]
+        hist_found = jnp.any(h_match, axis=1) & ~found
+        hslot = jnp.take_along_axis(
+            bslots, jnp.argmax(h_match, axis=1)[:, None], axis=1)[:, 0]
     regret = hist_found & adaptive & cfg.use_lwh
 
     hit = found
@@ -150,22 +181,27 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     # ------------------------------------------------------------------
     # 2. Metadata update on hits (stateless: one combined RDMA_WRITE with
-    #    SFHT; stateful freq goes through the FC cache).
+    #    SFHT; stateful freq goes through the FC cache). fused: one Pallas
+    #    pass applies last_ts/ext at hit slots + the combining freq FAA.
     # ------------------------------------------------------------------
-    old_last = state.last_ts[jnp.maximum(slot, 0)]
-    old_freq = state.freq[jnp.maximum(slot, 0)]
-    new_ext = prio.update_ext(state.ext[jnp.maximum(slot, 0)],
-                              old_last, old_freq, clock)
-    upd_idx = jnp.where(hit, slot, state.key.shape[0])
-    last_ts = state.last_ts.at[upd_idx].max(clock, mode="drop")
-    ext = state.ext.at[upd_idx].set(new_ext, mode="drop")
+    clients, emit = fc_access(cfg, clients, jnp.where(hit, slot, -1), clock)
+    if fused:
+        freq, last_ts, ext = kops.hit_metadata_update_op(
+            state.freq, state.last_ts, state.ext, jnp.where(hit, slot, -1),
+            emit.slot.reshape(-1), emit.delta.reshape(-1), clock)
+    else:
+        old_last = state.last_ts[jnp.maximum(slot, 0)]
+        old_freq = state.freq[jnp.maximum(slot, 0)]
+        new_ext = prio.update_ext(state.ext[jnp.maximum(slot, 0)],
+                                  old_last, old_freq, clock)
+        upd_idx = jnp.where(hit, slot, state.key.shape[0])
+        last_ts = state.last_ts.at[upd_idx].max(clock, mode="drop")
+        ext = state.ext.at[upd_idx].set(new_ext, mode="drop")
+        freq = fc_apply(state.freq, emit)
     # SETs overwrite payloads (last-writer-wins within the batch).
     val_idx = jnp.where(hit & is_write, slot, state.key.shape[0])
     vals = state.values.at[val_idx].set(values, mode="drop")
     sizes_upd = state.size.at[val_idx].set(obj_size, mode="drop")
-
-    clients, emit = fc_access(cfg, clients, jnp.where(hit, slot, -1), clock)
-    freq = fc_apply(state.freq, emit)
 
     # ------------------------------------------------------------------
     # 3. Regret collection + lazy expert-weight update (§4.3.2).
@@ -187,9 +223,7 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     else:
         syncing = regret  # eager: RPC on every regret
     tot_pen = jnp.sum(jnp.where(syncing[:, None], pacc, 0.0), axis=0)
-    gw = state.weights * jnp.exp(-lam * tot_pen)
-    gw = jnp.maximum(gw, 1e-4)
-    gw = gw / jnp.sum(gw)
+    gw = apply_penalties(state.weights, tot_pen, lam)
     local_w = jnp.where(syncing[:, None], gw[None, :], local_w)
     local_w = jnp.maximum(local_w, 1e-4)
     pacc = jnp.where(syncing[:, None], 0.0, pacc)
@@ -258,35 +292,50 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # Contiguous-window sampling (§4.2.1): ONE read of W consecutive slots
     # from a random offset; the first K live objects in the window are the
     # sample. (This is also the TPU-friendly layout: one dense tile.)
+    # fused: the whole decision — window gather, E expert priorities,
+    # chosen-expert ranking, per-op quota — is one Pallas call over
+    # wrap-padded metadata columns; victims come back as [C, K].
     W = cfg.sample_window or 4 * K
     offs = jax.vmap(lambda r: jax.random.randint(
         jax.random.fold_in(r, 2), (), 0, cfg.n_slots))(step_rng)
-    samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots   # [C, W]
-    s_md = _md_view(state, samp)
-    s_live_raw = _is_live(state.size[samp])
-    in_sample = s_live_raw & (jnp.cumsum(s_live_raw, axis=1) <= K)
-    s_live = in_sample
-    s_prio = prio.priorities(s_md, names)                     # [C, W, E]
-    s_prio = jnp.where(s_live[:, :, None], s_prio, jnp.inf)
-    cand_k = jnp.argmin(s_prio, axis=1)                       # [C, E]
-    cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)     # [C, E]
+    if fused:
+        wrap = lambda x: jnp.concatenate([x, x[:W]])
+        victims_2d, cand_slot = kops.ranked_eviction_op(
+            wrap(state.size), wrap(state.insert_ts), wrap(state.last_ts),
+            wrap(state.freq), offs, e_choice, must_evict, quota, clock,
+            window=W, k=K, experts=names)                     # [C, K], [C, E]
+        take = victims_2d >= 0
+    else:
+        samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots  # [C, W]
+        s_md = _md_view(state, samp)
+        s_live_raw = _is_live(state.size[samp])
+        in_sample = s_live_raw & (jnp.cumsum(s_live_raw, axis=1) <= K)
+        s_live = in_sample
+        s_prio = prio.priorities(s_md, names)                 # [C, W, E]
+        s_prio = jnp.where(s_live[:, :, None], s_prio, jnp.inf)
+        cand_k = jnp.argmin(s_prio, axis=1)                   # [C, E]
+        cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)  # [C, E]
 
-    # Chosen expert's priority ranking over this op's samples.
-    prio_e = jnp.take_along_axis(
-        s_prio, e_choice[:, None, None], axis=2)[:, :, 0]     # [C, W]
-    rank_order = jnp.argsort(prio_e, axis=1)                  # low prio first
-    ranked_slot = jnp.take_along_axis(samp, rank_order, axis=1)
-    ranked_live = jnp.take_along_axis(s_live, rank_order, axis=1)
-    take = (jnp.arange(W)[None, :] < quota) & ranked_live & must_evict[:, None]
-    victims = jnp.where(take, ranked_slot, -1).reshape(-1)    # [C*W]
-    ev_winner = _dedup_winner(victims, victims >= 0)          # [C*W]
+        # Chosen expert's priority ranking over this op's samples.
+        prio_e = jnp.take_along_axis(
+            s_prio, e_choice[:, None, None], axis=2)[:, :, 0]  # [C, W]
+        rank_order = jnp.argsort(prio_e, axis=1)              # low prio first
+        ranked_slot = jnp.take_along_axis(samp, rank_order, axis=1)
+        ranked_live = jnp.take_along_axis(s_live, rank_order, axis=1)
+        take = ((jnp.arange(W)[None, :] < quota) & ranked_live
+                & must_evict[:, None])
+        victims_2d = jnp.where(take, ranked_slot, -1)         # [C, W]
+    V = victims_2d.shape[1]  # W reference / K fused; take is all-False
+    # beyond rank K in both (quota <= K), so decisions coincide.
+    victims = victims_2d.reshape(-1)                          # [C*V]
+    ev_winner = _dedup_winner(victims, victims >= 0)          # [C*V]
     n_evict = jnp.sum(ev_winner).astype(I32)
     evicting = must_evict & jnp.any(take, axis=1)
 
     # Expert bitmap per victim: experts whose candidate matches, plus the
     # evicting op's chosen expert (Fig. 9).
-    cand_rep = jnp.repeat(cand_slot, W, axis=0)               # [C*W, E]
-    e_rep = jnp.repeat(e_choice, W)                           # [C*W]
+    cand_rep = jnp.repeat(cand_slot, V, axis=0)               # [C*V, E]
+    e_rep = jnp.repeat(e_choice, V)                           # [C*V]
     bmap = jnp.sum(((cand_rep == victims[:, None]).astype(U32)
                     << jnp.arange(E, dtype=U32)[None, :]), axis=1)
     bmap = bmap | (U32(1) << e_rep.astype(U32))

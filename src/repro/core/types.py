@@ -47,6 +47,9 @@ class CacheConfig:
     fc_size: int = 64                   # frequency-counter cache entries
     fc_threshold: int = 10              # flush threshold t
     value_words: int = 2                # payload u32 words per object
+    backend: str = "reference"          # "reference" (pure jnp) | "fused"
+                                        # (Pallas hot-path kernels; decision-
+                                        # equivalent, see DESIGN.md §5)
     # Ablation / cost-model toggles (Fig. 24): these change the *issued
     # remote-op accounting* and, for the FC cache, real behaviour.
     use_sfht: bool = True               # sample-friendly hash table
@@ -78,6 +81,8 @@ class CacheConfig:
                 " (live objects + embedded history entries)")
         if self.n_experts > 32:
             raise ValueError("expert bitmap is 32 bits wide")
+        if self.backend not in ("reference", "fused"):
+            raise ValueError(f"unknown backend {self.backend!r}")
 
 
 class CacheState(NamedTuple):
@@ -142,6 +147,8 @@ class OpStats(NamedTuple):
     evictions: jnp.ndarray
     bucket_evictions: jnp.ndarray   # in-bucket fallback evictions
     insert_drops: jnp.ndarray       # inserts dropped on full buckets
+    route_drops: jnp.ndarray        # DM requests beyond the router's lane
+                                    # capacity (counted, never silent)
     fc_hits: jnp.ndarray
     fc_flushes: jnp.ndarray
     weight_syncs: jnp.ndarray

@@ -26,10 +26,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.cache import access
+from repro.core.cache import access, apply_penalties
 from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
-                              init_cache, init_clients, init_stats)
+                              init_cache, init_clients, init_stats,
+                              stats_add)
 
 AXIS = "pool"
 
@@ -38,6 +39,34 @@ class DMCache(NamedTuple):
     state: CacheState      # slot arrays sharded over AXIS (bucket ranges)
     clients: ClientState   # client lanes sharded over AXIS
     stats: OpStats         # per-shard counters (psum at read time)
+
+
+def _pad_clients(clients: ClientState, n: int) -> ClientState:
+    """Present a shard's client lanes as n request lanes (q-padded).
+
+    Replicating lanes verbatim would duplicate their `rng` streams —
+    padded lanes would fold in the same key and produce identical sample
+    offsets / expert choices (correlated evictions). The lane index is
+    folded into every padded-tail key so each presented lane draws an
+    independent stream; the original lanes keep their stored keys."""
+    lanes = clients.fc_slot.shape[0]
+
+    def pad(x):
+        reps = -(-n // x.shape[0])
+        return jnp.concatenate([x] * reps, axis=0)[:n]
+
+    padded = jax.tree.map(pad, clients)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    folded = jax.vmap(jax.random.fold_in)(padded.rng, idx)
+    rng = jnp.where((idx < lanes)[:, None], padded.rng, folded)
+    return padded._replace(rng=rng)
+
+
+def _unpad_clients(orig: ClientState, padded: ClientState,
+                   lanes: int) -> ClientState:
+    def cut(o, p):
+        return p[:lanes] if p.shape[0] >= lanes else o
+    return jax.tree.map(cut, orig, padded)
 
 
 def _mesh(n: int) -> Mesh:
@@ -83,12 +112,24 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
 
 
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
-              keys: jnp.ndarray, is_write=None) -> Tuple[DMCache, jnp.ndarray]:
-    """One DM step: keys [n_shards * lanes] (0 = no-op). Returns hits."""
+              keys: jnp.ndarray, is_write=None,
+              route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+    """One DM step: keys [n_shards * lanes] (0 = no-op). Returns hits.
+
+    Routing capacity: each source shard can send up to
+    ``q = min(lanes, route_factor * lanes / n_shards + 1)`` requests to
+    any one destination shard per step (``route_factor <= 0`` means full
+    capacity, q = lanes: no request can ever be dropped). Requests beyond
+    the capacity — possible only under extreme key skew — are *counted*
+    in ``OpStats.route_drops`` (they behave like failed-CAS retries:
+    callers subtract them from issued ops, they are never silently lost;
+    see DESIGN.md §2)."""
     n_shards = mesh.shape[AXIS]
     lanes = keys.shape[0] // n_shards
-    # Route capacity per (src, dst) pair: 2x the fair share, padded.
-    q = max(1, int(2 * lanes / n_shards) + 1)
+    if route_factor <= 0:
+        q = lanes
+    else:
+        q = max(1, min(lanes, route_factor * lanes // n_shards + 1))
     global_buckets = local_cfg.n_buckets * n_shards
 
     if is_write is None:
@@ -104,6 +145,8 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         # --- client side: decide owners, pack per-destination slots -----
         kh = hash_key(keys_l)
         owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
+        # no-op lanes (key 0) route nowhere and never consume capacity
+        owner = jnp.where(keys_l != 0, owner, n_shards)
         # rank within destination
         order = jnp.argsort(owner * (lanes + 1)
                             + jnp.arange(lanes, dtype=owner.dtype))
@@ -122,6 +165,10 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
         src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
                                             mode="drop")
+        # Requests beyond the per-destination capacity are NOT executed
+        # this step (the caller sees hit=False and may reissue); count
+        # them so skewed-trace hit ratios stay honest.
+        n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
         # --- the network: exchange request blocks (RDMA analogue) -------
         recv = jax.lax.all_to_all(send, AXIS, 0, 0, tiled=True)      # [S*q]
         wrecv = jax.lax.all_to_all(wsend, AXIS, 0, 0, tiled=True)
@@ -132,6 +179,7 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         state, clients2, stats, res = access(
             local_cfg, state, _pad_clients(clients, n_shards * q), stats,
             recv, is_write=wrecv)
+        stats = stats_add(stats, route_drops=n_drop)
 
         # --- route replies back + merge hit mask ------------------------
         hit_back = jax.lax.all_to_all(
@@ -151,8 +199,9 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         pen = jnp.sum(clients.penalty_acc, axis=0)
         pen_global = jax.lax.psum(jnp.where(do_sync, pen, 0.0), AXIS)
         lam = jnp.float32(local_cfg.learning_rate)
-        w = state.weights * jnp.exp(-lam * pen_global)
-        w = jnp.maximum(w / jnp.sum(w), 1e-4)
+        # Shared clamp-then-normalize update (core/cache.py): global
+        # weights sum to exactly 1 on the DM path too.
+        w = apply_penalties(state.weights, pen_global, lam)
         state = state._replace(weights=jnp.where(do_sync, w, state.weights))
         clients = clients._replace(
             penalty_acc=jnp.where(do_sync, 0.0, clients.penalty_acc),
@@ -167,18 +216,6 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             gds_L=state.gds_L[None], capacity=state.capacity[None])
         stats = jax.tree.map(lambda x: x[None], stats)
         return state, clients, stats, hits
-
-    def _pad_clients(clients, n):
-        """Present the shard's lanes as n request lanes (q-padded)."""
-        def pad(x):
-            reps = -(-n // x.shape[0])
-            return jnp.concatenate([x] * reps, axis=0)[:n]
-        return jax.tree.map(pad, clients)
-
-    def _unpad_clients(orig, padded, lanes):
-        def cut(o, p):
-            return p[:lanes] if p.shape[0] >= lanes else o
-        return jax.tree.map(cut, orig, padded)
 
     spec_state = jax.tree.map(lambda _: P(AXIS), dm.state)
     spec_clients = jax.tree.map(lambda _: P(AXIS), dm.clients)

@@ -1,9 +1,21 @@
-"""Hash-table bucket-probe Pallas kernel.
+"""Hash-table bucket-probe Pallas kernels.
 
 The client-side Get path: hash the key (splitmix32 on the VPU, pure u32
 ALU), locate the bucket, compare the ``assoc`` slots, return (found, slot).
 On DM this is the 1-RDMA_READ bucket fetch; here the bucket rows stream
 from the VMEM-resident atomic fields.
+
+Two kernels live here:
+
+* ``bucket_lookup`` — the standalone probe (found, slot) kept as the
+  minimal demo/benchmark kernel.
+* ``access_probe`` — the production Get path used by the ``fused``
+  backend of ``core/cache.py``: one fused pass that performs the bucket
+  probe *and* the embedded-history match (paper §4.3.1) against the
+  sample-friendly table, returning (found, slot, hist_found, hist_slot).
+
+Both pad the request batch internally to a multiple of ``block_b`` and
+mask, so callers with odd batch widths never crash.
 """
 
 from __future__ import annotations
@@ -16,10 +28,23 @@ from jax.experimental import pallas as pl
 
 
 def _hash_u32(x):
+    # Mirror of repro.core.hashing.splitmix32 — the semantics contract is
+    # enforced by the kernel-vs-reference tests.
     x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
     x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
     x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
     return (x ^ (x >> 16)).astype(jnp.uint32)
+
+
+def _pad_batch(x, block_b, fill=0):
+    """Pad a [B, ...] batch to a multiple of block_b with ``fill``."""
+    B = x.shape[0]
+    rem = B % block_b
+    if rem == 0:
+        return x, B
+    pad = block_b - rem
+    padding = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, padding], axis=0), B
 
 
 def _kernel(tkey_ref, tsize_ref, keys_ref, found_ref, slot_ref, *,
@@ -45,22 +70,101 @@ def _kernel(tkey_ref, tsize_ref, keys_ref, found_ref, slot_ref, *,
 def bucket_lookup(table_key, table_size, keys, *, assoc: int = 8,
                   block_b: int = 8, interpret: bool = True):
     """table_key: u32[n_slots]; table_size: u32[n_slots]; keys: u32[B].
-    Returns (found bool[B], slot i32[B])."""
-    B = keys.shape[0]
-    assert B % block_b == 0
+    Returns (found bool[B], slot i32[B]). B need not divide block_b —
+    the batch is padded internally (key 0 never matches a live slot)."""
+    keys, B = _pad_batch(keys, block_b)
+    Bp = keys.shape[0]
     n_buckets = table_key.shape[0] // assoc
-    grid = (B // block_b,)
+    grid = (Bp // block_b,)
     table_spec = pl.BlockSpec(table_key.shape, lambda i: (0,))
     fn = functools.partial(_kernel, assoc=assoc, n_buckets=n_buckets,
                            block_b=block_b)
-    return pl.pallas_call(
+    found, slot = pl.pallas_call(
         fn,
         grid=grid,
         in_specs=[table_spec, table_spec,
                   pl.BlockSpec((block_b,), lambda i: (i,))],
         out_specs=(pl.BlockSpec((block_b,), lambda i: (i,)),
                    pl.BlockSpec((block_b,), lambda i: (i,))),
-        out_shape=(jax.ShapeDtypeStruct((B,), jnp.bool_),
-                   jax.ShapeDtypeStruct((B,), jnp.int32)),
+        out_shape=(jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bp,), jnp.int32)),
         interpret=interpret,
     )(table_key, table_size.astype(jnp.uint32), keys)
+    return found[:B], slot[:B]
+
+
+def _probe_kernel(tkey_ref, tsize_ref, thash_ref, tptr_ref, keys_ref,
+                  hctr_ref, found_ref, slot_ref, hfound_ref, hslot_ref, *,
+                  assoc, n_buckets, history_len, block_b):
+    keys = keys_ref[...]
+    kh = _hash_u32(keys)
+    bucket = (kh % jnp.uint32(n_buckets)).astype(jnp.int32)
+    base = bucket * assoc
+
+    rows = []
+    for ref in (tkey_ref, tsize_ref, thash_ref, tptr_ref):
+        rows.append(jnp.stack([
+            jax.lax.dynamic_slice(ref[...], (base[i],), (assoc,))
+            for i in range(block_b)]))                      # [block_b, A]
+    tk, ts, th, tp = rows
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_b, assoc), 1)
+    bslots = base[:, None] + cols
+
+    # Live-object match.
+    live = (ts > 0) & (ts < 255)
+    match = live & (tk == keys[:, None])
+    found = jnp.any(match, axis=1)
+    mslot = jnp.take_along_axis(
+        bslots, jnp.argmax(match, axis=1)[:, None], axis=1)[:, 0]
+
+    # Embedded history match: same bucket read carries the history entries
+    # (size == 255 slots tagged with a logical-FIFO id in `ptr`).
+    is_hist = ts == 255
+    age = (hctr_ref[0] - tp).astype(jnp.uint32)             # wrap-around age
+    h_valid = is_hist & (age < jnp.uint32(history_len))
+    h_match = h_valid & (th == kh[:, None])
+    hfound = jnp.any(h_match, axis=1) & ~found
+    hslot = jnp.take_along_axis(
+        bslots, jnp.argmax(h_match, axis=1)[:, None], axis=1)[:, 0]
+
+    found_ref[...] = found
+    slot_ref[...] = jnp.where(found, mslot, -1).astype(jnp.int32)
+    hfound_ref[...] = hfound
+    hslot_ref[...] = hslot.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("assoc", "history_len",
+                                             "block_b", "interpret"))
+def access_probe(table_key, table_size, table_hash, table_ptr, keys,
+                 hist_ctr, *, assoc: int = 8, history_len: int = 1024,
+                 block_b: int = 8, interpret: bool = True):
+    """Fused Get-path probe: bucket match + embedded-history match.
+
+    table_*: u32[n_slots]; keys: u32[B]; hist_ctr: u32[] global history
+    counter. Returns (found bool[B], slot i32[B] (-1 miss),
+    hist_found bool[B], hist_slot i32[B] — the matching history slot,
+    bucket base where there is no match, mirroring the reference path).
+    """
+    keys, B = _pad_batch(keys, block_b)
+    Bp = keys.shape[0]
+    n_buckets = table_key.shape[0] // assoc
+    grid = (Bp // block_b,)
+    table_spec = pl.BlockSpec(table_key.shape, lambda i: (0,))
+    lane_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    fn = functools.partial(_probe_kernel, assoc=assoc, n_buckets=n_buckets,
+                           history_len=history_len, block_b=block_b)
+    found, slot, hfound, hslot = pl.pallas_call(
+        fn,
+        grid=grid,
+        in_specs=[table_spec, table_spec, table_spec, table_spec, lane_spec,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=(lane_spec, lane_spec, lane_spec, lane_spec),
+        out_shape=(jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bp,), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bp,), jnp.int32)),
+        interpret=interpret,
+    )(table_key.astype(jnp.uint32), table_size.astype(jnp.uint32),
+      table_hash.astype(jnp.uint32), table_ptr.astype(jnp.uint32), keys,
+      jnp.asarray(hist_ctr, jnp.uint32).reshape(1))
+    return found[:B], slot[:B], hfound[:B], hslot[:B]

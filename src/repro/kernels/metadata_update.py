@@ -39,6 +39,110 @@ def _kernel(slots_ref, delta_ref, clock_ref, freq_ref, last_ref,
         touched, jnp.maximum(last_ref[...], clock_ref[0]), last_ref[...])
 
 
+def _ext_constants():
+    # Imported at kernel-trace time, not module time: core.cache imports
+    # kernels.ops, so a module-level import here would be circular.
+    from repro.core.priority import LRFU_LAMBDA, LRUK_K
+    return float(LRUK_K), float(LRFU_LAMBDA)
+
+
+def _hit_kernel(hit_ref, emit_ref, delta_ref, clock_ref, freq_ref, last_ref,
+                ext_ref, freq_out_ref, last_out_ref, ext_out_ref, *, block_c):
+    i = pl.program_id(0)
+    lo = i * block_c
+    # freq/last keep the caller's (integer) dtype end to end — only the
+    # ext math runs in f32, mirroring the reference exactly at any clock.
+    clock = clock_ref[0]
+    clock_f = clock.astype(jnp.float32)
+    freq = freq_ref[...]
+    last = last_ref[...]
+    ext = ext_ref[...]
+
+    # Hit slots: stateless combined write (last_ts max + ext columns).
+    hits = hit_ref[...]
+    hl = hits - lo
+    pos = jax.lax.broadcasted_iota(jnp.int32, (hits.shape[0], block_c), 1)
+    hmatch = (hl[:, None] == pos) & (hits >= 0)[:, None]
+    touched = jnp.any(hmatch, axis=0)
+
+    # FC-cache flush slots: the combining remote FAA on `freq`, as a
+    # one-hot matmul on the MXU (duplicate slots combine for free).
+    emits = emit_ref[...]
+    el = emits - lo
+    epos = jax.lax.broadcasted_iota(jnp.int32, (emits.shape[0], block_c), 1)
+    ematch = (el[:, None] == epos) & (emits >= 0)[:, None]
+    add = jnp.dot(delta_ref[...].astype(jnp.float32),
+                  ematch.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+
+    # Extension metadata recomputed tile-wide from the step-entry snapshot
+    # (mirror of priority.update_ext), then selected at touched slots —
+    # duplicate hits write identical values so first/last-writer agree.
+    lruk_k, lrfu_lambda = _ext_constants()
+    new_freq = freq.astype(jnp.float32) + 1.0
+    widx = jnp.mod(new_freq, lruk_k)
+    ts0 = jnp.where(widx == 0.0, clock_f, ext[:, 0])
+    ts1 = jnp.where(widx == 1.0, clock_f, ext[:, 1])
+    gap = clock_f - last.astype(jnp.float32)
+    crf = 1.0 + ext[:, 2] * jnp.exp2(-lrfu_lambda * gap)
+    new_ext = jnp.stack([ts0, ts1, crf, gap], axis=-1)
+
+    freq_out_ref[...] = freq + add.astype(freq.dtype)
+    last_out_ref[...] = jnp.where(
+        touched, jnp.maximum(last, clock.astype(last.dtype)), last)
+    ext_out_ref[...] = jnp.where(touched[:, None], new_ext, ext)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def hit_metadata_update(freq, last_ts, ext, hit_slots, emit_slots,
+                        emit_deltas, clock, *, block_c: int = 512,
+                        interpret: bool = True):
+    """Fused hit-side metadata update (the production hot path).
+
+    One pass over the metadata table applying, per table tile:
+      * ``last_ts[s] = max(last_ts[s], clock)`` and the extension-column
+        update (LRU-K ring / LRFU CRF / LIRS IRR) at every hit slot;
+      * ``freq[s] += delta`` for every FC-cache flush (the remote FAA).
+
+    freq/last_ts: u32[C] (or f32 — their dtype is preserved end to end,
+    so integer timestamps never round-trip through f32); ext:
+    f32[C, EXT_WIDTH]; hit_slots: i32[Bh] and emit_slots: i32[Be] with
+    -1 = no-op; emit_deltas: f32[Be]. Returns updated
+    (freq, last_ts, ext). C is padded internally to a multiple of
+    ``block_c``.
+    """
+    c = freq.shape[0]
+    ew = ext.shape[1]
+    pad = (-c) % block_c
+    if pad:
+        freq = jnp.concatenate([freq, jnp.zeros((pad,), freq.dtype)])
+        last_ts = jnp.concatenate([last_ts, jnp.zeros((pad,), last_ts.dtype)])
+        ext = jnp.concatenate([ext, jnp.zeros((pad, ew), ext.dtype)])
+    cp = c + pad
+    grid = (cp // block_c,)
+    upd_spec = pl.BlockSpec(hit_slots.shape, lambda i: (0,))
+    emit_spec = pl.BlockSpec(emit_slots.shape, lambda i: (0,))
+    freq2, last2, ext2 = pl.pallas_call(
+        functools.partial(_hit_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[upd_spec, emit_spec, emit_spec,
+                  pl.BlockSpec((1,), lambda i: (0,)),
+                  pl.BlockSpec((block_c,), lambda i: (i,)),
+                  pl.BlockSpec((block_c,), lambda i: (i,)),
+                  pl.BlockSpec((block_c, ew), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block_c,), lambda i: (i,)),
+                   pl.BlockSpec((block_c,), lambda i: (i,)),
+                   pl.BlockSpec((block_c, ew), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((cp,), freq.dtype),
+                   jax.ShapeDtypeStruct((cp,), last_ts.dtype),
+                   jax.ShapeDtypeStruct((cp, ew), ext.dtype)),
+        interpret=interpret,
+    )(hit_slots.astype(jnp.int32), emit_slots.astype(jnp.int32),
+      emit_deltas.astype(jnp.float32),
+      jnp.asarray(clock).reshape(1), freq, last_ts, ext)
+    return freq2[:c], last2[:c], ext2[:c]
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def metadata_update(freq, last_ts, slots, deltas, clock, *,
                     block_c: int = 512, interpret: bool = True):

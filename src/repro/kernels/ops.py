@@ -9,12 +9,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bucket_lookup import bucket_lookup
+from repro.kernels.bucket_lookup import access_probe, bucket_lookup
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.metadata_update import metadata_update
-from repro.kernels.sampled_eviction import KERNEL_EXPERTS, sampled_eviction
+from repro.kernels.metadata_update import hit_metadata_update, metadata_update
+from repro.kernels.sampled_eviction import (KERNEL_EXPERTS, ranked_eviction,
+                                            sampled_eviction)
 
-__all__ = ["sampled_eviction_op", "bucket_lookup_op", "metadata_update_op",
+__all__ = ["sampled_eviction_op", "ranked_eviction_op", "bucket_lookup_op",
+           "access_probe_op", "metadata_update_op", "hit_metadata_update_op",
            "flash_attention_op", "KERNEL_EXPERTS"]
 
 
@@ -36,6 +38,29 @@ def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
         interpret=_interpret_default())
 
 
+def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
+                       must_evict, quota, clock, *, window=20, k=5,
+                       experts=("lru", "lfu"), block_b=8):
+    """Quota-extended fused eviction: chosen-expert ranking, up to `quota`
+    victims per op. Table arrays are f32[C + window] wrap-padded
+    (`concatenate([x, x[:window]])`); returned slots are mod C."""
+    return ranked_eviction(
+        size.astype(jnp.float32), insert_ts.astype(jnp.float32),
+        last_ts.astype(jnp.float32), freq.astype(jnp.float32),
+        offsets.astype(jnp.int32), e_choice.astype(jnp.int32),
+        must_evict.astype(jnp.bool_), quota, clock,
+        window=window, k=k, experts=tuple(experts), block_b=block_b,
+        interpret=_interpret_default())
+
+
+def access_probe_op(table_key, table_size, table_hash, table_ptr, keys,
+                    hist_ctr, *, assoc=8, history_len=1024, block_b=8):
+    """Fused Get-path probe: bucket match + embedded-history match."""
+    return access_probe(table_key, table_size, table_hash, table_ptr, keys,
+                        hist_ctr, assoc=assoc, history_len=history_len,
+                        block_b=block_b, interpret=_interpret_default())
+
+
 def bucket_lookup_op(table_key, table_size, keys, *, assoc=8, block_b=8):
     return bucket_lookup(table_key.astype(jnp.uint32),
                          table_size.astype(jnp.uint32),
@@ -49,6 +74,17 @@ def metadata_update_op(freq, last_ts, slots, deltas, clock, *, block_c=512):
                            slots.astype(jnp.int32),
                            deltas.astype(jnp.float32), clock,
                            block_c=block_c, interpret=_interpret_default())
+
+
+def hit_metadata_update_op(freq, last_ts, ext, hit_slots, emit_slots,
+                           emit_deltas, clock, *, block_c=512):
+    """Fused hit-side metadata update: last_ts max + ext columns at hit
+    slots, combining freq FAA at FC-flush slots. freq/last_ts keep their
+    caller dtype (u32 in the cache) — no f32 round-trip of timestamps."""
+    return hit_metadata_update(
+        freq, last_ts, ext.astype(jnp.float32), hit_slots.astype(jnp.int32),
+        emit_slots.astype(jnp.int32), emit_deltas.astype(jnp.float32),
+        clock, block_c=block_c, interpret=_interpret_default())
 
 
 def flash_attention_op(q, k, v, *, blk_q=128, blk_k=128):

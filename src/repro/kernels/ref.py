@@ -66,6 +66,98 @@ def sampled_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
     return victim.astype(jnp.int32), cand.astype(jnp.int32)
 
 
+def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
+                        must_evict, quota, clock, *, window: int, k: int,
+                        experts):
+    """Reference for the quota-extended ranked eviction kernel.
+
+    Mirrors `core/cache.py` step 5: priorities over the sampled window,
+    chosen-expert stable ranking, up to `quota` victims per evicting op.
+    Table arrays are f32[C + window] wrap-padded; returned slots mod C.
+
+    Returns:
+      victims: i32[B, k] ranked victim slots, -1 where not taken.
+      cand:    i32[B, E] per-expert argmin candidate.
+    """
+    C = size.shape[0] - window
+    idx = offsets[:, None] + jnp.arange(window)[None, :]          # [B, W]
+    s = size[idx]
+    live = (s > 0) & (s < 255)
+    in_sample = live & (jnp.cumsum(live, axis=1) <= k)
+    pr = priorities_ref(s, insert_ts[idx], last_ts[idx], freq[idx],
+                        clock, experts)                           # [B, W, E]
+    pr = jnp.where(in_sample[..., None], pr, jnp.inf)
+    cand_w = jnp.argmin(pr, axis=1)                               # [B, E]
+    cand = jnp.take_along_axis(idx, cand_w, axis=1) % C
+
+    pr_sel = jnp.take_along_axis(
+        pr, e_choice[:, None, None], axis=2)[:, :, 0]             # [B, W]
+    order = jnp.argsort(pr_sel, axis=1)                           # stable
+    ranked_idx = jnp.take_along_axis(idx, order, axis=1)
+    ranked_live = jnp.take_along_axis(in_sample, order, axis=1)
+    take = ((jnp.arange(window)[None, :] < quota) & ranked_live
+            & must_evict[:, None])
+    victims = jnp.where(take, ranked_idx % C, -1)[:, :k]
+    return victims.astype(jnp.int32), cand.astype(jnp.int32)
+
+
+def access_probe_ref(table_key, table_size, table_hash, table_ptr, keys,
+                     hist_ctr, *, assoc: int, history_len: int):
+    """Reference fused Get-path probe: bucket match + history match.
+
+    Returns (found bool[B], slot i32[B] (-1 miss), hist_found bool[B],
+    hist_slot i32[B])."""
+    n_buckets = table_key.shape[0] // assoc
+    kh = hash_key(keys)
+    bucket = bucket_of(kh, n_buckets)
+    slots = bucket[:, None] * assoc + jnp.arange(assoc)[None, :]
+    sz = table_size[slots]
+    live = (sz > 0) & (sz < 255)
+    match = live & (table_key[slots] == keys[:, None])
+    found = jnp.any(match, axis=1)
+    slot = jnp.take_along_axis(slots, jnp.argmax(match, axis=1)[:, None],
+                               axis=1)[:, 0]
+    is_hist = sz == 255
+    age = (jnp.asarray(hist_ctr, jnp.uint32)
+           - table_ptr[slots].astype(jnp.uint32)).astype(jnp.uint32)
+    h_valid = is_hist & (age < jnp.uint32(history_len))
+    h_match = h_valid & (table_hash[slots] == kh[:, None])
+    hist_found = jnp.any(h_match, axis=1) & ~found
+    hslot = jnp.take_along_axis(slots, jnp.argmax(h_match, axis=1)[:, None],
+                                axis=1)[:, 0]
+    return (found, jnp.where(found, slot, -1).astype(jnp.int32),
+            hist_found, hslot.astype(jnp.int32))
+
+
+def hit_metadata_update_ref(freq, last_ts, ext, hit_slots, emit_slots,
+                            emit_deltas, clock, *, lruk_k=None,
+                            lrfu_lambda=None):
+    """Reference fused hit-side metadata update.
+
+    last_ts[s] = max(last_ts[s], clock) and the extension-column update at
+    hit slots; freq[s] += delta at FC-flush slots (combining FAA).
+    hit_slots/emit_slots use -1 as no-op."""
+    from repro.core.priority import LRFU_LAMBDA, LRUK_K
+    lruk_k = float(LRUK_K) if lruk_k is None else lruk_k
+    lrfu_lambda = LRFU_LAMBDA if lrfu_lambda is None else lrfu_lambda
+    n = freq.shape[0]
+    ok_h = hit_slots >= 0
+    hidx = jnp.where(ok_h, hit_slots, n)
+    ok_e = emit_slots >= 0
+    eidx = jnp.where(ok_e, emit_slots, n)
+    freq2 = freq.at[eidx].add(jnp.where(ok_e, emit_deltas, 0.0), mode="drop")
+    last2 = last_ts.at[hidx].max(clock, mode="drop")
+    new_freq = freq + 1.0
+    widx = jnp.mod(new_freq, lruk_k)
+    ts0 = jnp.where(widx == 0.0, clock, ext[:, 0])
+    ts1 = jnp.where(widx == 1.0, clock, ext[:, 1])
+    gap = clock - last_ts
+    crf = 1.0 + ext[:, 2] * jnp.exp2(-lrfu_lambda * gap)
+    new_ext = jnp.stack([ts0, ts1, crf, gap], axis=-1)
+    ext2 = ext.at[hidx].set(new_ext[jnp.minimum(hidx, n - 1)], mode="drop")
+    return freq2, last2, ext2
+
+
 def bucket_lookup_ref(table_key, table_size, keys, *, assoc: int):
     """Reference hash-table probe.
 

@@ -74,6 +74,118 @@ def _kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref, choice_ref,
     cand_ref[...] = cand.astype(jnp.int32)
 
 
+def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
+                   choice_ref, evict_ref, quota_ref, clock_ref,
+                   victim_ref, cand_ref, *, window, k, experts, block_b):
+    clock = clock_ref[0]
+    quota = quota_ref[0]
+    offs = off_ref[...]                                     # [block_b]
+    rows = []
+    for field_ref in (size_ref, ins_ref, last_ref, freq_ref):
+        rows.append(jnp.stack([
+            jax.lax.dynamic_slice(field_ref[...], (offs[i],), (window,))
+            for i in range(block_b)]))
+    s, ins, last, freq = rows
+
+    live = (s > 0.0) & (s < 255.0)
+    in_sample = live & (jnp.cumsum(live.astype(jnp.int32), axis=1) <= k)
+    idx = offs[:, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (block_b, window), 1)
+
+    # All-expert priorities (for the per-victim expert bitmap) and the
+    # chosen expert's priority row, inf-masked outside the sample.
+    prios = []
+    cands = []
+    for e in experts:
+        pr = _priority(e, s, ins, last, freq, clock)
+        pr = jnp.where(in_sample, pr, jnp.inf)
+        prios.append(pr)
+        arg = jnp.argmin(pr, axis=1)
+        cands.append(jnp.take_along_axis(idx, arg[:, None], axis=1)[:, 0])
+    cand_ref[...] = jnp.stack(cands, axis=1).astype(jnp.int32)
+
+    choice = choice_ref[...]
+    pr_sel = prios[0]
+    for ei in range(1, len(experts)):
+        pr_sel = jnp.where(choice[:, None] == ei, prios[ei], pr_sel)
+
+    # Chosen-expert ranking with per-op victim quota: peel off the lowest
+    # priority sample `quota` times (== the first quota entries of a
+    # stable sort, which is what the reference path computes).
+    must = evict_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_b, window), 1)
+    victims = []
+    for j in range(k):
+        arg = jnp.argmin(pr_sel, axis=1)
+        val = jnp.take_along_axis(pr_sel, arg[:, None], axis=1)[:, 0]
+        ok = (j < quota) & (val < jnp.inf) & must
+        vj = jnp.where(ok, jnp.take_along_axis(
+            idx, arg[:, None], axis=1)[:, 0], -1)
+        victims.append(vj)
+        pr_sel = jnp.where(cols == arg[:, None], jnp.inf, pr_sel)
+    victim_ref[...] = jnp.stack(victims, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "k", "experts",
+                                             "block_b", "interpret"))
+def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
+                    must_evict, quota, clock, *, window: int = 20,
+                    k: int = 5, experts=("lru", "lfu"), block_b: int = 8,
+                    interpret: bool = True):
+    """Quota-extended fused eviction decision (the production hot path).
+
+    Like ``sampled_eviction`` but returns the chosen expert's full
+    priority *ranking* over the sampled window: up to ``quota`` victims
+    per op, lowest priority first (the catch-up eviction of
+    ``core/cache.py`` step 5). Table arrays are f32[C + window] with the
+    tail wrapping around to the head (``jnp.concatenate([x, x[:window]])``)
+    so modular windows read contiguously; returned slot indices are taken
+    mod C.
+
+    Args:
+      offsets: i32[B] window starts in [0, C).
+      e_choice: i32[B] chosen expert per op.
+      must_evict: bool[B] — ops that must claim victims this step.
+      quota: i32[] per-op victim budget in [0, k] (traced scalar).
+    Returns:
+      victims: i32[B, k] ranked victim slots, -1 where not taken.
+      cand:    i32[B, E] per-expert argmin candidate (undefined where the
+               sample has no live object, as in the reference path).
+    """
+    B = offsets.shape[0]
+    C = size.shape[0] - window
+    pad = (-B) % block_b
+    if pad:
+        offsets = jnp.concatenate([offsets, jnp.zeros((pad,), offsets.dtype)])
+        e_choice = jnp.concatenate([e_choice, jnp.zeros((pad,), e_choice.dtype)])
+        must_evict = jnp.concatenate(
+            [must_evict, jnp.zeros((pad,), must_evict.dtype)])
+    Bp = B + pad
+    e = len(experts)
+    grid = (Bp // block_b,)
+    table_spec = pl.BlockSpec(size.shape, lambda i: (0,))
+    lane_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    fn = functools.partial(_ranked_kernel, window=window, k=k,
+                           experts=experts, block_b=block_b)
+    victims, cand = pl.pallas_call(
+        fn,
+        grid=grid,
+        in_specs=[table_spec, table_spec, table_spec, table_spec,
+                  lane_spec, lane_spec, lane_spec,
+                  pl.BlockSpec((1,), lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=(pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+                   pl.BlockSpec((block_b, e), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, e), jnp.int32)),
+        interpret=interpret,
+    )(size, insert_ts, last_ts, freq, offsets, e_choice, must_evict,
+      jnp.asarray(quota, jnp.int32).reshape(1),
+      jnp.asarray(clock, jnp.float32).reshape(1))
+    victims = jnp.where(victims >= 0, victims % C, -1)
+    return victims[:B], (cand % C)[:B]
+
+
 @functools.partial(jax.jit, static_argnames=("window", "k", "experts",
                                              "block_b", "interpret"))
 def sampled_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.fast
+
 from repro.core import (CacheConfig, access, make_cache, run_trace)
 from repro.core.types import SIZE_HISTORY
 from repro.workloads import interleave, zipfian

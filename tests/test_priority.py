@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.fast
+
 from repro.core import ALL_ALGORITHMS, loc_of
 from repro.core.priority import REGISTRY, priorities, update_ext, fresh_ext
 from repro.core.types import MDView

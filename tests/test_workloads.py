@@ -3,6 +3,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.fast
+
 from repro.baselines import simulate_policy
 from repro.workloads import (interleave, lfu_friendly, loop_window,
                              lru_friendly, mixed_apps, object_sizes, ycsb,
