@@ -2,42 +2,73 @@
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines import CLUSTER, DittoModel
+from repro.baselines import DittoModel
 from repro.core import CacheConfig, make_cache, run_trace
+from repro.core.cache import run_trace_grouped
 from repro.workloads import interleave
+from repro.workloads.plan import plan_groups
 
 _JIT_CACHE = {}
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_n_buckets(capacity: int) -> int:
+    """The bucket count run_ditto derives from a capacity — exposed so
+    planners (`plan_groups`) build groups against the SAME bucket model
+    the cache will hash with (bucket-disjointness depends on it)."""
+    return max(256, capacity // 2)
 
 
 def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
               n_clients=8, seed=0, is_write=None, sizes=None,
-              backend="reference", **cfg_kw):
+              backend="reference", batch=1, plan_scope="lane", plan=None,
+              **cfg_kw):
     """Run a flat trace through the JAX Ditto cache; returns (TraceResult,
     cfg, wall_s). ``backend`` selects the reference (pure jnp) or fused
-    (Pallas hot-path kernels) execution engine — decision-equivalent."""
-    cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
+    (Pallas hot-path kernels) execution engine — decision-equivalent.
+    ``batch=N`` (N > 1) runs the batched execution engine: the trace is
+    packed into bucket-disjoint N-round groups (``workloads.plan``) and
+    each ``lax.scan`` step retires a whole group; pass a precomputed
+    ``plan`` to reuse one packing across backends/repeats."""
+    cfg = CacheConfig(n_buckets=default_n_buckets(capacity), assoc=8,
                       capacity=capacity, experts=tuple(experts),
                       backend=backend, **cfg_kw)
     k2 = interleave(keys_flat, n_clients)
     w2 = interleave(is_write, n_clients) if is_write is not None else None
     s2 = interleave(sizes, n_clients) if sizes is not None else None
     st, cl, _ = make_cache(cfg, n_clients, seed)
-    key = (cfg, n_clients)
-    if key not in _JIT_CACHE:
-        _JIT_CACHE[key] = jax.jit(
-            lambda s, c, k, w, z: run_trace(cfg, s, c, k, w, z))
-    fn = _JIT_CACHE[key]
-    T, C = k2.shape
-    w2 = jnp.zeros((T, C), bool) if w2 is None else jnp.asarray(w2)
-    s2 = jnp.ones((T, C), jnp.uint32) if s2 is None else jnp.asarray(s2)
+    if batch > 1:
+        if plan is None:
+            plan = plan_groups(k2, cfg.n_buckets, batch, scope=plan_scope,
+                               is_write=w2, sizes=s2)
+        key = (cfg, n_clients, "grouped")
+        if key not in _JIT_CACHE:
+            _JIT_CACHE[key] = jax.jit(
+                lambda s, c, k, w, z: run_trace_grouped(cfg, s, c, k, w, z))
+        fn = _JIT_CACHE[key]
+        args = (jnp.asarray(plan.keys), jnp.asarray(plan.is_write),
+                jnp.asarray(plan.sizes))
+    else:
+        key = (cfg, n_clients)
+        if key not in _JIT_CACHE:
+            _JIT_CACHE[key] = jax.jit(
+                lambda s, c, k, w, z: run_trace(cfg, s, c, k, w, z))
+        fn = _JIT_CACHE[key]
+        T, C = k2.shape
+        w2 = jnp.zeros((T, C), bool) if w2 is None else jnp.asarray(w2)
+        s2 = jnp.ones((T, C), jnp.uint32) if s2 is None else jnp.asarray(s2)
+        args = (jnp.asarray(k2), w2, s2)
     t0 = time.time()
-    tr = fn(st, cl, jnp.asarray(k2), w2, s2)
+    tr = fn(st, cl, *args)
     jax.block_until_ready(tr.hits)
     return tr, cfg, time.time() - t0
 
@@ -66,13 +97,61 @@ def fmt(x):
     return str(x)
 
 
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO_ROOT,
+                             timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    return v
+
+
 def emit(rows, prefix):
+    """Print ``name,us_per_call,derived`` CSV rows AND append the run to
+    ``BENCH_<prefix>.json`` at the repo root: a machine-readable
+    trajectory of ``{sha, time, rows}`` records (one per run) that CI
+    uploads as a benchmark artifact."""
     out = []
     for r in rows:
+        r = dict(r)
         name = f"{prefix}.{r.pop('name')}"
         us = r.pop("us_per_call", 0.0)
         derived = ";".join(f"{k}={fmt(v)}" for k, v in r.items())
         line = f"{name},{us:.3f},{derived}"
         print(line)
         out.append(line)
+
+    record = {
+        "sha": git_sha(),
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "device": jax.default_backend(),
+        "rows": [{k: _jsonable(v) for k, v in r.items()} for r in rows],
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{prefix}.json")
+    history = []
+    try:
+        with open(path) as fh:
+            loaded = json.load(fh)
+        if isinstance(loaded, list):
+            history = loaded
+    except (OSError, ValueError):
+        pass
+    history.append(record)
+    try:
+        with open(path, "w") as fh:
+            json.dump(history, fh, indent=1)
+            fh.write("\n")
+    except OSError:
+        pass  # read-only checkout: CSV stdout is still the source of truth
     return out

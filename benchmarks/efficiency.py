@@ -8,10 +8,9 @@ actual CPU-simulation rate (us_per_call) of the vectorized cache.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.baselines import CliqueMapModel, DittoModel, ShardLRUModel
-from benchmarks.common import emit, model_throughput, run_ditto
+from benchmarks.common import emit, run_ditto
 from repro.workloads import ycsb
 
 WRITE_FRAC = {"A": 0.5, "B": 0.05, "C": 0.0, "D": 0.05}

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import CacheConfig, make_cache, run_trace
 from benchmarks.common import emit, hit_rate, run_ditto

@@ -1,36 +1,63 @@
 #!/usr/bin/env bash
-# Builder verification: tier-1 tests + quick-mode benchmark smoke runs.
+# Builder verification: lint + tier-1 tests + quick-mode benchmark smoke runs.
 #   scripts/check.sh          # full tier-1 suite + bench smoke (>300s)
 #   scripts/check.sh --fast   # fast lane: `fast`-marked tests only (~3min),
 #                             # throughput bench smoke, no subprocess tests
+#
+# Emits reports/tier1.xml (JUnit) and prints a per-phase timing summary so
+# CI failures are attributable to a phase at a glance.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+mkdir -p reports
 
-PYTEST_ARGS=(-x -q)
+PHASES=()
+TIMES=()
+phase() {  # phase <name> <cmd...>  (under set -e a failure aborts the
+    local name=$1; shift            #  script; the trap still names it)
+    echo "== $name: $*"
+    PHASES+=("$name")
+    local t0=$SECONDS
+    "$@"
+    TIMES+=($((SECONDS - t0)))
+}
+
+summary() {
+    echo "-- phase timing summary --"
+    for i in "${!PHASES[@]}"; do
+        printf '%-24s %6ss\n' "${PHASES[$i]}" "${TIMES[$i]:-FAILED}"
+    done
+}
+trap summary EXIT
+
+PYTEST_ARGS=(-x -q --junitxml=reports/tier1.xml)
 FAST=0
 if [[ "${1:-}" == "--fast" ]]; then
     FAST=1
     PYTEST_ARGS+=(-m "fast and not slow")
 fi
 
-echo "== tier-1: python -m pytest ${PYTEST_ARGS[*]}"
-python -m pytest "${PYTEST_ARGS[@]}"
+if [[ -n "${CI:-}" ]]; then
+    echo "== lint: skipped (CI runs ruff as its own step)"
+elif command -v ruff >/dev/null 2>&1; then
+    phase lint ruff check .
+else
+    echo "== lint: ruff not installed, skipping (CI runs it)"
+fi
+
+phase tier-1 python -m pytest "${PYTEST_ARGS[@]}"
 
 if [[ "$FAST" == "1" ]]; then
-    echo "== bench smoke: throughput (quick)"
-    python -c "from benchmarks import throughput; throughput.run(quick=True)"
+    phase bench-throughput python -c \
+        "from benchmarks import throughput; throughput.run(quick=True)"
     echo "check --fast: OK"
     exit 0
 fi
 
-echo "== bench smoke: elasticity (quick)"
-python benchmarks/elasticity.py --quick
-
-echo "== bench smoke: adaptivity (quick)"
-python -c "from benchmarks import adaptivity; adaptivity.run(quick=True)"
-
-echo "== bench smoke: throughput (quick)"
-python -c "from benchmarks import throughput; throughput.run(quick=True)"
+phase bench-elasticity python benchmarks/elasticity.py --quick
+phase bench-adaptivity python -c \
+    "from benchmarks import adaptivity; adaptivity.run(quick=True)"
+phase bench-throughput python -c \
+    "from benchmarks import throughput; throughput.run(quick=True)"
 
 echo "check: OK"

@@ -1,11 +1,19 @@
 """The Ditto cache: client-centric caching framework + distributed adaptive
 caching, as one batched functional step.
 
-Concurrency model: one step applies a *batch* of client operations (one op
-per client, matching the paper's client threads). All reads observe the
-step-entry snapshot; updates are applied with deterministic combines in the
-order (metadata updates → evictions → inserts), which is the batched
-analogue of the paper's CAS/FAA-mediated races. See DESIGN.md §2.
+Concurrency model: one step applies a *group* of client operations — a
+[G, C] block of G rounds x C client lanes (G=1 recovers the paper's
+one-op-per-client-thread step).  All wide-path reads (bucket probe,
+sampling) observe the step-entry snapshot; updates are applied with
+deterministic combines in the order (metadata updates → evictions →
+inserts), the batched analogue of the paper's CAS/FAA-mediated races.
+Per-request logical timestamps (``clock + round``) drive every
+time-dependent decision — metadata, priorities, rng streams — so a
+group executes exactly as its rounds would sequentially whenever the
+rounds touch disjoint buckets (the planner's grouping invariant; see
+``workloads/plan.py`` and DESIGN.md §9).  The narrow per-lane state
+(frequency-counter cache, expert weights / lazy sync) threads through
+the rounds in order, so it is sequential by construction.
 
 Every operation is also metered in "issued remote ops" (OpStats) — the
 RDMA-verb counts of the paper's cost model — so the efficiency/ablation
@@ -21,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import priority as prio
-from repro.core.fc_cache import fc_access, fc_apply
+from repro.core.fc_cache import fc_access, fc_access_group
 from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
                               CacheState, ClientState, MDView, OpStats,
@@ -34,22 +42,26 @@ F32 = jnp.float32
 
 
 class AccessResult(NamedTuple):
-    hit: jnp.ndarray       # bool[C]
-    value: jnp.ndarray     # u32[C, W] (garbage where miss)
-    evicted: jnp.ndarray   # bool[C] — this op performed a global eviction
-    regret: jnp.ndarray    # bool[C]
+    hit: jnp.ndarray       # bool[G, C]
+    value: jnp.ndarray     # u32[G, C, W] (garbage where miss)
+    evicted: jnp.ndarray   # bool[G, C] — this op performed a global eviction
+    regret: jnp.ndarray    # bool[G, C]
 
 
-def _md_view(state: CacheState, idx: jnp.ndarray) -> MDView:
-    """Gather an MDView for slot indices (any shape)."""
+def _md_view(state: CacheState, idx: jnp.ndarray,
+             ts: jnp.ndarray | None = None) -> MDView:
+    """Gather an MDView for slot indices (any shape).  ``ts`` is the
+    per-op logical clock (broadcastable against idx); defaults to the
+    state clock (G=1 semantics)."""
     size = state.size[idx].astype(F32)
+    clock = state.clock if ts is None else ts
     return MDView(
         size=size,
         insert_ts=state.insert_ts[idx].astype(F32),
         last_ts=state.last_ts[idx].astype(F32),
         freq=state.freq[idx].astype(F32),
         ext=state.ext[idx],
-        clock=state.clock.astype(F32),
+        clock=clock.astype(F32),
         gds_L=state.gds_L,
         cost=jnp.ones_like(size),
     )
@@ -83,35 +95,47 @@ def apply_penalties(weights: jnp.ndarray, penalties: jnp.ndarray,
     return w / jnp.sum(w)
 
 
-def _dedup_winner(x: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
-    """bool[C]: True for the first occurrence of each distinct value of x
-    among valid lanes (sort-based duplicate resolution)."""
-    C = x.shape[0]
-    keyed = jnp.where(valid, x.astype(U32), jnp.uint32(0xFFFFFFFF))
-    order = jnp.argsort(keyed)
-    sorted_x = keyed[order]
-    first_sorted = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_x[1:] != sorted_x[:-1]])
-    winner = jnp.zeros((C,), bool).at[order].set(first_sorted)
-    return winner & valid
+def _first_winner(x: jnp.ndarray, valid: jnp.ndarray,
+                  domain: int) -> jnp.ndarray:
+    """bool[B]: True for the first occurrence of each distinct value of
+    x in [0, domain) among valid lanes.  Scatter-min duplicate
+    resolution (cheaper than a sort on CPU/TPU): the earliest flattened
+    index — i.e. the earliest *round* — wins, matching sequential
+    precedence."""
+    B = x.shape[0]
+    pos = jnp.arange(B, dtype=I32)
+    tgt = jnp.where(valid, x.astype(I32), domain)
+    best = jnp.full((domain + 1,), B, I32).at[tgt].min(pos)
+    return valid & (best[jnp.where(valid, x.astype(I32), 0)] == pos)
 
 
-def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
-           stats: OpStats, keys: jnp.ndarray, *,
-           is_write: jnp.ndarray | None = None,
-           obj_size: jnp.ndarray | None = None,
-           values: jnp.ndarray | None = None,
-           insert_on_miss: bool = True,
-           ) -> Tuple[CacheState, ClientState, OpStats, AccessResult]:
-    """One batched cache step: GET each key; read-through insert on miss.
+def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
+                 stats: OpStats, keys: jnp.ndarray, *,
+                 is_write: jnp.ndarray | None = None,
+                 obj_size: jnp.ndarray | None = None,
+                 values: jnp.ndarray | None = None,
+                 insert_on_miss: bool = True,
+                 ) -> Tuple[CacheState, ClientState, OpStats, AccessResult]:
+    """One batched cache step over a [G, C] request group.
+
+    Executes G rounds of C concurrent client ops as ONE widened step:
+    probe, hit-metadata update, inserts and the sampled eviction run
+    vmapped across all G*C requests against the step-entry snapshot,
+    while the per-lane FC cache and expert-weight state thread through
+    the rounds sequentially.  Round r runs at logical time clock+r: its
+    timestamps, priorities and rng draws are identical to what a
+    sequential execution of the rounds would produce, which makes the
+    batched step decision-equivalent to the sequential one whenever the
+    rounds are bucket-disjoint (``workloads.plan``).
 
     Args:
-      keys: u32[C]; 0 marks a padded no-op lane.
-      is_write: bool[C] — SET ops (value update; costed as the Set path).
-      obj_size: u32[C] object size in 64B blocks (default 1).
-      values: u32[C, W] payload written on insert/set.
+      keys: u32[G, C]; 0 marks a padded no-op lane.
+      is_write: bool[G, C] — SET ops (value update; costed as the Set path).
+      obj_size: u32[G, C] object size in 64B blocks (default 1).
+      values: u32[G, C, W] payload written on insert/set.
     """
-    C = keys.shape[0]
+    G, C = keys.shape
+    B = G * C
     E = cfg.n_experts
     K = cfg.n_samples
     A = cfg.assoc
@@ -125,26 +149,36 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
                 f"backend='fused' supports experts {kops.KERNEL_EXPERTS}; "
                 f"got {unsupported} (use backend='reference')")
 
-    op = keys != 0
     if is_write is None:
-        is_write = jnp.zeros((C,), bool)
+        is_write = jnp.zeros((G, C), bool)
     if obj_size is None:
-        obj_size = jnp.ones((C,), U32)
+        obj_size = jnp.ones((G, C), U32)
     if values is None:
-        values = jnp.zeros((C, cfg.value_words), U32)
-    obj_size = jnp.clip(obj_size, 1, SIZE_HISTORY - 1).astype(U32)
+        values = jnp.zeros((G, C, cfg.value_words), U32)
+
+    keys_b = keys.reshape(B)
+    op = keys_b != 0
+    is_write = is_write.reshape(B)
+    obj_size = jnp.clip(obj_size.reshape(B), 1, SIZE_HISTORY - 1).astype(U32)
+    values = values.reshape(B, cfg.value_words)
 
     clock = state.clock
-    step_rng = jax.vmap(jax.random.fold_in)(clients.rng, jnp.full((C,), clock))
+    n_slots_total = cfg.n_slots
+    # Per-request logical timestamps: round r of the group runs at
+    # clock + r, exactly as a sequential execution would.
+    ts_round = clock + jnp.arange(G, dtype=U32)                    # [G]
+    ts_req = jnp.repeat(ts_round, C)                               # [B]
+    rng_b = jnp.tile(clients.rng, (G, 1))                          # [B, 2]
+    step_rng = jax.vmap(jax.random.fold_in)(rng_b, ts_req)
 
     # ------------------------------------------------------------------
     # 1. Bucket probe (1 RDMA_READ per op; with SFHT it carries metadata).
     #    fused: one Pallas pass does the bucket match + history match;
     #    the bucket gathers below are still needed by the insert path (4).
     # ------------------------------------------------------------------
-    kh = hash_key(keys)
+    kh = hash_key(keys_b)
     bucket = bucket_of(kh, cfg.n_buckets)
-    bslots = bucket[:, None] * A + jnp.arange(A)[None, :]          # [C, A]
+    bslots = bucket[:, None] * A + jnp.arange(A)[None, :]          # [B, A]
     b_key = state.key[bslots]
     b_size = state.size[bslots]
     b_hash = state.key_hash[bslots]
@@ -157,13 +191,13 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     if fused:
         found, slot, hist_found, hslot = kops.access_probe_op(
-            state.key, state.size, state.key_hash, state.ptr, keys,
+            state.key, state.size, state.key_hash, state.ptr, keys_b,
             state.hist_ctr, assoc=A, history_len=cfg.history_len)
         found = found & op
         hist_found = hist_found & op
         slot = jnp.where(found, slot, -1)
     else:
-        match = live & (b_key == keys[:, None]) & op[:, None]
+        match = live & (b_key == keys_b[:, None]) & op[:, None]
         found = jnp.any(match, axis=1)
         mslot = jnp.take_along_axis(
             bslots, jnp.argmax(match, axis=1)[:, None], axis=1)[:, 0]
@@ -181,47 +215,79 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     # ------------------------------------------------------------------
     # 2. Metadata update on hits (stateless: one combined RDMA_WRITE with
-    #    SFHT; stateful freq goes through the FC cache). fused: one Pallas
-    #    pass applies last_ts/ext at hit slots + the combining freq FAA.
+    #    SFHT; stateful freq goes through the FC cache).  The FC cache
+    #    processes the whole group at once — a lane's increments to the
+    #    same entry combine before any remote FAA issues, the group-level
+    #    generalization of the paper's client-side write combining (for
+    #    G=1 this is exactly the sequential per-round path).
+    #    fused: one Pallas pass applies last_ts/ext at hit slots + the
+    #    combining freq FAA, at per-request timestamps.
     # ------------------------------------------------------------------
-    clients, emit = fc_access(cfg, clients, jnp.where(hit, slot, -1), clock)
+    slot_hit = jnp.where(hit, slot, -1)
+    if G == 1:
+        clients, em = fc_access(cfg, clients, slot_hit, clock)
+        emit_slot, emit_delta = em.slot.reshape(-1), em.delta.reshape(-1)
+        n_faa, n_fc_hit = em.n_faa, em.n_hit
+    else:
+        clients, emit_slot, emit_delta, n_faa, n_fc_hit = fc_access_group(
+            cfg, clients, slot_hit.reshape(G, C), ts_round)
+        emit_slot = emit_slot.reshape(-1)
+        emit_delta = emit_delta.reshape(-1)
+
+    upd_idx = jnp.where(hit, slot, n_slots_total)
+    # Effective hit time per slot: the max request-ts among this group's
+    # hits on it (all equal under the planner's grouping invariant; the
+    # deterministic combine otherwise).  Shared by both backends.
+    eff = jnp.zeros((n_slots_total + 1,), U32).at[upd_idx].max(ts_req)
+    eff_op = eff[jnp.maximum(slot, 0)]                             # [B]
     if fused:
         freq, last_ts, ext = kops.hit_metadata_update_op(
-            state.freq, state.last_ts, state.ext, jnp.where(hit, slot, -1),
-            emit.slot.reshape(-1), emit.delta.reshape(-1), clock)
+            state.freq, state.last_ts, state.ext, slot_hit, ts_req,
+            emit_slot, emit_delta)
     else:
         old_last = state.last_ts[jnp.maximum(slot, 0)]
         old_freq = state.freq[jnp.maximum(slot, 0)]
         new_ext = prio.update_ext(state.ext[jnp.maximum(slot, 0)],
-                                  old_last, old_freq, clock)
-        upd_idx = jnp.where(hit, slot, state.key.shape[0])
-        last_ts = state.last_ts.at[upd_idx].max(clock, mode="drop")
+                                  old_last, old_freq, eff_op)
+        last_ts = state.last_ts.at[upd_idx].max(ts_req, mode="drop")
         ext = state.ext.at[upd_idx].set(new_ext, mode="drop")
-        freq = fc_apply(state.freq, emit)
-    # SETs overwrite payloads (last-writer-wins within the batch).
-    val_idx = jnp.where(hit & is_write, slot, state.key.shape[0])
+        eidx = jnp.where(emit_slot >= 0, emit_slot, n_slots_total)
+        freq = state.freq.at[eidx].add(emit_delta, mode="drop")
+    # SETs overwrite payloads (last-writer-wins within the group).
+    val_idx = jnp.where(hit & is_write, slot, n_slots_total)
     vals = state.values.at[val_idx].set(values, mode="drop")
     sizes_upd = state.size.at[val_idx].set(obj_size, mode="drop")
 
     # ------------------------------------------------------------------
-    # 3. Regret collection + lazy expert-weight update (§4.3.2).
+    # 3. Regret collection + lazy expert-weight update (§4.3.2).  The
+    #    group's penalties aggregate into ONE multiplicative-weights
+    #    update and one sync decision per lane per step — the batched
+    #    analogue of the paper's locally-buffered penalties (for G=1
+    #    this is exactly the per-round update).
     # ------------------------------------------------------------------
     h_bmap = state.insert_ts[jnp.maximum(hslot, 0)]          # expert bitmap
     h_age_sel = _hist_age(state.hist_ctr, state.ptr[jnp.maximum(hslot, 0)])
     d = jnp.float32(cfg.discount)
     pen = jnp.power(d, h_age_sel.astype(F32))                # d^t
     bits = ((h_bmap[:, None] >> jnp.arange(E)[None, :]) & 1).astype(F32)
-    pen_e = jnp.where(regret[:, None], pen[:, None] * bits, 0.0)   # [C, E]
+    pen_e = jnp.where(regret[:, None], pen[:, None] * bits, 0.0)   # [B, E]
+    pen_lane = jnp.sum(pen_e.reshape(G, C, E), axis=0)       # [C, E]
+    reg_lane = jnp.sum(regret.reshape(G, C), axis=0)         # [C]
+
+    # One threefry draw per request covers both the expert choice and the
+    # sampling offset (step_rng is already a per-request folded stream).
+    u2 = jax.vmap(lambda r: jax.random.uniform(r, (2,)))(step_rng)
+    u_exp = u2[:, 0]
 
     lam = jnp.float32(cfg.learning_rate)
-    local_w = clients.local_weights * jnp.exp(-lam * pen_e)
-    pacc = clients.penalty_acc + pen_e
-    pcnt = clients.penalty_cnt + regret.astype(I32)
+    local_w = clients.local_weights * jnp.exp(-lam * pen_lane)
+    pacc = clients.penalty_acc + pen_lane
+    pcnt = clients.penalty_cnt + reg_lane.astype(I32)
 
     if cfg.use_lwu:
         syncing = pcnt >= cfg.sync_period
     else:
-        syncing = regret  # eager: RPC on every regret
+        syncing = reg_lane > 0  # eager: RPC on every regret
     tot_pen = jnp.sum(jnp.where(syncing[:, None], pacc, 0.0), axis=0)
     gw = apply_penalties(state.weights, tot_pen, lam)
     local_w = jnp.where(syncing[:, None], gw[None, :], local_w)
@@ -229,17 +295,20 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     pacc = jnp.where(syncing[:, None], 0.0, pacc)
     pcnt = jnp.where(syncing, 0, pcnt)
     n_sync = jnp.sum(syncing).astype(I32)
+    e_choice = _choose_expert(
+        local_w, u_exp.reshape(G, C)).reshape(B)             # [B]
 
     # ------------------------------------------------------------------
     # 4. Inserts: read-through on miss. One insert per (key, bucket) per
     #    step; duplicate keys / bucket collisions retry on a later access.
     # ------------------------------------------------------------------
     want_insert = miss & (insert_on_miss | is_write)
-    w_key = _dedup_winner(keys.astype(I32), want_insert)
-    winner = _dedup_winner(jnp.where(w_key, bucket, -1), w_key)
+    # First-of-bucket dedup: duplicate keys share a bucket, so the first
+    # inserting op per bucket is also the first per key.
+    winner = _first_winner(bucket, want_insert, cfg.n_buckets)
     dropped = want_insert & ~winner
 
-    free = (b_size == SIZE_EMPTY) | (is_hist & ~h_valid)     # [C, A]
+    free = (b_size == SIZE_EMPTY) | (is_hist & ~h_valid)     # [B, A]
     has_free = jnp.any(free, axis=1)
     free_slot = jnp.take_along_axis(
         bslots, jnp.argmax(free, axis=1)[:, None], axis=1)[:, 0]
@@ -247,12 +316,10 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # Bucket-local fallback eviction when the bucket is full: overwrite the
     # oldest *valid* history entry first, else the lowest-priority live
     # object under this client's sampled expert (counted separately).
-    u_exp = jax.vmap(lambda r: jax.random.uniform(jax.random.fold_in(r, 1)))(step_rng)
-    e_choice = _choose_expert(local_w, u_exp)                 # [C]
-    b_md = _md_view(state, bslots)
-    b_prio = prio.priorities(b_md, names)                     # [C, A, E]
+    b_md = _md_view(state, bslots, ts_req[:, None])
+    b_prio = prio.priorities(b_md, names)                     # [B, A, E]
     b_prio_e = jnp.take_along_axis(
-        b_prio, e_choice[:, None, None], axis=2)[:, :, 0]     # [C, A]
+        b_prio, e_choice[:, None, None], axis=2)[:, :, 0]     # [B, A]
     b_prio_e = jnp.where(live, b_prio_e, jnp.inf)
     fb_obj_slot = jnp.take_along_axis(
         bslots, jnp.argmin(b_prio_e, axis=1)[:, None], axis=1)[:, 0]
@@ -294,48 +361,56 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # sample. (This is also the TPU-friendly layout: one dense tile.)
     # fused: the whole decision — window gather, E expert priorities,
     # chosen-expert ranking, per-op quota — is one Pallas call over
-    # wrap-padded metadata columns; victims come back as [C, K].
+    # wrap-padded metadata columns; victims come back as [B, K].
     W = cfg.sample_window or 4 * K
-    offs = jax.vmap(lambda r: jax.random.randint(
-        jax.random.fold_in(r, 2), (), 0, cfg.n_slots))(step_rng)
+    offs = jnp.minimum((u2[:, 1] * cfg.n_slots).astype(I32),
+                       cfg.n_slots - 1)
     if fused:
         wrap = lambda x: jnp.concatenate([x, x[:W]])
         victims_2d, cand_slot = kops.ranked_eviction_op(
             wrap(state.size), wrap(state.insert_ts), wrap(state.last_ts),
-            wrap(state.freq), offs, e_choice, must_evict, quota, clock,
-            window=W, k=K, experts=names)                     # [C, K], [C, E]
+            wrap(state.freq), offs, e_choice, must_evict, quota, ts_req,
+            window=W, k=K, experts=names)                     # [B, K], [B, E]
         take = victims_2d >= 0
     else:
-        samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots  # [C, W]
-        s_md = _md_view(state, samp)
+        samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots  # [B, W]
+        s_md = _md_view(state, samp, ts_req[:, None])
         s_live_raw = _is_live(state.size[samp])
         in_sample = s_live_raw & (jnp.cumsum(s_live_raw, axis=1) <= K)
         s_live = in_sample
-        s_prio = prio.priorities(s_md, names)                 # [C, W, E]
+        s_prio = prio.priorities(s_md, names)                 # [B, W, E]
         s_prio = jnp.where(s_live[:, :, None], s_prio, jnp.inf)
-        cand_k = jnp.argmin(s_prio, axis=1)                   # [C, E]
-        cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)  # [C, E]
+        cand_k = jnp.argmin(s_prio, axis=1)                   # [B, E]
+        cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)  # [B, E]
 
-        # Chosen expert's priority ranking over this op's samples.
+        # Chosen expert's priority ranking over this op's samples:
+        # peel off the lowest-priority sample quota times (== the first
+        # quota entries of a stable sort; the exact mirror of the fused
+        # kernel's loop, and far cheaper than an argsort on CPU).
         prio_e = jnp.take_along_axis(
-            s_prio, e_choice[:, None, None], axis=2)[:, :, 0]  # [C, W]
-        rank_order = jnp.argsort(prio_e, axis=1)              # low prio first
-        ranked_slot = jnp.take_along_axis(samp, rank_order, axis=1)
-        ranked_live = jnp.take_along_axis(s_live, rank_order, axis=1)
-        take = ((jnp.arange(W)[None, :] < quota) & ranked_live
-                & must_evict[:, None])
-        victims_2d = jnp.where(take, ranked_slot, -1)         # [C, W]
-    V = victims_2d.shape[1]  # W reference / K fused; take is all-False
-    # beyond rank K in both (quota <= K), so decisions coincide.
-    victims = victims_2d.reshape(-1)                          # [C*V]
-    ev_winner = _dedup_winner(victims, victims >= 0)          # [C*V]
+            s_prio, e_choice[:, None, None], axis=2)[:, :, 0]  # [B, W]
+        cols = jnp.arange(W)[None, :]
+        vs = []
+        for j in range(K):
+            arg = jnp.argmin(prio_e, axis=1)                  # [B]
+            val = jnp.take_along_axis(prio_e, arg[:, None], axis=1)[:, 0]
+            ok = (j < quota) & (val < jnp.inf) & must_evict
+            vs.append(jnp.where(ok, jnp.take_along_axis(
+                samp, arg[:, None], axis=1)[:, 0], -1))
+            prio_e = jnp.where(cols == arg[:, None], jnp.inf, prio_e)
+        victims_2d = jnp.stack(vs, axis=1)                    # [B, K]
+        take = victims_2d >= 0
+    V = victims_2d.shape[1]  # K on both paths (quota <= K), so the
+    # reference and fused rankings coincide rank for rank.
+    victims = victims_2d.reshape(-1)                          # [B*V]
+    ev_winner = _first_winner(victims, victims >= 0, n_slots_total)
     n_evict = jnp.sum(ev_winner).astype(I32)
     evicting = must_evict & jnp.any(take, axis=1)
 
     # Expert bitmap per victim: experts whose candidate matches, plus the
     # evicting op's chosen expert (Fig. 9).
-    cand_rep = jnp.repeat(cand_slot, V, axis=0)               # [C*V, E]
-    e_rep = jnp.repeat(e_choice, V)                           # [C*V]
+    cand_rep = jnp.repeat(cand_slot, V, axis=0)               # [B*V, E]
+    e_rep = jnp.repeat(e_choice, V)                           # [B*V]
     bmap = jnp.sum(((cand_rep == victims[:, None]).astype(U32)
                     << jnp.arange(E, dtype=U32)[None, :]), axis=1)
     bmap = bmap | (U32(1) << e_rep.astype(U32))
@@ -344,8 +419,8 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     gds_L = state.gds_L
     gds_ids = [i for i, n in enumerate(names) if prio.REGISTRY[n].gds_family]
     if gds_ids:
-        v_md = _md_view(state, jnp.maximum(victims, 0))
-        v_prio = prio.priorities(v_md, names)                 # [C*K, E]
+        v_md = _md_view(state, jnp.maximum(victims, 0), jnp.repeat(ts_req, V))
+        v_prio = prio.priorities(v_md, names)                 # [B*V, E]
         vp = jnp.stack([v_prio[:, i] for i in gds_ids], axis=1)
         vp = jnp.where(ev_winner[:, None], vp, -jnp.inf)
         gds_L = jnp.maximum(gds_L, jnp.max(vp, initial=-jnp.inf))
@@ -360,16 +435,15 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # 6. Apply: inserts, then evictions (so a victim that collides with a
     #    bucket-fallback overwrite target nets out exactly in n_cached).
     # ------------------------------------------------------------------
-    n_slots_total = cfg.n_slots
     ii = jnp.where(ins_ok, ins_slot, n_slots_total)
-    key2 = state.key.at[ii].set(keys, mode="drop")
+    key2 = state.key.at[ii].set(keys_b, mode="drop")
     khash2 = state.key_hash.at[ii].set(kh, mode="drop")
     sizes3 = sizes_upd.at[ii].set(obj_size, mode="drop")
     ptr3 = state.ptr.at[ii].set(U32(0), mode="drop")
-    ins_ts3 = state.insert_ts.at[ii].set(clock, mode="drop")
-    last_ts = last_ts.at[ii].set(clock, mode="drop")
+    ins_ts3 = state.insert_ts.at[ii].set(ts_req, mode="drop")
+    last_ts = last_ts.at[ii].set(ts_req, mode="drop")
     freq = freq.at[ii].set(U32(1), mode="drop")
-    ext = ext.at[ii].set(prio.fresh_ext(clock, (C,)), mode="drop")
+    ext = ext.at[ii].set(prio.fresh_ext(ts_req, (B,)), mode="drop")
     vals = vals.at[ii].set(values, mode="drop")
 
     ev_idx = jnp.where(ev_winner, victims, n_slots_total)
@@ -388,7 +462,7 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
         key=key2, key_hash=khash2, size=sizes3, ptr=ptr3,
         insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
         n_cached=n_cached, hist_ctr=state.hist_ctr + n_hist,
-        clock=clock + U32(1), weights=gw, gds_L=gds_L,
+        clock=clock + U32(G), weights=gw, gds_L=gds_L,
         capacity=state.capacity)
     new_clients = clients._replace(
         local_weights=local_w, penalty_acc=pacc, penalty_cnt=pcnt)
@@ -416,30 +490,58 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
               + jnp.sum(write_hist)       # embedded expert-bitmap write
               + sep_hist * 2)
     cas = n_ins + jnp.sum(ev_winner)      # slot atomic installs/tags
-    faa = emit.n_faa + n_hist + sep_hist
+    faa = n_faa + n_hist + sep_hist
     stats = stats_add(
         stats, rdma_read=reads, rdma_write=writes, rdma_cas=cas,
         rdma_faa=faa, rpc=n_sync, gets=n_op - n_set, sets=n_set,
         hits=n_hit, misses=jnp.sum(miss), regrets=jnp.sum(regret),
         evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
-        insert_drops=jnp.sum(dropped), fc_hits=emit.n_hit,
-        fc_flushes=emit.n_faa, weight_syncs=n_sync)
+        insert_drops=jnp.sum(dropped), fc_hits=n_fc_hit,
+        fc_flushes=n_faa, weight_syncs=n_sync)
 
     return new_state, new_clients, stats, AccessResult(
-        hit=hit, value=result_vals, evicted=evicting, regret=regret)
+        hit=hit.reshape(G, C), value=result_vals.reshape(G, C, -1),
+        evicted=evicting.reshape(G, C), regret=regret.reshape(G, C))
+
+
+def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
+           stats: OpStats, keys: jnp.ndarray, *,
+           is_write: jnp.ndarray | None = None,
+           obj_size: jnp.ndarray | None = None,
+           values: jnp.ndarray | None = None,
+           insert_on_miss: bool = True,
+           ):
+    """One single-round cache step: GET each key; read-through insert on
+    miss.  Thin G=1 wrapper over :func:`access_group` (identical
+    semantics to the paper's one-op-per-client concurrent step).
+
+    Args:
+      keys: u32[C]; 0 marks a padded no-op lane.
+    """
+    state, clients, stats, res = access_group(
+        cfg, state, clients, stats, keys[None, :],
+        is_write=None if is_write is None else is_write[None, :],
+        obj_size=None if obj_size is None else obj_size[None, :],
+        values=None if values is None else values[None],
+        insert_on_miss=insert_on_miss)
+    return state, clients, stats, AccessResult(
+        hit=res.hit[0], value=res.value[0], evicted=res.evicted[0],
+        regret=res.regret[0])
 
 
 # ----------------------------------------------------------------------
-# Trace driver: lax.scan over [T, C] request streams.
+# Trace drivers: lax.scan over [T, C] (one round per step) or
+# [NG, G, C] planned-group request streams.
 # ----------------------------------------------------------------------
 
 class TraceResult(NamedTuple):
     state: CacheState
     clients: ClientState
     stats: OpStats
-    hits: jnp.ndarray      # i32[T] per-step hit counts
-    ops: jnp.ndarray       # i32[T] per-step op counts
+    hits: jnp.ndarray      # i32[T] per-round hit counts
+    ops: jnp.ndarray       # i32[T] per-round op counts
     weights: jnp.ndarray   # f32[T, E] global weight trajectory
+                           # (grouped runs: step-granular, repeated per round)
 
 
 def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
@@ -464,6 +566,38 @@ def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
     (state, clients, stats), (hits, ops, weights) = jax.lax.scan(
         step, (state, clients, stats), (keys, is_write, obj_size))
     return TraceResult(state, clients, stats, hits, ops, weights)
+
+
+def run_trace_grouped(cfg: CacheConfig, state: CacheState,
+                      clients: ClientState, keys: jnp.ndarray,
+                      is_write: jnp.ndarray | None = None,
+                      obj_size: jnp.ndarray | None = None) -> TraceResult:
+    """Run a planned [NG, G, C] grouped trace: one scan step retires a
+    whole G-round request group (see ``workloads.plan.plan_groups``).
+
+    Returns per-round hit/op counts ([NG*G]) so grouped and sequential
+    runs compare round-for-round; the weight trajectory is step-granular
+    (each group's end weights repeated for its G rounds)."""
+    NG, G, C = keys.shape
+    if is_write is None:
+        is_write = jnp.zeros((NG, G, C), bool)
+    if obj_size is None:
+        obj_size = jnp.ones((NG, G, C), U32)
+    stats = init_stats()
+
+    def step(carry, xs):
+        st, cl, sa = carry
+        k, w, sz = xs
+        st, cl, sa, res = access_group(cfg, st, cl, sa, k,
+                                       is_write=w, obj_size=sz)
+        out = (jnp.sum(res.hit, axis=1).astype(I32),
+               jnp.sum(k != 0, axis=1).astype(I32), st.weights)
+        return (st, cl, sa), out
+
+    (state, clients, stats), (hits, ops, weights) = jax.lax.scan(
+        step, (state, clients, stats), (keys, is_write, obj_size))
+    return TraceResult(state, clients, stats, hits.reshape(-1),
+                       ops.reshape(-1), jnp.repeat(weights, G, axis=0))
 
 
 def make_cache(cfg: CacheConfig, n_clients: int, seed: int = 0):

@@ -101,6 +101,118 @@ def fc_access(cfg: CacheConfig, clients: ClientState, slot: jnp.ndarray,
                             fc_ins=fc_ins), emit
 
 
+def fc_access_group(cfg: CacheConfig, clients: ClientState,
+                    slots: jnp.ndarray, ts: jnp.ndarray):
+    """Route a whole [G, C] request group through the FC caches at once.
+
+    The batched analogue of G sequential ``fc_access`` rounds, computed
+    without a sequential scan: a lane's increments to the same entry
+    combine (the group-level write combining the FC cache exists for),
+    distinct missed slots install in round order against the
+    empty-first / oldest-first victim ranking.  Equivalent to the
+    sequential rounds whenever no entry flushes mid-group and a lane's
+    distinct missed slots fit the F victim slots (see DESIGN.md §9);
+    otherwise flushes combine into one emission and misses beyond the F
+    install slots spill their combined deltas as direct FAAs — deltas
+    are never lost either way.
+
+    Args:
+      slots: i32[G, C] table slot per round per lane; -1 = no-op.
+      ts: u32[G] per-round logical timestamps (entry insert times).
+    Returns:
+      (clients, emit_slot i32[C, 2F+G], emit_delta u32[C, 2F+G],
+       n_faa i32[], n_hit i32[]) — flush + eviction + overflow-spill
+      emissions per lane.
+    """
+    G, C = slots.shape
+    sl = slots.T                                            # [C, G]
+    active = sl >= 0
+
+    if not cfg.use_fc:
+        # Ablation: no write combining — every access issues a remote FAA.
+        emit_slot = jnp.where(active, sl, -1)
+        emit_delta = jnp.where(active, 1, 0).astype(jnp.uint32)
+        return (clients, emit_slot, emit_delta,
+                jnp.sum(active).astype(jnp.int32), jnp.zeros((), jnp.int32))
+
+    fc_slot, fc_delta, fc_ins = clients.fc_slot, clients.fc_delta, clients.fc_ins
+    F = fc_slot.shape[1]
+    rounds = jnp.arange(G)
+
+    # --- probe: combined per-entry increment counts ---------------------
+    match = (fc_slot[:, None, :] == sl[:, :, None]) & active[:, :, None]
+    fc_hit_r = jnp.any(match, axis=2)                       # [C, G]
+    cnt = jnp.sum(match, axis=1).astype(jnp.uint32)         # [C, F]
+    new_delta = fc_delta + cnt
+
+    # Threshold flush: ONE combined emission per crossing entry.
+    over = (new_delta >= jnp.uint32(cfg.fc_threshold)) & (cnt > 0)
+    flush_slot = jnp.where(over, fc_slot, -1)               # [C, F]
+    flush_delta = jnp.where(over, new_delta, 0).astype(jnp.uint32)
+    fc_slot1 = jnp.where(over, -1, fc_slot)
+    fc_delta1 = jnp.where(over, jnp.uint32(0), new_delta)
+
+    # --- misses: one install per distinct missed slot, in round order ---
+    miss_r = active & ~fc_hit_r                             # [C, G]
+    same = (sl[:, :, None] == sl[:, None, :]) & miss_r[:, :, None] \
+        & miss_r[:, None, :]                                # [C, G, G]
+    earlier = same & (rounds[None, None, :] < rounds[None, :, None])
+    first_occ = miss_r & ~jnp.any(earlier, axis=2)          # [C, G]
+    mcount = jnp.sum(same, axis=2).astype(jnp.uint32)       # [C, G]
+    mrank = jnp.cumsum(first_occ.astype(jnp.int32), axis=1) - 1
+    n_miss = jnp.sum(first_occ, axis=1).astype(jnp.int32)   # [C]
+
+    # Victim ranking: empty entries first, then oldest fc_ins, ties by
+    # entry index — the order successive sequential argmins would pick.
+    empty1 = fc_slot1 < 0
+    key = jnp.where(empty1, -1.0, fc_ins.astype(jnp.float32))  # [C, F]
+    fidx = jnp.arange(F)
+    better = (key[:, None, :] < key[:, :, None]) | (
+        (key[:, None, :] == key[:, :, None])
+        & (fidx[None, None, :] < fidx[None, :, None]))      # [C, F, F]
+    vrank = jnp.sum(better, axis=2).astype(jnp.int32)       # [C, F]
+    installing = vrank < n_miss[:, None]                    # [C, F]
+    ev_flush = installing & ~empty1
+    evict_slot = jnp.where(ev_flush, fc_slot1, -1)
+    evict_delta = jnp.where(ev_flush, fc_delta1, 0).astype(jnp.uint32)
+
+    # Overflow spill: a lane with more distinct missed slots than F
+    # victim entries (only possible when G > F) cannot install them
+    # all; the excess misses emit their combined deltas directly (plain
+    # FAAs, no write combining) so no increment is ever lost.
+    n_install = jnp.minimum(n_miss, F)                      # [C]
+    overflow = first_occ & (mrank >= n_install[:, None])    # [C, G]
+    spill_slot = jnp.where(overflow, sl, -1)
+    spill_delta = jnp.where(overflow, mcount, 0).astype(jnp.uint32)
+
+    # Map each installing entry to its miss (vrank == mrank one-hot).
+    sel = (first_occ[:, None, :] & installing[:, :, None]
+           & (vrank[:, :, None] == mrank[:, None, :]))      # [C, F, G]
+    pick = jnp.argmax(sel, axis=2)                          # [C, F]
+    got = jnp.any(sel, axis=2)
+    inst_slot = jnp.take_along_axis(sl, pick, axis=1)       # [C, F]
+    inst_delta = jnp.take_along_axis(mcount, pick, axis=1)
+    inst_ts = jnp.broadcast_to(ts[None, :], (C, G))
+    inst_ts = jnp.take_along_axis(inst_ts, pick, axis=1)
+
+    fc_slot2 = jnp.where(got, inst_slot, fc_slot1)
+    fc_delta2 = jnp.where(got, inst_delta, fc_delta1)
+    fc_ins2 = jnp.where(got, inst_ts.astype(jnp.uint32), fc_ins)
+
+    # Sequential accounting: occurrences beyond a slot's first miss would
+    # have hit the freshly-installed entry.
+    n_hit = (jnp.sum(fc_hit_r) + jnp.sum(miss_r)
+             - jnp.sum(first_occ)).astype(jnp.int32)
+    n_faa = (jnp.sum(over) + jnp.sum(ev_flush)
+             + jnp.sum(overflow)).astype(jnp.int32)
+    emit_slot = jnp.concatenate([flush_slot, evict_slot, spill_slot], axis=1)
+    emit_delta = jnp.concatenate([flush_delta, evict_delta, spill_delta],
+                                 axis=1)
+    clients = clients._replace(fc_slot=fc_slot2, fc_delta=fc_delta2,
+                               fc_ins=fc_ins2)
+    return clients, emit_slot, emit_delta, n_faa, n_hit
+
+
 def fc_apply(freq: jnp.ndarray, emit: FCEmit) -> jnp.ndarray:
     """Apply combined deltas to the table's freq column (the remote FAA)."""
     idx = emit.slot.reshape(-1)

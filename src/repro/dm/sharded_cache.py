@@ -18,7 +18,6 @@ penalty aggregates across all shards — the "RPC to the MN controller".
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -26,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.cache import access, apply_penalties
+from repro.core.cache import access_group, apply_penalties
 from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
                               init_cache, init_clients, init_stats,
@@ -114,18 +113,31 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
               keys: jnp.ndarray, is_write=None,
               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
-    """One DM step: keys [n_shards * lanes] (0 = no-op). Returns hits.
+    """One DM step: keys [n_shards * lanes] or a request group
+    [G, n_shards * lanes] (0 = no-op). Returns hits of the same shape.
+
+    Batched routing: the router packs each round of the group into
+    per-destination request blocks, ships the whole [G, q] group per
+    destination in ONE exchange (the batched one-RTT pipeline), and the
+    owning shard executes the group as a single widened
+    ``access_group`` step.
 
     Routing capacity: each source shard can send up to
     ``q = min(lanes, route_factor * lanes / n_shards + 1)`` requests to
-    any one destination shard per step (``route_factor <= 0`` means full
-    capacity, q = lanes: no request can ever be dropped). Requests beyond
-    the capacity — possible only under extreme key skew — are *counted*
-    in ``OpStats.route_drops`` (they behave like failed-CAS retries:
-    callers subtract them from issued ops, they are never silently lost;
-    see DESIGN.md §2)."""
+    any one destination shard per round (``route_factor <= 0`` means
+    full capacity, q = lanes: no request can ever be dropped). Requests
+    beyond the capacity — possible only under extreme key skew — are
+    *counted* in ``OpStats.route_drops`` (they behave like failed-CAS
+    retries: callers subtract them from issued ops, they are never
+    silently lost; see DESIGN.md §2)."""
     n_shards = mesh.shape[AXIS]
-    lanes = keys.shape[0] // n_shards
+    squeeze = keys.ndim == 1
+    if squeeze:
+        keys = keys[None]
+        if is_write is not None:
+            is_write = is_write[None]
+    G = keys.shape[0]
+    lanes = keys.shape[1] // n_shards
     if route_factor <= 0:
         q = lanes
     else:
@@ -135,13 +147,7 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     if is_write is None:
         is_write = jnp.zeros_like(keys, dtype=bool)
 
-    def step(state, clients, stats, keys_l, write_l):
-        # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
-        state = state._replace(
-            n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
-            clock=state.clock[0], weights=state.weights[0],
-            gds_L=state.gds_L[0], capacity=state.capacity[0])
-        stats = jax.tree.map(lambda x: x[0], stats)
+    def route_one(keys_l, write_l):
         # --- client side: decide owners, pack per-destination slots -----
         kh = hash_key(keys_l)
         owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
@@ -169,26 +175,41 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         # this step (the caller sees hit=False and may reissue); count
         # them so skewed-trace hit ratios stay honest.
         n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
-        # --- the network: exchange request blocks (RDMA analogue) -------
-        recv = jax.lax.all_to_all(send, AXIS, 0, 0, tiled=True)      # [S*q]
-        wrecv = jax.lax.all_to_all(wsend, AXIS, 0, 0, tiled=True)
-        recv = recv.reshape(n_shards * q)
-        wrecv = wrecv.reshape(n_shards * q)
+        return send, wsend, src_slot, n_drop
 
-        # --- memory-pool side: ordinary client-centric access ----------
-        state, clients2, stats, res = access(
+    def step(state, clients, stats, keys_l, write_l):
+        # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
+        state = state._replace(
+            n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
+            clock=state.clock[0], weights=state.weights[0],
+            gds_L=state.gds_L[0], capacity=state.capacity[0])
+        stats = jax.tree.map(lambda x: x[0], stats)
+        # --- per-round routing: group blocks per destination ------------
+        send, wsend, src_slot, n_drop = jax.vmap(route_one)(keys_l, write_l)
+        # --- the network: ONE exchange ships each destination's whole
+        # [G, q] request group (RDMA doorbell-batching analogue) ---------
+        recv = jax.lax.all_to_all(send, AXIS, 1, 1, tiled=True)  # [G, S, q]
+        wrecv = jax.lax.all_to_all(wsend, AXIS, 1, 1, tiled=True)
+        recv = recv.reshape(G, n_shards * q)
+        wrecv = wrecv.reshape(G, n_shards * q)
+
+        # --- memory-pool side: one widened client-centric group step ----
+        state, clients2, stats, res = access_group(
             local_cfg, state, _pad_clients(clients, n_shards * q), stats,
             recv, is_write=wrecv)
-        stats = stats_add(stats, route_drops=n_drop)
+        stats = stats_add(stats, route_drops=jnp.sum(n_drop))
 
-        # --- route replies back + merge hit mask ------------------------
+        # --- route replies back + merge hit masks ------------------------
         hit_back = jax.lax.all_to_all(
-            res.hit.reshape(n_shards, q), AXIS, 0, 0, tiled=True)
-        hit_back = hit_back.reshape(n_shards, q)
-        hits = jnp.zeros((lanes,), bool)
-        valid = src_slot >= 0
-        hits = hits.at[jnp.where(valid, src_slot, 0).reshape(-1)].max(
-            jnp.where(valid, hit_back, False).reshape(-1))
+            res.hit.reshape(G, n_shards, q), AXIS, 1, 1, tiled=True)
+
+        def back_one(hb, ss):
+            valid = ss >= 0
+            return jnp.zeros((lanes,), bool).at[
+                jnp.where(valid, ss, 0).reshape(-1)].max(
+                jnp.where(valid, hb, False).reshape(-1))
+
+        hits = jax.vmap(back_one)(hit_back, src_slot)        # [G, lanes]
 
         # --- lazy weight update: periodic psum of penalty aggregates ----
         clients = _unpad_clients(clients, clients2, lanes)
@@ -223,11 +244,14 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
     fn = shard_map(
         step, mesh=mesh,
-        in_specs=(spec_state, spec_clients, spec_stats, P(AXIS), P(AXIS)),
-        out_specs=(spec_state, spec_clients, spec_stats, P(AXIS)),
+        in_specs=(spec_state, spec_clients, spec_stats,
+                  P(None, AXIS), P(None, AXIS)),
+        out_specs=(spec_state, spec_clients, spec_stats, P(None, AXIS)),
         check_rep=False)
     state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
                                      keys, is_write)
+    if squeeze:
+        hits = hits[0]
     return DMCache(state, clients, stats), hits
 
 

@@ -36,6 +36,19 @@ def _hash_u32(x):
     return (x ^ (x >> 16)).astype(jnp.uint32)
 
 
+def _gather_rows(refs, base, width, block_b, vectorized):
+    """[block_b, width] bucket-row gather per table column: per-row
+    dynamic slices for compiled Mosaic, one vectorized gather for the
+    interpreter (a python slice loop costs O(block_b) interpreted ops)."""
+    if vectorized:
+        idx = base[:, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (base.shape[0], width), 1)
+        return [ref[...][idx] for ref in refs]
+    return [jnp.stack([
+        jax.lax.dynamic_slice(ref[...], (base[i],), (width,))
+        for i in range(block_b)]) for ref in refs]
+
+
 def _pad_batch(x, block_b, fill=0):
     """Pad a [B, ...] batch to a multiple of block_b with ``fill``."""
     B = x.shape[0]
@@ -48,15 +61,13 @@ def _pad_batch(x, block_b, fill=0):
 
 
 def _kernel(tkey_ref, tsize_ref, keys_ref, found_ref, slot_ref, *,
-            assoc, n_buckets, block_b):
+            assoc, n_buckets, block_b, vectorized=False):
     keys = keys_ref[...]
     kh = _hash_u32(keys)
     bucket = (kh % jnp.uint32(n_buckets)).astype(jnp.int32)
     base = bucket * assoc
-    tk = jnp.stack([jax.lax.dynamic_slice(tkey_ref[...], (base[i],), (assoc,))
-                    for i in range(block_b)])               # [block_b, A]
-    ts = jnp.stack([jax.lax.dynamic_slice(tsize_ref[...], (base[i],), (assoc,))
-                    for i in range(block_b)])
+    tk, ts = _gather_rows((tkey_ref, tsize_ref), base, assoc, block_b,
+                          vectorized)
     live = (ts > 0) & (ts < 255)
     match = live & (tk == keys[:, None])
     found = jnp.any(match, axis=1)
@@ -78,7 +89,7 @@ def bucket_lookup(table_key, table_size, keys, *, assoc: int = 8,
     grid = (Bp // block_b,)
     table_spec = pl.BlockSpec(table_key.shape, lambda i: (0,))
     fn = functools.partial(_kernel, assoc=assoc, n_buckets=n_buckets,
-                           block_b=block_b)
+                           block_b=block_b, vectorized=interpret)
     found, slot = pl.pallas_call(
         fn,
         grid=grid,
@@ -95,18 +106,15 @@ def bucket_lookup(table_key, table_size, keys, *, assoc: int = 8,
 
 def _probe_kernel(tkey_ref, tsize_ref, thash_ref, tptr_ref, keys_ref,
                   hctr_ref, found_ref, slot_ref, hfound_ref, hslot_ref, *,
-                  assoc, n_buckets, history_len, block_b):
+                  assoc, n_buckets, history_len, block_b, vectorized=False):
     keys = keys_ref[...]
     kh = _hash_u32(keys)
     bucket = (kh % jnp.uint32(n_buckets)).astype(jnp.int32)
     base = bucket * assoc
 
-    rows = []
-    for ref in (tkey_ref, tsize_ref, thash_ref, tptr_ref):
-        rows.append(jnp.stack([
-            jax.lax.dynamic_slice(ref[...], (base[i],), (assoc,))
-            for i in range(block_b)]))                      # [block_b, A]
-    tk, ts, th, tp = rows
+    tk, ts, th, tp = _gather_rows(
+        (tkey_ref, tsize_ref, thash_ref, tptr_ref), base, assoc, block_b,
+        vectorized)                                         # [block_b, A]
     cols = jax.lax.broadcasted_iota(jnp.int32, (block_b, assoc), 1)
     bslots = base[:, None] + cols
 
@@ -152,7 +160,8 @@ def access_probe(table_key, table_size, table_hash, table_ptr, keys,
     table_spec = pl.BlockSpec(table_key.shape, lambda i: (0,))
     lane_spec = pl.BlockSpec((block_b,), lambda i: (i,))
     fn = functools.partial(_probe_kernel, assoc=assoc, n_buckets=n_buckets,
-                           history_len=history_len, block_b=block_b)
+                           history_len=history_len, block_b=block_b,
+                           vectorized=interpret)
     found, slot, hfound, hslot = pl.pallas_call(
         fn,
         grid=grid,

@@ -46,34 +46,55 @@ def _ext_constants():
     return float(LRUK_K), float(LRFU_LAMBDA)
 
 
-def _hit_kernel(hit_ref, emit_ref, delta_ref, clock_ref, freq_ref, last_ref,
-                ext_ref, freq_out_ref, last_out_ref, ext_out_ref, *, block_c):
+def _hit_kernel(hit_ref, hts_ref, emit_ref, delta_ref, freq_ref, last_ref,
+                ext_ref, freq_out_ref, last_out_ref, ext_out_ref, *, block_c,
+                vectorized=False):
     i = pl.program_id(0)
     lo = i * block_c
     # freq/last keep the caller's (integer) dtype end to end — only the
     # ext math runs in f32, mirroring the reference exactly at any clock.
-    clock = clock_ref[0]
-    clock_f = clock.astype(jnp.float32)
     freq = freq_ref[...]
     last = last_ref[...]
     ext = ext_ref[...]
 
-    # Hit slots: stateless combined write (last_ts max + ext columns).
+    # Hit slots: stateless combined write (last_ts max + ext columns) at
+    # per-hit timestamps. The effective time of a slot is the max request
+    # timestamp among the batch's hits on it (all equal under the
+    # planner's bucket-disjoint grouping; a deterministic combine
+    # otherwise) — mirrored by the reference path in core/cache.py.
     hits = hit_ref[...]
+    hts = hts_ref[...]                                       # [Bh]
     hl = hits - lo
-    pos = jax.lax.broadcasted_iota(jnp.int32, (hits.shape[0], block_c), 1)
-    hmatch = (hl[:, None] == pos) & (hits >= 0)[:, None]
-    touched = jnp.any(hmatch, axis=0)
-
-    # FC-cache flush slots: the combining remote FAA on `freq`, as a
-    # one-hot matmul on the MXU (duplicate slots combine for free).
     emits = emit_ref[...]
     el = emits - lo
-    epos = jax.lax.broadcasted_iota(jnp.int32, (emits.shape[0], block_c), 1)
-    ematch = (el[:, None] == epos) & (emits >= 0)[:, None]
-    add = jnp.dot(delta_ref[...].astype(jnp.float32),
-                  ematch.astype(jnp.float32),
-                  preferred_element_type=jnp.float32)
+    deltas = delta_ref[...].astype(jnp.float32)
+    if vectorized:
+        # Interpreter lowering: O(B + tile) scatter combines — the dense
+        # one-hot form below costs O(B * tile) interpreted element ops.
+        h_ok = (hits >= 0) & (hl >= 0) & (hl < block_c)
+        hidx = jnp.where(h_ok, hl, block_c)
+        touched = jnp.zeros((block_c + 1,), bool).at[hidx].set(True)[:block_c]
+        ts_eff = jnp.zeros((block_c + 1,), hts.dtype).at[hidx].max(
+            jnp.where(h_ok, hts, jnp.zeros_like(hts)))[:block_c]
+        e_ok = (emits >= 0) & (el >= 0) & (el < block_c)
+        eidx = jnp.where(e_ok, el, block_c)
+        add = jnp.zeros((block_c + 1,), jnp.float32).at[eidx].add(
+            jnp.where(e_ok, deltas, 0.0))[:block_c]
+    else:
+        pos = jax.lax.broadcasted_iota(jnp.int32, (hits.shape[0], block_c), 1)
+        hmatch = (hl[:, None] == pos) & (hits >= 0)[:, None]
+        touched = jnp.any(hmatch, axis=0)
+        ts_eff = jnp.max(
+            jnp.where(hmatch, hts[:, None], jnp.zeros_like(hts)[:, None]),
+            axis=0)                                          # [block_c]
+
+        # FC-cache flush slots: the combining remote FAA on `freq`, as a
+        # one-hot matmul on the MXU (duplicate slots combine for free).
+        epos = jax.lax.broadcasted_iota(jnp.int32, (emits.shape[0], block_c), 1)
+        ematch = (el[:, None] == epos) & (emits >= 0)[:, None]
+        add = jnp.dot(deltas, ematch.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    clock_f = ts_eff.astype(jnp.float32)
 
     # Extension metadata recomputed tile-wide from the step-entry snapshot
     # (mirror of priority.update_ext), then selected at touched slots —
@@ -89,30 +110,35 @@ def _hit_kernel(hit_ref, emit_ref, delta_ref, clock_ref, freq_ref, last_ref,
 
     freq_out_ref[...] = freq + add.astype(freq.dtype)
     last_out_ref[...] = jnp.where(
-        touched, jnp.maximum(last, clock.astype(last.dtype)), last)
+        touched, jnp.maximum(last, ts_eff.astype(last.dtype)), last)
     ext_out_ref[...] = jnp.where(touched[:, None], new_ext, ext)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
-def hit_metadata_update(freq, last_ts, ext, hit_slots, emit_slots,
-                        emit_deltas, clock, *, block_c: int = 512,
+def hit_metadata_update(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
+                        emit_deltas, *, block_c: int = 512,
                         interpret: bool = True):
     """Fused hit-side metadata update (the production hot path).
 
     One pass over the metadata table applying, per table tile:
-      * ``last_ts[s] = max(last_ts[s], clock)`` and the extension-column
-        update (LRU-K ring / LRFU CRF / LIRS IRR) at every hit slot;
+      * ``last_ts[s] = max(last_ts[s], ts)`` and the extension-column
+        update (LRU-K ring / LRFU CRF / LIRS IRR) at every hit slot,
+        where ``ts`` is the max per-request timestamp among the batch's
+        hits on the slot (request groups evaluate each round at its own
+        logical time);
       * ``freq[s] += delta`` for every FC-cache flush (the remote FAA).
 
     freq/last_ts: u32[C] (or f32 — their dtype is preserved end to end,
     so integer timestamps never round-trip through f32); ext:
     f32[C, EXT_WIDTH]; hit_slots: i32[Bh] and emit_slots: i32[Be] with
-    -1 = no-op; emit_deltas: f32[Be]. Returns updated
-    (freq, last_ts, ext). C is padded internally to a multiple of
-    ``block_c``.
+    -1 = no-op; hit_ts: [Bh] per-hit timestamps; emit_deltas: f32[Be].
+    Returns updated (freq, last_ts, ext). C is padded internally to a
+    multiple of ``block_c``.
     """
     c = freq.shape[0]
     ew = ext.shape[1]
+    if interpret:
+        block_c = c  # one tile: the interpreter path scatters in O(B + c)
     pad = (-c) % block_c
     if pad:
         freq = jnp.concatenate([freq, jnp.zeros((pad,), freq.dtype)])
@@ -123,10 +149,9 @@ def hit_metadata_update(freq, last_ts, ext, hit_slots, emit_slots,
     upd_spec = pl.BlockSpec(hit_slots.shape, lambda i: (0,))
     emit_spec = pl.BlockSpec(emit_slots.shape, lambda i: (0,))
     freq2, last2, ext2 = pl.pallas_call(
-        functools.partial(_hit_kernel, block_c=block_c),
+        functools.partial(_hit_kernel, block_c=block_c, vectorized=interpret),
         grid=grid,
-        in_specs=[upd_spec, emit_spec, emit_spec,
-                  pl.BlockSpec((1,), lambda i: (0,)),
+        in_specs=[upd_spec, upd_spec, emit_spec, emit_spec,
                   pl.BlockSpec((block_c,), lambda i: (i,)),
                   pl.BlockSpec((block_c,), lambda i: (i,)),
                   pl.BlockSpec((block_c, ew), lambda i: (i, 0))],
@@ -137,9 +162,9 @@ def hit_metadata_update(freq, last_ts, ext, hit_slots, emit_slots,
                    jax.ShapeDtypeStruct((cp,), last_ts.dtype),
                    jax.ShapeDtypeStruct((cp, ew), ext.dtype)),
         interpret=interpret,
-    )(hit_slots.astype(jnp.int32), emit_slots.astype(jnp.int32),
-      emit_deltas.astype(jnp.float32),
-      jnp.asarray(clock).reshape(1), freq, last_ts, ext)
+    )(hit_slots.astype(jnp.int32), hit_ts.astype(last_ts.dtype),
+      emit_slots.astype(jnp.int32), emit_deltas.astype(jnp.float32),
+      freq, last_ts, ext)
     return freq2[:c], last2[:c], ext2[:c]
 
 

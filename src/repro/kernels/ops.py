@@ -24,6 +24,17 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _auto_block_b(n: int, cap: int = 256) -> int:
+    """Scale the request-tile width with the batch — but only for the
+    interpreter, whose vectorized-gather branch makes per-cell overhead
+    the dominant cost. Compiled Mosaic kernels unroll ``block_b``
+    dynamic slices per grid cell, so widening the tile there balloons
+    compile time instead; they keep the tuned default."""
+    if not _interpret_default():
+        return 8
+    return max(8, min(cap, n))
+
+
 def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
                         clock, *, window=20, k=5, experts=("lru", "lfu"),
                         block_b=8):
@@ -39,26 +50,30 @@ def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
 
 
 def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
-                       must_evict, quota, clock, *, window=20, k=5,
-                       experts=("lru", "lfu"), block_b=8):
+                       must_evict, quota, ts, *, window=20, k=5,
+                       experts=("lru", "lfu"), block_b=None):
     """Quota-extended fused eviction: chosen-expert ranking, up to `quota`
-    victims per op. Table arrays are f32[C + window] wrap-padded
-    (`concatenate([x, x[:window]])`); returned slots are mod C."""
+    victims per op, each op evaluating time-dependent priorities at its
+    own per-request timestamp ``ts`` [B]. Table arrays are
+    f32[C + window] wrap-padded (`concatenate([x, x[:window]])`);
+    returned slots are mod C."""
     return ranked_eviction(
         size.astype(jnp.float32), insert_ts.astype(jnp.float32),
         last_ts.astype(jnp.float32), freq.astype(jnp.float32),
         offsets.astype(jnp.int32), e_choice.astype(jnp.int32),
-        must_evict.astype(jnp.bool_), quota, clock,
-        window=window, k=k, experts=tuple(experts), block_b=block_b,
+        must_evict.astype(jnp.bool_), quota, ts.astype(jnp.float32),
+        window=window, k=k, experts=tuple(experts),
+        block_b=block_b or _auto_block_b(offsets.shape[0]),
         interpret=_interpret_default())
 
 
 def access_probe_op(table_key, table_size, table_hash, table_ptr, keys,
-                    hist_ctr, *, assoc=8, history_len=1024, block_b=8):
+                    hist_ctr, *, assoc=8, history_len=1024, block_b=None):
     """Fused Get-path probe: bucket match + embedded-history match."""
     return access_probe(table_key, table_size, table_hash, table_ptr, keys,
                         hist_ctr, assoc=assoc, history_len=history_len,
-                        block_b=block_b, interpret=_interpret_default())
+                        block_b=block_b or _auto_block_b(keys.shape[0]),
+                        interpret=_interpret_default())
 
 
 def bucket_lookup_op(table_key, table_size, keys, *, assoc=8, block_b=8):
@@ -76,15 +91,16 @@ def metadata_update_op(freq, last_ts, slots, deltas, clock, *, block_c=512):
                            block_c=block_c, interpret=_interpret_default())
 
 
-def hit_metadata_update_op(freq, last_ts, ext, hit_slots, emit_slots,
-                           emit_deltas, clock, *, block_c=512):
+def hit_metadata_update_op(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
+                           emit_deltas, *, block_c=512):
     """Fused hit-side metadata update: last_ts max + ext columns at hit
-    slots, combining freq FAA at FC-flush slots. freq/last_ts keep their
-    caller dtype (u32 in the cache) — no f32 round-trip of timestamps."""
+    slots (at per-hit request timestamps ``hit_ts`` [Bh]), combining freq
+    FAA at FC-flush slots. freq/last_ts keep their caller dtype (u32 in
+    the cache) — no f32 round-trip of timestamps."""
     return hit_metadata_update(
         freq, last_ts, ext.astype(jnp.float32), hit_slots.astype(jnp.int32),
-        emit_slots.astype(jnp.int32), emit_deltas.astype(jnp.float32),
-        clock, block_c=block_c, interpret=_interpret_default())
+        hit_ts, emit_slots.astype(jnp.int32), emit_deltas.astype(jnp.float32),
+        block_c=block_c, interpret=_interpret_default())
 
 
 def flash_attention_op(q, k, v, *, blk_q=128, blk_k=128):

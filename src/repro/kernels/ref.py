@@ -7,7 +7,6 @@ interpret mode on CPU, compiled on TPU).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import bucket_of, hash_key
@@ -67,13 +66,14 @@ def sampled_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
 
 
 def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
-                        must_evict, quota, clock, *, window: int, k: int,
+                        must_evict, quota, ts, *, window: int, k: int,
                         experts):
     """Reference for the quota-extended ranked eviction kernel.
 
-    Mirrors `core/cache.py` step 5: priorities over the sampled window,
-    chosen-expert stable ranking, up to `quota` victims per evicting op.
-    Table arrays are f32[C + window] wrap-padded; returned slots mod C.
+    Mirrors `core/cache.py` step 5: priorities over the sampled window
+    (evaluated at each op's own timestamp ``ts`` [B]), chosen-expert
+    stable ranking, up to `quota` victims per evicting op. Table arrays
+    are f32[C + window] wrap-padded; returned slots mod C.
 
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.
@@ -85,7 +85,7 @@ def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
     live = (s > 0) & (s < 255)
     in_sample = live & (jnp.cumsum(live, axis=1) <= k)
     pr = priorities_ref(s, insert_ts[idx], last_ts[idx], freq[idx],
-                        clock, experts)                           # [B, W, E]
+                        ts[:, None], experts)                     # [B, W, E]
     pr = jnp.where(in_sample[..., None], pr, jnp.inf)
     cand_w = jnp.argmin(pr, axis=1)                               # [B, E]
     cand = jnp.take_along_axis(idx, cand_w, axis=1) % C
@@ -129,14 +129,16 @@ def access_probe_ref(table_key, table_size, table_hash, table_ptr, keys,
             hist_found, hslot.astype(jnp.int32))
 
 
-def hit_metadata_update_ref(freq, last_ts, ext, hit_slots, emit_slots,
-                            emit_deltas, clock, *, lruk_k=None,
+def hit_metadata_update_ref(freq, last_ts, ext, hit_slots, hit_ts,
+                            emit_slots, emit_deltas, *, lruk_k=None,
                             lrfu_lambda=None):
     """Reference fused hit-side metadata update.
 
-    last_ts[s] = max(last_ts[s], clock) and the extension-column update at
-    hit slots; freq[s] += delta at FC-flush slots (combining FAA).
-    hit_slots/emit_slots use -1 as no-op."""
+    last_ts[s] = max(last_ts[s], ts_eff) and the extension-column update
+    at hit slots, where ts_eff is the max per-hit timestamp among the
+    batch's hits on s; freq[s] += delta at FC-flush slots (combining
+    FAA). hit_slots/emit_slots use -1 as no-op; hit_ts[Bh] carries each
+    hit's request timestamp."""
     from repro.core.priority import LRFU_LAMBDA, LRUK_K
     lruk_k = float(LRUK_K) if lruk_k is None else lruk_k
     lrfu_lambda = LRFU_LAMBDA if lrfu_lambda is None else lrfu_lambda
@@ -146,15 +148,19 @@ def hit_metadata_update_ref(freq, last_ts, ext, hit_slots, emit_slots,
     ok_e = emit_slots >= 0
     eidx = jnp.where(ok_e, emit_slots, n)
     freq2 = freq.at[eidx].add(jnp.where(ok_e, emit_deltas, 0.0), mode="drop")
-    last2 = last_ts.at[hidx].max(clock, mode="drop")
+    ts_eff = jnp.zeros((n + 1,), last_ts.dtype).at[hidx].max(
+        hit_ts.astype(last_ts.dtype))[:n]
+    touched = jnp.zeros((n + 1,), bool).at[hidx].set(True)[:n]
+    last2 = jnp.where(touched, jnp.maximum(last_ts, ts_eff), last_ts)
+    clock_col = ts_eff.astype(jnp.float32)
     new_freq = freq + 1.0
     widx = jnp.mod(new_freq, lruk_k)
-    ts0 = jnp.where(widx == 0.0, clock, ext[:, 0])
-    ts1 = jnp.where(widx == 1.0, clock, ext[:, 1])
-    gap = clock - last_ts
+    ts0 = jnp.where(widx == 0.0, clock_col, ext[:, 0])
+    ts1 = jnp.where(widx == 1.0, clock_col, ext[:, 1])
+    gap = clock_col - last_ts
     crf = 1.0 + ext[:, 2] * jnp.exp2(-lrfu_lambda * gap)
     new_ext = jnp.stack([ts0, ts1, crf, gap], axis=-1)
-    ext2 = ext.at[hidx].set(new_ext[jnp.minimum(hidx, n - 1)], mode="drop")
+    ext2 = jnp.where(touched[:, None], new_ext, ext)
     return freq2, last2, ext2
 
 

@@ -27,6 +27,22 @@ NEG_INF = -2.0e38
 KERNEL_EXPERTS = ("lru", "lfu", "fifo", "size", "hyperbolic")
 
 
+def _gather_windows(field_refs, offs, window, block_b, vectorized):
+    """[block_b, window] contiguous-window gather per metadata column.
+
+    Two lowerings of the same read: per-row ``dynamic_slice`` (the
+    Mosaic-friendly idiom for compiled TPU kernels) or one vectorized
+    gather (what the interpreter executes efficiently — a python loop of
+    slices costs O(block_b) interpreted ops per grid cell)."""
+    if vectorized:
+        idx = offs[:, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (offs.shape[0], window), 1)
+        return [ref[...][idx] for ref in field_refs]
+    return [jnp.stack([
+        jax.lax.dynamic_slice(ref[...], (offs[i],), (window,))
+        for i in range(block_b)]) for ref in field_refs]
+
+
 def _priority(e, size, ins, last, freq, clock):
     if e == "lru":
         return last
@@ -42,16 +58,13 @@ def _priority(e, size, ins, last, freq, clock):
 
 
 def _kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref, choice_ref,
-            clock_ref, victim_ref, cand_ref, *, window, k, experts, block_b):
+            clock_ref, victim_ref, cand_ref, *, window, k, experts, block_b,
+            vectorized=False):
     clock = clock_ref[0]
     offs = off_ref[...]                                     # [block_b]
-    # Gather windows: [block_b, W] via per-row dynamic slices.
-    rows = []
-    for field_ref in (size_ref, ins_ref, last_ref, freq_ref):
-        rows.append(jnp.stack([
-            jax.lax.dynamic_slice(field_ref[...], (offs[i],), (window,))
-            for i in range(block_b)]))
-    s, ins, last, freq = rows
+    s, ins, last, freq = _gather_windows(
+        (size_ref, ins_ref, last_ref, freq_ref), offs, window, block_b,
+        vectorized)
 
     live = (s > 0.0) & (s < 255.0)
     in_sample = live & (jnp.cumsum(live.astype(jnp.int32), axis=1) <= k)
@@ -75,17 +88,18 @@ def _kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref, choice_ref,
 
 
 def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
-                   choice_ref, evict_ref, quota_ref, clock_ref,
-                   victim_ref, cand_ref, *, window, k, experts, block_b):
-    clock = clock_ref[0]
+                   choice_ref, evict_ref, quota_ref, ts_ref,
+                   victim_ref, cand_ref, *, window, k, experts, block_b,
+                   vectorized=False):
+    # Per-op logical timestamps: each request evaluates time-dependent
+    # priorities (hyperbolic) at its own round's clock, so a batched
+    # group decides exactly as its rounds would sequentially.
+    clock = ts_ref[...][:, None]                            # [block_b, 1]
     quota = quota_ref[0]
     offs = off_ref[...]                                     # [block_b]
-    rows = []
-    for field_ref in (size_ref, ins_ref, last_ref, freq_ref):
-        rows.append(jnp.stack([
-            jax.lax.dynamic_slice(field_ref[...], (offs[i],), (window,))
-            for i in range(block_b)]))
-    s, ins, last, freq = rows
+    s, ins, last, freq = _gather_windows(
+        (size_ref, ins_ref, last_ref, freq_ref), offs, window, block_b,
+        vectorized)
 
     live = (s > 0.0) & (s < 255.0)
     in_sample = live & (jnp.cumsum(live.astype(jnp.int32), axis=1) <= k)
@@ -129,7 +143,7 @@ def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
 @functools.partial(jax.jit, static_argnames=("window", "k", "experts",
                                              "block_b", "interpret"))
 def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
-                    must_evict, quota, clock, *, window: int = 20,
+                    must_evict, quota, ts, *, window: int = 20,
                     k: int = 5, experts=("lru", "lfu"), block_b: int = 8,
                     interpret: bool = True):
     """Quota-extended fused eviction decision (the production hot path).
@@ -147,6 +161,7 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
       e_choice: i32[B] chosen expert per op.
       must_evict: bool[B] — ops that must claim victims this step.
       quota: i32[] per-op victim budget in [0, k] (traced scalar).
+      ts: f32[B] per-op logical clock (the op's round timestamp).
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.
       cand:    i32[B, E] per-expert argmin candidate (undefined where the
@@ -160,20 +175,22 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
         e_choice = jnp.concatenate([e_choice, jnp.zeros((pad,), e_choice.dtype)])
         must_evict = jnp.concatenate(
             [must_evict, jnp.zeros((pad,), must_evict.dtype)])
+        ts = jnp.concatenate([ts, jnp.zeros((pad,), ts.dtype)])
     Bp = B + pad
     e = len(experts)
     grid = (Bp // block_b,)
     table_spec = pl.BlockSpec(size.shape, lambda i: (0,))
     lane_spec = pl.BlockSpec((block_b,), lambda i: (i,))
     fn = functools.partial(_ranked_kernel, window=window, k=k,
-                           experts=experts, block_b=block_b)
+                           experts=experts, block_b=block_b,
+                           vectorized=interpret)
     victims, cand = pl.pallas_call(
         fn,
         grid=grid,
         in_specs=[table_spec, table_spec, table_spec, table_spec,
                   lane_spec, lane_spec, lane_spec,
                   pl.BlockSpec((1,), lambda i: (0,)),
-                  pl.BlockSpec((1,), lambda i: (0,))],
+                  lane_spec],
         out_specs=(pl.BlockSpec((block_b, k), lambda i: (i, 0)),
                    pl.BlockSpec((block_b, e), lambda i: (i, 0))),
         out_shape=(jax.ShapeDtypeStruct((Bp, k), jnp.int32),
@@ -181,7 +198,7 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
         interpret=interpret,
     )(size, insert_ts, last_ts, freq, offsets, e_choice, must_evict,
       jnp.asarray(quota, jnp.int32).reshape(1),
-      jnp.asarray(clock, jnp.float32).reshape(1))
+      ts.astype(jnp.float32))
     victims = jnp.where(victims >= 0, victims % C, -1)
     return victims[:B], (cand % C)[:B]
 
@@ -202,7 +219,7 @@ def sampled_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
     out_shape = (jax.ShapeDtypeStruct((B,), jnp.int32),
                  jax.ShapeDtypeStruct((B, e), jnp.int32))
     fn = functools.partial(_kernel, window=window, k=k, experts=experts,
-                           block_b=block_b)
+                           block_b=block_b, vectorized=interpret)
     return pl.pallas_call(
         fn,
         grid=grid,

@@ -16,7 +16,6 @@ n_kv_heads divides the TP axis we shard heads instead (cheaper still).
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict
 
 import jax

@@ -15,7 +15,7 @@ path — exactly where the paper's client logic lives).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

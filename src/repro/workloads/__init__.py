@@ -2,9 +2,10 @@ from repro.workloads.gen import (changing_workload, interleave, lfu_friendly,
                                  loop_window, lru_friendly, mixed_apps,
                                  object_sizes, scan_polluted_zipf, ycsb,
                                  zipfian)
+from repro.workloads.plan import GroupPlan, plan_groups
 
 __all__ = [
-    "changing_workload", "interleave", "lfu_friendly", "loop_window",
-    "lru_friendly", "mixed_apps", "object_sizes", "scan_polluted_zipf",
-    "ycsb", "zipfian",
+    "GroupPlan", "changing_workload", "interleave", "lfu_friendly",
+    "loop_window", "lru_friendly", "mixed_apps", "object_sizes",
+    "plan_groups", "scan_polluted_zipf", "ycsb", "zipfian",
 ]

@@ -1,0 +1,196 @@
+"""Trace planner: pack request streams into bucket-disjoint groups.
+
+``core/cache.py`` retires one trace row per ``lax.scan`` step.  The paper's
+client-centric framework gets its throughput from issuing *independent*
+remote accesses concurrently (one-RTT batched pipeline, §4.1); requests
+that touch disjoint hash buckets are commutative — executing them in one
+batched step cannot change any caching decision relative to executing
+them round by round.  The planner makes that structure explicit:
+
+  * A **group** is a ``[G, C]`` block of requests (G rounds x C client
+    lanes) executed by ``core.cache.access_group`` as ONE scan step.
+  * **Grouping invariant** (``scope="strict"``): within a group, any hash
+    bucket is touched by at most one round.  Rounds of a group therefore
+    commute — a round's probe / hit-metadata update / insert can never
+    observe another round's effects — which is exactly the condition
+    under which batched execution is decision-equivalent to executing
+    the rounds sequentially (see DESIGN.md §9 and tests/test_batched.py).
+  * ``scope="lane"`` relaxes the invariant to per-lane bucket
+    disjointness, and further allows a lane to revisit a bucket across
+    rounds when every op involved is a GET (read-read reuse: repeated
+    reads of a hot object combine within the step, the same
+    write-combining the paper's FC cache applies to freq updates).
+    Cross-lane same-bucket races across rounds resolve with the
+    engine's ordinary within-step combine semantics — the same races
+    concurrent client threads already exhibit — trading exact
+    round-sequential equivalence for much denser packing on skewed
+    (zipfian) traces, where one hot key can dominate a lane's stream.
+
+Per-lane, per-KEY program order is always preserved: a lane's requests
+for the same key are scheduled in their original order (a client's own
+read-after-write is never reordered).  Requests to *different* keys may
+be reordered within a bounded ``lookahead`` window — the analogue of a
+client issuing independent requests concurrently.
+
+All planning is host-side numpy; the emitted ``GroupPlan`` arrays are
+static-shaped and feed straight into ``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+class GroupPlan(NamedTuple):
+    """A planned batched schedule for a [T, C] trace.
+
+    Array fields are [n_groups, batch, C]; key 0 / src_t -1 mark padding
+    (unfilled lane-round slots).
+    """
+
+    keys: np.ndarray        # u32[NG, G, C]
+    is_write: np.ndarray    # bool[NG, G, C]
+    sizes: np.ndarray       # u32[NG, G, C]
+    src_t: np.ndarray       # i32[NG, G, C] original trace row, -1 = pad
+    batch: int              # G, rounds per group
+    scope: str              # "strict" | "lane"
+
+    @property
+    def n_groups(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n_scheduled(self) -> int:
+        return int((self.src_t >= 0).sum())
+
+    @property
+    def fill(self) -> float:
+        """Fraction of lane-round slots holding a real request."""
+        return self.n_scheduled / max(self.src_t.size, 1)
+
+    @property
+    def rows_per_group(self) -> float:
+        """Effective original-trace rows retired per group (C requests
+        ~= one row); the scan-step compression factor of the plan."""
+        c = self.keys.shape[2]
+        return self.n_scheduled / max(self.n_groups * c, 1)
+
+    def rounds(self):
+        """The planned schedule flattened to a [NG*G, C] round-per-step
+        trace — the *sequential baseline* of the decision-equivalence
+        contract: running this through the one-round engine must match
+        running the grouped plan through the batched engine."""
+        ng, g, c = self.keys.shape
+        return (self.keys.reshape(ng * g, c),
+                self.is_write.reshape(ng * g, c),
+                self.sizes.reshape(ng * g, c))
+
+
+def _buckets_of(keys: np.ndarray, n_buckets: int) -> np.ndarray:
+    """Host-side mirror of repro.core.hashing: splitmix32 -> bucket."""
+    x = keys.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x = x + np.uint32(0x9E3779B9)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        x = x ^ (x >> np.uint32(16))
+    return (x % np.uint32(n_buckets)).astype(np.int64)
+
+
+def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
+                scope: str = "strict",
+                is_write: Optional[np.ndarray] = None,
+                sizes: Optional[np.ndarray] = None,
+                lookahead: Optional[int] = None) -> GroupPlan:
+    """Greedily pack a [T, C] trace into bucket-disjoint [G, C] groups.
+
+    Args:
+      keys: u32[T, C] request tensor (0 = no-op pad, skipped).
+      n_buckets: the cache's bucket count (defines conflict classes).
+      batch: G, rounds per group (the batch width knob).
+      scope: "strict" — a bucket appears in at most one round per group
+        (global, the commutativity invariant); "lane" — per-lane bucket
+        disjointness with read-read reuse (denser packing, concurrent
+        cross-lane races and within-lane read combining).
+      is_write / sizes: optional [T, C] op tensors carried through.
+      lookahead: how far past a blocked request a lane may schedule
+        ahead (default 4*batch).  Blocked requests and all later
+        requests to the same key park until the next group.
+    Returns:
+      GroupPlan; every non-pad request of `keys` appears exactly once.
+    """
+    if scope not in ("strict", "lane"):
+        raise ValueError(f"unknown plan scope {scope!r}")
+    keys = np.asarray(keys, np.uint32)
+    T, C = keys.shape
+    if is_write is None:
+        is_write = np.zeros((T, C), bool)
+    if sizes is None:
+        sizes = np.ones((T, C), np.uint32)
+    look = max(4 * batch, 16) if lookahead is None else max(1, int(lookahead))
+    bucket = _buckets_of(keys, n_buckets)
+
+    # Per-lane remaining request rows, in program order.
+    rem = [[t for t in range(T) if keys[t, c] != 0] for c in range(C)]
+
+    g_keys, g_wr, g_sz, g_src = [], [], [], []
+    while any(rem):
+        gk = np.zeros((batch, C), np.uint32)
+        gw = np.zeros((batch, C), bool)
+        gs = np.ones((batch, C), np.uint32)
+        gt = np.full((batch, C), -1, np.int64)
+        bucket_round = {}                      # strict: bucket -> round
+        # lane scope: bucket -> True if any scheduled op on it wrote
+        lane_buckets = [dict() for _ in range(C)]
+        parked = [set() for _ in range(C)]     # keys parked this group
+        window = [rem[c][:look] for c in range(C)]
+        taken = [set() for _ in range(C)]      # window positions scheduled
+        for r in range(batch):
+            for c in range(C):
+                for j, t in enumerate(window[c]):
+                    if j in taken[c]:
+                        continue
+                    k = int(keys[t, c])
+                    if k in parked[c]:
+                        continue
+                    b = int(bucket[t, c])
+                    wr = bool(is_write[t, c])
+                    if scope == "strict":
+                        ok = bucket_round.get(b, r) == r
+                    else:
+                        # Reuse of a lane's own bucket across rounds is
+                        # allowed only when every op involved is a read.
+                        seen = lane_buckets[c].get(b)
+                        ok = seen is None or not (seen or wr)
+                    if not ok:
+                        # Blocked for the rest of the group (the bucket is
+                        # owned by an earlier round); park the key so later
+                        # same-key requests cannot overtake program order.
+                        parked[c].add(k)
+                        continue
+                    if scope == "strict":
+                        bucket_round[b] = r
+                    lane_buckets[c][b] = bool(lane_buckets[c].get(b)) or wr
+                    gk[r, c] = keys[t, c]
+                    gw[r, c] = is_write[t, c]
+                    gs[r, c] = sizes[t, c]
+                    gt[r, c] = t
+                    taken[c].add(j)
+                    break
+        for c in range(C):
+            done = {window[c][j] for j in taken[c]}
+            rem[c] = [t for t in rem[c] if t not in done]
+        g_keys.append(gk)
+        g_wr.append(gw)
+        g_sz.append(gs)
+        g_src.append(gt)
+
+    if not g_keys:  # empty trace
+        g_keys = [np.zeros((batch, C), np.uint32)]
+        g_wr = [np.zeros((batch, C), bool)]
+        g_sz = [np.ones((batch, C), np.uint32)]
+        g_src = [np.full((batch, C), -1, np.int64)]
+    return GroupPlan(np.stack(g_keys), np.stack(g_wr), np.stack(g_sz),
+                     np.stack(g_src).astype(np.int32), batch, scope)

@@ -1,0 +1,302 @@
+"""Batched request-group execution: planner invariants + decision
+equivalence of the batched engine against the sequential path.
+
+The contract (DESIGN.md §9): a strict-scope plan packs requests into
+groups whose rounds are bucket-disjoint; bucket-disjoint rounds commute,
+so executing a group as ONE widened step (`access_group`) must be
+*decision-equivalent* to executing its rounds sequentially — same hits,
+same victims, same OpStats — exactly in the eviction-free regime, and
+up to commutation (capacity invariant, aggregate decisions,
+reference==fused bit-equality) once global evictions couple rounds
+through the sampled window.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, make_cache
+from repro.core.cache import run_trace, run_trace_grouped
+from repro.workloads import interleave, zipfian
+from repro.workloads.plan import _buckets_of, plan_groups
+
+pytestmark = pytest.mark.fast
+
+N_BUCKETS = 256
+
+
+def _trace(seed, T=60, C=8, n_keys=400, write_frac=0.0):
+    rng = np.random.default_rng(seed)
+    keys = interleave(zipfian(T * C, n_keys, seed=seed), C)
+    wr = rng.random((T, C)) < write_frac
+    return keys, wr
+
+
+# ----------------------------------------------------------------------
+# Planner invariants.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("batch", [4, 8, 32])
+@pytest.mark.parametrize("scope", ["strict", "lane"])
+def test_plan_schedules_every_request_once(seed, batch, scope):
+    keys, wr = _trace(seed, write_frac=0.3)
+    plan = plan_groups(keys, N_BUCKETS, batch, scope=scope, is_write=wr)
+    sched = plan.src_t[plan.src_t >= 0]
+    T, C = keys.shape
+    # every (row) index appears exactly C times: once per lane
+    assert len(sched) == T * C
+    lanes = np.broadcast_to(np.arange(C), plan.src_t.shape)[plan.src_t >= 0]
+    pairs = set(zip(sched.tolist(), lanes.tolist()))
+    assert len(pairs) == T * C
+    # scheduled payloads match the source trace
+    g, r, c = np.nonzero(plan.src_t >= 0)
+    t = plan.src_t[g, r, c]
+    np.testing.assert_array_equal(plan.keys[g, r, c], keys[t, c])
+    np.testing.assert_array_equal(plan.is_write[g, r, c], wr[t, c])
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("batch", [8, 32])
+@pytest.mark.parametrize("scope", ["strict", "lane"])
+def test_plan_preserves_per_key_program_order(seed, batch, scope):
+    keys, wr = _trace(seed, write_frac=0.2)
+    plan = plan_groups(keys, N_BUCKETS, batch, scope=scope, is_write=wr)
+    NG, G, C = plan.keys.shape
+    for c in range(C):
+        per_key = {}
+        for g in range(NG):
+            for r in range(G):
+                t = plan.src_t[g, r, c]
+                if t < 0:
+                    continue
+                per_key.setdefault(int(plan.keys[g, r, c]), []).append(
+                    (g, r, int(t)))
+        for k, occ in per_key.items():
+            # scheduled (group, round) order == original program order
+            ts = [t for _, _, t in occ]
+            assert ts == sorted(ts), (c, k, occ)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_plan_strict_bucket_disjoint_rounds(seed):
+    keys, _ = _trace(seed)
+    plan = plan_groups(keys, N_BUCKETS, 8, scope="strict")
+    buckets = _buckets_of(plan.keys.reshape(-1), N_BUCKETS).reshape(
+        plan.keys.shape)
+    for g in range(plan.n_groups):
+        seen = {}
+        for r in range(plan.batch):
+            for c in range(plan.keys.shape[2]):
+                if plan.src_t[g, r, c] < 0:
+                    continue
+                b = int(buckets[g, r, c])
+                assert seen.setdefault(b, r) == r, (g, b)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_plan_lane_scope_write_buckets_exclusive(seed):
+    """A lane may revisit a bucket across rounds only when every op
+    involved is a read (read-read combining)."""
+    keys, wr = _trace(seed, write_frac=0.3)
+    plan = plan_groups(keys, N_BUCKETS, 8, scope="lane", is_write=wr)
+    buckets = _buckets_of(plan.keys.reshape(-1), N_BUCKETS).reshape(
+        plan.keys.shape)
+    NG, G, C = plan.keys.shape
+    for g in range(NG):
+        for c in range(C):
+            rounds_of = {}
+            for r in range(G):
+                if plan.src_t[g, r, c] < 0:
+                    continue
+                rounds_of.setdefault(int(buckets[g, r, c]), []).append(
+                    bool(plan.is_write[g, r, c]))
+            for b, ops in rounds_of.items():
+                if len(ops) > 1:
+                    assert not any(ops), (g, c, b, ops)
+
+
+def test_plan_tail_padding_and_fill():
+    keys, _ = _trace(7, T=40, C=4)
+    plan = plan_groups(keys, N_BUCKETS, 8, scope="lane")
+    assert 0.0 < plan.fill <= 1.0
+    assert plan.rows_per_group <= plan.batch
+    pad = plan.src_t < 0
+    assert (plan.keys[pad] == 0).all()  # padding is the no-op key
+
+
+# ----------------------------------------------------------------------
+# Decision equivalence: batched group step vs sequential rounds.
+# ----------------------------------------------------------------------
+
+def _run_pair(cfg, plan, seed=3):
+    rk, rw, rs = plan.rounds()
+    C = rk.shape[1]
+    st, cl, _ = make_cache(cfg, C, seed)
+    seq = jax.jit(lambda s, c, k, w: run_trace(cfg, s, c, k, w))(
+        st, cl, jnp.asarray(rk), jnp.asarray(rw))
+    bat = jax.jit(lambda s, c, k, w: run_trace_grouped(cfg, s, c, k, w))(
+        st, cl, jnp.asarray(plan.keys), jnp.asarray(plan.is_write))
+    return jax.tree.map(np.asarray, seq), jax.tree.map(np.asarray, bat)
+
+
+def _assert_exact(seq, bat):
+    np.testing.assert_array_equal(seq.hits, bat.hits, "per-round hits")
+    np.testing.assert_array_equal(seq.ops, bat.ops)
+    for f in seq.state._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq.state, f)),
+            np.asarray(getattr(bat.state, f)), f"CacheState.{f}")
+    for f in seq.stats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq.stats, f)),
+            np.asarray(getattr(bat.stats, f)), f"OpStats.{f}")
+    for f in ("fc_slot", "fc_delta", "fc_ins", "local_weights",
+              "penalty_acc", "penalty_cnt"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq.clients, f)),
+            np.asarray(getattr(bat.clients, f)), f"ClientState.{f}")
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+@pytest.mark.parametrize("seed,batch", [(0, 8), (1, 4), (2, 16)])
+def test_strict_groups_exactly_equal_sequential(backend, seed, batch):
+    """Bucket-disjoint rounds commute: in the eviction-free regime the
+    batched step is bit-for-bit the sequential execution of its rounds —
+    state, stats, FC caches, everything."""
+    keys, _ = _trace(seed, T=60, C=8, n_keys=400)
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=1024,
+                      experts=("lru", "lfu"), backend=backend,
+                      use_fc=False)
+    plan = plan_groups(keys, cfg.n_buckets, batch, scope="strict")
+    _assert_exact(*_run_pair(cfg, plan))
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_strict_groups_exact_with_fc_cache(backend):
+    """Same theorem with the FC cache live (flush-free threshold): the
+    group-combined FC path reproduces the sequential automaton."""
+    keys, _ = _trace(5, T=60, C=8, n_keys=400)
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=1024,
+                      experts=("lru", "lfu"), backend=backend,
+                      fc_threshold=10**6)
+    plan = plan_groups(keys, cfg.n_buckets, 8, scope="strict")
+    _assert_exact(*_run_pair(cfg, plan))
+
+
+def test_batch_one_grouped_matches_run_trace():
+    """A [T, 1, C] grouped run is the sequential run, exactly."""
+    keys, wr = _trace(4, T=50, C=8, write_frac=0.2)
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=256,
+                      experts=("lru", "lfu"))
+    st, cl, _ = make_cache(cfg, 8, 0)
+    seq = jax.jit(lambda s, c, k, w: run_trace(cfg, s, c, k, w))(
+        st, cl, jnp.asarray(keys), jnp.asarray(wr))
+    bat = jax.jit(lambda s, c, k, w: run_trace_grouped(cfg, s, c, k, w))(
+        st, cl, jnp.asarray(keys[:, None, :]), jnp.asarray(wr[:, None, :]))
+    _assert_exact(jax.tree.map(np.asarray, seq), jax.tree.map(np.asarray, bat))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("batch", [8, 32])
+def test_evicting_regime_decisions_up_to_commutation(seed, batch):
+    """With global evictions, rounds couple through the sampled window:
+    the batched engine must still (a) stay bit-equal across backends,
+    (b) enforce the capacity invariant, and (c) land near the
+    sequential schedule's aggregate decisions."""
+    keys, _ = _trace(seed, T=80, C=8, n_keys=600)
+    base = dict(n_buckets=N_BUCKETS, assoc=8, capacity=192,
+                experts=("lru", "lfu"), sync_period=20)
+    cfg = CacheConfig(**base)
+    plan = plan_groups(keys, cfg.n_buckets, batch, scope="strict")
+    seq, bat = _run_pair(cfg, plan)
+    # backend bit-equality of the batched engine under evictions
+    cfg_f = CacheConfig(backend="fused", **base)
+    _, bat_f = _run_pair(cfg_f, plan)
+    np.testing.assert_array_equal(bat.hits, bat_f.hits)
+    for f in bat.state._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(bat.state, f)),
+            np.asarray(getattr(bat_f.state, f)), f"CacheState.{f}")
+
+    assert int(bat.stats.evictions) > 0
+    assert int(seq.stats.evictions) > 0
+    np.testing.assert_array_equal(seq.ops, bat.ops)
+    cap = int(np.asarray(bat.state.capacity))
+    # catch-up quota keeps drift bounded by one group's inserts
+    assert int(bat.state.n_cached) <= cap + batch * keys.shape[1]
+    h_seq, h_bat = int(seq.hits.sum()), int(bat.hits.sum())
+    assert abs(h_seq - h_bat) / max(h_seq, 1) < 0.15, (h_seq, h_bat)
+
+
+def test_read_your_writes_through_planned_groups():
+    """Per-key program order end to end: every lane SETs its key, then
+    GETs it later in the trace; the planner must never let the GET
+    overtake the SET, so every GET hits and returns the payload."""
+    C, reps = 8, 6
+    # Keys with pairwise-distinct buckets, so the one-insert-per-bucket
+    # step rule (which drops colliding inserts in the sequential engine
+    # too) cannot mask an ordering violation.
+    cand, seen, picked = np.arange(1, 5000, dtype=np.uint32), set(), []
+    for k in cand:
+        b = int(_buckets_of(np.array([k], np.uint32), N_BUCKETS)[0])
+        if b not in seen:
+            seen.add(b)
+            picked.append(k)
+        if len(picked) == C * reps:
+            break
+    picked = np.asarray(picked, np.uint32).reshape(reps, C)
+    rows = []
+    wr_rows = []
+    for i in range(reps):
+        rows += [picked[i], picked[i]]   # SET row then GET row, same keys
+        wr_rows += [np.ones(C, bool), np.zeros(C, bool)]
+    keys = np.stack(rows)
+    wr = np.stack(wr_rows)
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=1024,
+                      experts=("lru", "lfu"))
+    plan = plan_groups(keys, cfg.n_buckets, 8, scope="lane", is_write=wr)
+    st, cl, _ = make_cache(cfg, C, 0)
+    bat = jax.jit(lambda s, c, k, w: run_trace_grouped(cfg, s, c, k, w))(
+        st, cl, jnp.asarray(plan.keys), jnp.asarray(plan.is_write))
+    # every GET row hit (C hits per GET round; SET rounds all miss-insert)
+    assert int(bat.hits.sum()) == reps * C
+    st2 = jax.tree.map(np.asarray, bat.state)
+    live = (st2.size != 0) & (st2.size != 0xFF)
+    assert set(keys.reshape(-1).tolist()) == set(st2.key[live].tolist())
+
+
+def test_grouped_trace_result_shapes():
+    keys, _ = _trace(9, T=30, C=4)
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=512,
+                      experts=("lru", "lfu"))
+    plan = plan_groups(keys, cfg.n_buckets, 8, scope="lane")
+    st, cl, _ = make_cache(cfg, 4, 0)
+    tr = jax.jit(lambda s, c, k: run_trace_grouped(cfg, s, c, k))(
+        st, cl, jnp.asarray(plan.keys))
+    R = plan.n_groups * plan.batch
+    assert tr.hits.shape == (R,)
+    assert tr.ops.shape == (R,)
+    assert tr.weights.shape == (R, 2)
+    assert int(tr.ops.sum()) == int((keys != 0).sum())
+
+
+def test_fc_group_conserves_deltas_when_misses_exceed_capacity():
+    """A lane with more distinct missed slots than FC entries (G > F)
+    must spill the excess increments as direct emissions — combined
+    table-side freq must conserve every hit."""
+    from repro.core.fc_cache import fc_access_group
+    from repro.core.types import init_clients
+
+    G, C, F = 128, 1, 16
+    cfg = CacheConfig(n_buckets=N_BUCKETS, assoc=8, capacity=1024,
+                      experts=("lru", "lfu"), fc_size=F, fc_threshold=10**6)
+    clients = init_clients(cfg, C, seed=0)
+    slots = jnp.arange(1, G + 1, dtype=jnp.int32).reshape(G, C)  # distinct
+    ts = jnp.arange(1, G + 1, dtype=jnp.uint32)
+    clients, es, ed, n_faa, n_hit = fc_access_group(cfg, clients, slots, ts)
+    emitted = int(np.asarray(jnp.where(es >= 0, ed, 0)).sum())
+    buffered = int(np.asarray(clients.fc_delta).sum())
+    assert emitted + buffered == G  # every increment accounted for
+    assert int(n_faa) == G - F     # overflow spilled as direct FAAs

@@ -9,7 +9,7 @@ pytestmark = pytest.mark.fast
 
 from repro.core import (CacheConfig, access, make_cache, run_trace)
 from repro.core.types import SIZE_HISTORY
-from repro.workloads import interleave, zipfian
+from repro.workloads import zipfian
 
 U32 = jnp.uint32
 

@@ -69,6 +69,47 @@ def test_single_shard_router_no_drops_and_weights_sum():
     assert abs(float(np.asarray(dm.state.weights).sum()) - 1.0) < 1e-5
 
 
+def test_batched_router_matches_sequential_rounds():
+    """Grouped dm_access ([G, lanes] request blocks per destination)
+    must make the same decisions as routing the rounds one step at a
+    time, in the commuting regime (strict bucket-disjoint plan,
+    eviction-free, single expert, no FC combining)."""
+    from repro.workloads.plan import plan_groups
+
+    lanes, T, G = 16, 48, 8
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=1024,
+                      experts=("lru",), use_fc=False)
+    keys = zipfian(lanes * T, 600, seed=5).reshape(T, lanes)
+    plan = plan_groups(keys, cfg.n_buckets, G, scope="strict")
+    rounds, _, _ = plan.rounds()
+
+    mesh, dm_a, local = dm_make(cfg, n_shards=1, lanes_per_shard=lanes)
+    step = jax.jit(functools.partial(dm_access, mesh, local))
+    hits_seq = []
+    for t in range(rounds.shape[0]):
+        dm_a, h = step(dm_a, jnp.asarray(rounds[t]))
+        hits_seq.append(np.asarray(h))
+    hits_seq = np.stack(hits_seq)
+
+    mesh, dm_b, local = dm_make(cfg, n_shards=1, lanes_per_shard=lanes)
+    gstep = jax.jit(functools.partial(dm_access, mesh, local))
+    hits_bat = []
+    for g in range(plan.n_groups):
+        dm_b, h = gstep(dm_b, jnp.asarray(plan.keys[g]))
+        hits_bat.append(np.asarray(h))         # [G, lanes]
+    hits_bat = np.concatenate(hits_bat)
+
+    np.testing.assert_array_equal(hits_seq, hits_bat)
+    sa = jax.tree.map(np.asarray, dm_a.stats)
+    sb = jax.tree.map(np.asarray, dm_b.stats)
+    for f in sa._fields:
+        np.testing.assert_array_equal(getattr(sa, f), getattr(sb, f),
+                                      f"OpStats.{f}")
+    np.testing.assert_array_equal(np.asarray(dm_a.state.key),
+                                  np.asarray(dm_b.state.key))
+    assert int(sa.gets.sum()) == int((rounds != 0).sum())
+
+
 def run_sub(code: str) -> str:
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     env.pop("XLA_FLAGS", None)
@@ -76,6 +117,58 @@ def run_sub(code: str) -> str:
                          text=True, env=env, cwd=REPO, timeout=540)
     assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
     return out.stdout
+
+
+@pytest.mark.slow
+def test_batched_router_multi_shard_matches_sequential():
+    """The grouped [G, S, q] axis-1 all_to_all exchange must route
+    identically to round-at-a-time routing on a REAL 8-shard mesh
+    (n_shards=1 makes the exchange an identity, so it cannot catch a
+    transposition in the grouped packing)."""
+    out = run_sub("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CacheConfig
+from repro.dm import dm_make, dm_access
+from repro.workloads import zipfian
+from repro.workloads.plan import plan_groups
+
+lanes_per, S, T, G = 8, 8, 40, 8
+lanes = lanes_per * S
+cfg = CacheConfig(n_buckets=1024, assoc=8, capacity=4096,
+                  experts=("lru",), use_fc=False)
+keys = zipfian(lanes * T, 1500, seed=7).reshape(T, lanes)
+plan = plan_groups(keys, cfg.n_buckets, G, scope="strict")
+rounds, _, _ = plan.rounds()
+
+mesh, dm_a, local = dm_make(cfg, n_shards=S, lanes_per_shard=lanes_per)
+step = jax.jit(functools.partial(dm_access, mesh, local))
+hs = []
+for t in range(rounds.shape[0]):
+    dm_a, h = step(dm_a, jnp.asarray(rounds[t]))
+    hs.append(np.asarray(h))
+hs = np.stack(hs)
+
+mesh, dm_b, local = dm_make(cfg, n_shards=S, lanes_per_shard=lanes_per)
+gstep = jax.jit(functools.partial(dm_access, mesh, local))
+hb = []
+for g in range(plan.n_groups):
+    dm_b, h = gstep(dm_b, jnp.asarray(plan.keys[g]))
+    hb.append(np.asarray(h))
+hb = np.concatenate(hb)
+
+np.testing.assert_array_equal(hs, hb)
+sa = jax.tree.map(np.asarray, dm_a.stats)
+sb = jax.tree.map(np.asarray, dm_b.stats)
+for f in sa._fields:
+    np.testing.assert_array_equal(getattr(sa, f), getattr(sb, f), f)
+np.testing.assert_array_equal(np.asarray(dm_a.state.key),
+                              np.asarray(dm_b.state.key))
+print("OK", int(sa.gets.sum()))
+""")
+    assert "OK" in out
 
 
 @pytest.mark.slow

@@ -7,8 +7,6 @@ OpStats. These tests drive [T, C] traces through both and compare
 everything bit-for-bit (Pallas kernels run in interpret mode on CPU).
 """
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

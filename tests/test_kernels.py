@@ -76,13 +76,15 @@ def test_ranked_eviction_matches_ref(rng, C, W, B, experts, quota):
     offs = rng.integers(0, C, B).astype(np.int32)
     choice = rng.integers(0, len(experts), B).astype(np.int32)
     must = rng.random(B) < 0.7
+    ts = rng.integers(900, 1100, B).astype(np.float32)  # per-op clocks
     v1, c1 = ops.ranked_eviction_op(size, ins, last, freq, offs, choice,
-                                    must, quota, 1000.0, window=W,
+                                    must, quota, ts, window=W,
                                     experts=experts)
     v2, c2 = ref.ranked_eviction_ref(
         jnp.asarray(size), jnp.asarray(ins), jnp.asarray(last),
         jnp.asarray(freq), jnp.asarray(offs), jnp.asarray(choice),
-        jnp.asarray(must), quota, 1000.0, window=W, k=5, experts=experts)
+        jnp.asarray(must), quota, jnp.asarray(ts), window=W, k=5,
+        experts=experts)
     np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
     np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
 
@@ -102,8 +104,9 @@ def test_ranked_eviction_properties(seed, quota):
     choice = rng.integers(0, 2, B).astype(np.int32)
     must = rng.random(B) < 0.8
     v, _ = ops.ranked_eviction_op(size, ins, last, freq, offs, choice,
-                                  must, quota, 1000.0, window=W, k=K,
-                                  experts=experts)
+                                  must, quota,
+                                  np.full(B, 1000.0, np.float32),
+                                  window=W, k=K, experts=experts)
     v = np.asarray(v)
     assert v.shape == (B, K)
     pr_tab = np.stack([last, freq], axis=0)
@@ -127,8 +130,8 @@ def test_ranked_eviction_zero_quota_is_noop(rng):
         arr[C:] = arr[:W]
     offs = rng.integers(0, C, B).astype(np.int32)
     v, _ = ops.ranked_eviction_op(size, ins, last, freq, offs,
-                                  np.zeros(B, np.int32),
-                                  np.ones(B, bool), 0, 10.0, window=W)
+                                  np.zeros(B, np.int32), np.ones(B, bool),
+                                  0, np.full(B, 10.0, np.float32), window=W)
     assert (np.asarray(v) == -1).all()
 
 
@@ -254,11 +257,13 @@ def test_hit_metadata_update_property(seed):
     hits = rng.integers(-1, C, Bh).astype(np.int32)
     emits = rng.integers(-1, C, Be).astype(np.int32)
     deltas = rng.integers(1, 10, Be).astype(np.float32)
-    r1 = ops.hit_metadata_update_op(freq, last, ext, hits, emits, deltas,
-                                    777.0)
+    hts = rng.integers(700, 800, Bh).astype(np.float32)  # per-hit clocks
+    r1 = ops.hit_metadata_update_op(freq, last, ext, hits, hts, emits,
+                                    deltas)
     r2 = ref.hit_metadata_update_ref(
         jnp.asarray(freq), jnp.asarray(last), jnp.asarray(ext),
-        jnp.asarray(hits), jnp.asarray(emits), jnp.asarray(deltas), 777.0)
+        jnp.asarray(hits), jnp.asarray(hts), jnp.asarray(emits),
+        jnp.asarray(deltas))
     for a, b, tol in zip(r1, r2, (1e-6, 0.0, 1e-5)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol,
                                    rtol=1e-6)
@@ -272,8 +277,9 @@ def test_hit_metadata_update_odd_table(rng):
     ext = np.zeros((C, 4), np.float32)
     hits = np.array([7, 700, -1], np.int32)
     f2, l2, e2 = ops.hit_metadata_update_op(
-        freq, last, ext, hits, np.array([700, 700], np.int32),
-        np.array([2.0, 3.0], np.float32), 9.0)
+        freq, last, ext, hits, np.full(3, 9.0, np.float32),
+        np.array([700, 700], np.int32),
+        np.array([2.0, 3.0], np.float32))
     assert f2.shape == (C,) and l2.shape == (C,) and e2.shape == (C, 4)
     assert float(f2[700]) == 5.0 and float(l2[700]) == 9.0
     assert float(l2[7]) == 9.0 and float(f2[7]) == 0.0

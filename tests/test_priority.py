@@ -1,7 +1,6 @@
 """The 12 caching algorithms as priority functions (Table 3)."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.fast

@@ -3,7 +3,6 @@ loop-free programs and against hand-counted math on scanned ones."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze_text

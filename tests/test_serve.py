@@ -1,9 +1,6 @@
 """Serving: Ditto page/prefix cache + decode engine behaviour."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.serve import DittoPageCache
 from repro.serve.page_cache import prefix_page_keys

@@ -1,20 +1,16 @@
 """Training substrate: optimizer, grad accumulation, checkpointing,
 gradient compression, fault-tolerant loop."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch, smoke_config
 from repro.models import init_params
 from repro.train import (AdamWConfig, CheckpointManager, init_opt,
                          make_train_step)
-from repro.train.grad_compress import (CompressState, compress,
-                                       compressed_allreduce, decompress,
-                                       init_compress)
+from repro.train.grad_compress import compressed_allreduce, init_compress
 
 RNG = jax.random.PRNGKey(0)
 
