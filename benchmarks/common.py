@@ -14,11 +14,15 @@ import numpy as np
 from repro.baselines import DittoModel
 from repro.core import CacheConfig, make_cache, run_trace
 from repro.core.cache import run_trace_grouped
+from repro.core.types import byte_hit_ratio, hit_ratio
 from repro.workloads import interleave
 from repro.workloads.plan import plan_groups
 
 _JIT_CACHE = {}
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# BENCH_*.json trajectories keep the last N records only — the files are
+# committed, so an unbounded append would grow them on every CI run.
+BENCH_HISTORY_LIMIT = 50
 
 
 def default_n_buckets(capacity: int) -> int:
@@ -74,7 +78,14 @@ def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
 
 
 def hit_rate(tr) -> float:
-    return float(tr.hits.sum()) / max(float(tr.ops.sum()), 1.0)
+    """Object hit rate of a TraceResult — delegates to the canonical
+    `repro.core.types.hit_ratio` (executed ops only, DESIGN.md §2)."""
+    return hit_ratio(tr.stats)
+
+
+def byte_hit_rate(tr) -> float:
+    """Byte hit rate of a TraceResult (bytes served / bytes requested)."""
+    return byte_hit_ratio(tr.stats)
 
 
 def penalized_throughput(tr, n_clients: int, is_write_frac=0.0) -> float:
@@ -148,6 +159,7 @@ def emit(rows, prefix):
     except (OSError, ValueError):
         pass
     history.append(record)
+    history = history[-BENCH_HISTORY_LIMIT:]   # rotate: newest records win
     try:
         with open(path, "w") as fh:
             json.dump(history, fh, indent=1)

@@ -18,12 +18,13 @@ def main() -> None:
 
     from benchmarks import (ablation, adaptivity, algorithms, efficiency,
                             elasticity, fc_sweep, resources, roofline_table,
-                            throughput)
+                            sizes, throughput)
     modules = [
         ("elasticity", elasticity),       # Figs. 1, 13
         ("efficiency", efficiency),       # Figs. 2, 14, 15
         ("throughput", throughput),       # hot path: reference vs fused
         ("adaptivity", adaptivity),       # Figs. 16-19
+        ("sizes", sizes),                 # byte hit rate: sized traces
         ("resources", resources),         # Figs. 20-22
         ("algorithms", algorithms),       # Fig. 23, Table 3
         ("ablation", ablation),           # Fig. 24

@@ -1,0 +1,89 @@
+"""Byte hit rate under a byte budget: uniform- vs zipf-sized traces x
+size-oblivious and size-aware experts (paper Table 3, §7 trace shapes).
+
+The memory pool is a BYTE budget (`capacity_blocks`), so this is the
+benchmark where the size-aware priority functions earn their keep: on
+the zipf-sized trace (request-dominating hot keys are small, the
+byte-dominating tail is large — the Twitter/IBM analogue shape) GDSF
+keeps many small popular objects where LRU burns the budget on big
+recent-but-cold ones, and the gap shows up directly in **byte hit
+rate**. The uniform-sized trace is the control arm: sizes carry no
+signal there, so the gap collapses — which is exactly why the paper's
+adaptive weighting can pick the size-aware expert only when it helps.
+
+Each row reports object and byte hit rates, the final byte occupancy,
+and the model throughput (whose bandwidth bound now responds to
+measured wire bytes). Appends to BENCH_sizes.json like every benchmark.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (byte_hit_rate, emit, hit_rate,
+                               model_throughput, run_ditto)
+from repro.workloads import sized_zipfian
+
+N_CLIENTS = 8
+N_KEYS = 4_000
+CAP_OBJECTS = 1024          # table sizing (slots >= 2x this)
+CAP_BLOCKS = 1024           # the byte budget: 64 KiB of 64B blocks
+MAX_BLOCKS = 16
+# Big objects drop the live density well under n_slots (124 16-block
+# objects fill the budget), so eviction samples read a wider contiguous
+# window — still ONE RDMA read (§4.2.1) — to keep K live candidates.
+SAMPLE_WINDOW = 128
+
+EXPERT_SETS = (
+    ("lru", ("lru",)),
+    ("lfu", ("lfu",)),
+    ("gdsf", ("gdsf",)),
+    ("adaptive", ("lru", "lfu", "gdsf")),
+)
+
+
+def run(quick=False):
+    rows = []
+    n = 8_000 if quick else 32_000
+    summary = {}
+    for size_dist in ("uniform", "zipf"):
+        keys, sizes = sized_zipfian(n, N_KEYS, theta=0.99, seed=7,
+                                    size_dist=size_dist,
+                                    max_blocks=MAX_BLOCKS)
+        for label, experts in EXPERT_SETS:
+            tr, cfg, wall = run_ditto(
+                keys, capacity=CAP_OBJECTS, capacity_blocks=CAP_BLOCKS,
+                experts=experts, n_clients=N_CLIENTS, sizes=sizes,
+                sample_window=SAMPLE_WINDOW, seed=0)
+            bhr = byte_hit_rate(tr)
+            summary[(size_dist, label)] = bhr
+            rows.append(dict(
+                name=f"{size_dist}_{label}", n=n,
+                us_per_call=wall / n * 1e6,
+                byte_hit_rate=round(bhr, 4),
+                hit_rate=round(hit_rate(tr), 4),
+                blocks_cached=int(tr.state.bytes_cached),
+                capacity_blocks=int(tr.state.capacity_blocks),
+                evictions=int(tr.stats.evictions),
+                tput_mops=round(model_throughput(tr, N_CLIENTS), 3),
+                device=jax.default_backend()))
+    # The headline: size-aware beats size-oblivious on byte hit rate when
+    # (and only when) sizes are popularity-correlated.
+    gap = summary[("zipf", "gdsf")] - summary[("zipf", "lru")]
+    rows.append(dict(
+        name="zipf_gdsf_vs_lru_gap", us_per_call=0.0,
+        byte_gap=round(gap, 4),
+        uniform_gap=round(summary[("uniform", "gdsf")]
+                          - summary[("uniform", "lru")], 4),
+        adaptive_gap=round(summary[("zipf", "adaptive")]
+                           - summary[("zipf", "lru")], 4)))
+    assert gap > 0, (
+        "GDSF must beat LRU on byte hit rate for the zipf-sized trace; "
+        f"got {summary[('zipf', 'gdsf')]:.4f} vs "
+        f"{summary[('zipf', 'lru')]:.4f}")
+    return emit(rows, "sizes")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -34,17 +34,18 @@ res = run_scenario(
     workloads={"shift": lru_friendly(20_000, seed=3)})
 
 print(f"{'window':>10} {'cap':>5} {'lanes':>5} {'hit%':>6} "
-      f"{'cached':>6} {'Mops':>6} {'drain':>5} events")
+      f"{'cached':>6} {'KiB':>6} {'Mops':>6} {'drain':>5} events")
 for w in res.windows:
     print(f"{w['t0']:>4}-{w['t1']:<5} {w['capacity']:>5} {w['lanes']:>5} "
           f"{100 * w['hit_rate']:>6.1f} {w['n_cached']:>6} "
+          f"{w['bytes_cached'] // 1024:>6} "
           f"{w['tput_mops']:>6.2f} {w['drain_steps']:>5} "
           f"{','.join(w['events']) or '-'}")
 
 mig = sum(e["report"]["migration_bytes"] for e in res.events)
 print(f"\nresize events: {len(res.events)}, migrated bytes (measured): {mig}")
-per_shard = np.asarray(res.dm.state.n_cached)
-print(f"final occupancy {per_shard.sum()} <= capacity "
-      f"{res.windows[-1]['capacity']}, per-shard: {per_shard}")
+per_shard = np.asarray(res.dm.state.bytes_cached)
+print(f"final byte occupancy {per_shard.sum()} blocks <= budget "
+      f"{res.windows[-1]['capacity']} blocks, per-shard: {per_shard}")
 assert mig == 0
 assert per_shard.sum() <= res.windows[-1]["capacity"] + 64

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate for the CI fast lane.
+
+Compares the newest record of a BENCH_*.json trajectory (the record the
+fast lane just appended) against the previous same-device record(s) and
+fails — exit 1 — when any matched row's ``us_per_call`` regressed by
+more than the threshold (default 30%).
+
+Noise handling: container wall-clock timings swing ~25% run to run even
+best-of-N, so the per-row baseline is the *median* over up to the last
+``--window`` (default 5) previous same-device records that contain the
+row, not a single sample — one unusually fast historical record cannot
+turn ordinary jitter into a red build. The gate is tolerant by design:
+
+  * no previous same-device record  -> green ("first run, no baseline")
+  * new rows (no baseline)          -> noted, never fail
+  * removed rows                    -> noted, never fail
+  * rows with us_per_call <= 0      -> skipped (derived/summary rows)
+
+Caveat: "same device" keys on the JAX backend string ("cpu"/"tpu"), not
+the host, so committed records from a faster machine can make a slower
+CI runner read as a regression. If that bites, loosen the lane with
+BENCH_TOLERANCE_PCT (the medians re-center on the runner's own records
+after a couple of green runs).
+
+Usage:
+  python scripts/bench_compare.py                       # BENCH_throughput
+  python scripts/bench_compare.py --file BENCH_x.json --threshold 0.5
+  BENCH_TOLERANCE_PCT=50 python scripts/bench_compare.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rows_by_name(record):
+    return {r["name"]: r for r in record.get("rows", [])
+            if r.get("us_per_call", 0) and r["us_per_call"] > 0}
+
+
+def compare(history: list, threshold: float, window: int = 5):
+    """Returns (regressions, lines): failed rows and a report table."""
+    lines = []
+    if len(history) < 2:
+        return [], ["first run: no baseline record to compare against"]
+    newest = history[-1]
+    device = newest.get("device", "unknown")
+    prior = [r for r in history[:-1] if r.get("device") == device]
+    if not prior:
+        return [], [f"no previous record for device={device!r}: skipping"]
+
+    new_rows = _rows_by_name(newest)
+    prior_rows = [_rows_by_name(r) for r in prior[-window:]]
+    base = {}
+    for name in new_rows:
+        samples = [rows[name]["us_per_call"]
+                   for rows in prior_rows if name in rows]
+        if samples:
+            base[name] = statistics.median(samples)
+
+    regressions = []
+    lines.append(f"{'row':<28} {'base_us':>9} {'new_us':>9} {'ratio':>6}")
+    for name, row in sorted(new_rows.items()):
+        if name not in base:
+            lines.append(f"{name:<28} {'new':>9} {row['us_per_call']:>9.2f}"
+                         f" {'-':>6}")
+            continue
+        ratio = row["us_per_call"] / base[name]
+        flag = "  REGRESSION" if ratio > 1.0 + threshold else ""
+        lines.append(f"{name:<28} {base[name]:>9.2f} "
+                     f"{row['us_per_call']:>9.2f} {ratio:>6.2f}{flag}")
+        if ratio > 1.0 + threshold:
+            regressions.append((name, base[name], row["us_per_call"], ratio))
+    removed = set().union(*(set(r) for r in prior_rows)) - set(new_rows)
+    for name in sorted(removed):
+        lines.append(f"{name:<28} {'(removed)':>9}")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--file", default="BENCH_throughput.json",
+                    help="trajectory file (relative to the repo root)")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE_PCT", 30))
+                    / 100.0,
+                    help="relative us_per_call regression that fails "
+                         "(default 0.30; env BENCH_TOLERANCE_PCT)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="previous same-device records in the median "
+                         "baseline")
+    args = ap.parse_args(argv)
+
+    path = args.file if os.path.isabs(args.file) else os.path.join(
+        REPO_ROOT, args.file)
+    try:
+        with open(path) as fh:
+            history = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path} ({e}): nothing to gate")
+        return 0
+    if not isinstance(history, list) or not history:
+        print(f"bench_compare: {path} holds no records: nothing to gate")
+        return 0
+
+    regressions, lines = compare(history, args.threshold, args.window)
+    print(f"bench_compare: {os.path.basename(path)} "
+          f"(threshold +{args.threshold:.0%}, window {args.window})")
+    for ln in lines:
+        print("  " + ln)
+    if regressions:
+        worst = max(regressions, key=lambda r: r[3])
+        print(f"bench_compare: FAIL — {len(regressions)} row(s) regressed "
+              f">{args.threshold:.0%}; worst: {worst[0]} "
+              f"{worst[1]:.2f}us -> {worst[2]:.2f}us ({worst[3]:.2f}x)")
+        return 1
+    print("bench_compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,13 @@ phase tier-1 python -m pytest "${PYTEST_ARGS[@]}"
 if [[ "$FAST" == "1" ]]; then
     phase bench-throughput python -c \
         "from benchmarks import throughput; throughput.run(quick=True)"
+    phase bench-sizes python -c \
+        "from benchmarks import sizes; sizes.run(quick=True)"
+    phase bench-compare python scripts/bench_compare.py
+    # sizes rows are un-repeated single measurements: gate them at a
+    # looser threshold so jitter cannot redden the lane
+    phase bench-compare-sizes python scripts/bench_compare.py \
+        --file BENCH_sizes.json --threshold 0.6
     echo "check --fast: OK"
     exit 0
 fi
@@ -59,5 +66,10 @@ phase bench-adaptivity python -c \
     "from benchmarks import adaptivity; adaptivity.run(quick=True)"
 phase bench-throughput python -c \
     "from benchmarks import throughput; throughput.run(quick=True)"
+phase bench-sizes python -c \
+    "from benchmarks import sizes; sizes.run(quick=True)"
+phase bench-compare python scripts/bench_compare.py
+phase bench-compare-sizes python scripts/bench_compare.py \
+    --file BENCH_sizes.json --threshold 0.6
 
 echo "check: OK"

@@ -26,6 +26,7 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class Cluster:
     rnic_msg_rate: float = 41e6      # MN RNIC verbs/sec (message-rate bound)
+    rnic_bw: float = 12.5e9          # MN RNIC bytes/sec (100 Gbps ConnectX-6)
     rtt: float = 2.25e-6             # one-sided RDMA round trip (s)
     client_overhead: float = 1.2e-6  # client-side CPU per op (s)
     mn_core_set_rate: float = 1.2e6  # CliqueMap Set RPCs /s /MN-core
@@ -44,7 +45,8 @@ CLUSTER = Cluster()
 # ----------------------------------------------------------------------
 
 class DittoModel:
-    """Throughput from measured messages/op + serial RTTs per op."""
+    """Throughput from measured messages/op + serial RTTs per op, plus a
+    payload-size-dependent bandwidth bound from measured wire bytes."""
 
     def __init__(self, cluster: Cluster = CLUSTER):
         self.c = cluster
@@ -54,6 +56,20 @@ class DittoModel:
         msgs = float(stats.rdma_read + stats.rdma_write + stats.rdma_cas
                      + stats.rdma_faa + stats.rpc)
         return msgs / max(ops, 1.0)
+
+    def bytes_per_op(self, stats) -> float:
+        """Measured wire bytes per executed op: object payloads move at
+        their real size (64B blocks), so big-value traces saturate RNIC
+        *bandwidth* before they saturate its message rate. If EITHER i32
+        counter wrapped (see OpStats), the measurement is garbage:
+        disable the bound (return 0) rather than cap throughput at an
+        arbitrary wrong value."""
+        ops = float(stats.gets + stats.sets)
+        rd = float(getattr(stats, "rdma_read_bytes", 0))
+        wr = float(getattr(stats, "rdma_write_bytes", 0))
+        if rd < 0 or wr < 0:
+            return 0.0
+        return (rd + wr) / max(ops, 1.0)
 
     def serial_rtts(self, is_write_frac: float = 0.0) -> float:
         # GET: bucket read -> object read (metadata update is async).
@@ -69,7 +85,10 @@ class DittoModel:
         # Coroutine-scheduling efficiency loss on large CNs (paper §5.2).
         eff = 0.93 ** max(0, np.log2(max(n_clients, 1) / 32.0))
         rnic_bound = self.c.rnic_msg_rate / max(self.msgs_per_op(stats), 1e-9)
-        return min(client_bound * eff, rnic_bound)
+        # ~400B/op at 1-block objects: far from binding, so uniform-size
+        # results are unchanged; 4KB payloads pin it at ~2.8 Mops.
+        bw_bound = self.c.rnic_bw / max(self.bytes_per_op(stats), 1e-9)
+        return min(client_bound * eff, rnic_bound, bw_bound)
 
 
 # ----------------------------------------------------------------------

@@ -4,12 +4,14 @@ caching (paper §4), as functional JAX."""
 from repro.core.cache import AccessResult, TraceResult, access, make_cache, run_trace
 from repro.core.priority import ALL_ALGORITHMS, REGISTRY, loc_of
 from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
-                              init_cache, init_clients, init_stats,
-                              stats_delta, stats_sum)
+                              byte_hit_ratio, hit_ratio, init_cache,
+                              init_clients, init_stats, stats_delta,
+                              stats_sum)
 
 __all__ = [
     "AccessResult", "TraceResult", "access", "make_cache", "run_trace",
     "ALL_ALGORITHMS", "REGISTRY", "loc_of",
     "CacheConfig", "CacheState", "ClientState", "OpStats",
+    "byte_hit_ratio", "hit_ratio",
     "init_cache", "init_clients", "init_stats", "stats_delta", "stats_sum",
 ]

@@ -338,23 +338,39 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     dropped = dropped | (winner & ~ins_ok)
 
     # ------------------------------------------------------------------
-    # 5. Global sampled eviction (the paper's core): when over capacity,
-    #    each capacity-consuming insert samples K slots, evaluates all E
-    #    expert priorities, and evicts its chosen expert's candidate.
-    #    Batched catch-up: if the cache has drifted over capacity (duplicate
-    #    victims / unlucky samples on earlier steps — the batched analogue
-    #    of CAS-retry races), each evicting op claims up to K victims,
-    #    lowest priority first, until the deficit is covered.
+    # 5. Global sampled eviction (the paper's core): when over the byte
+    #    budget, each capacity-consuming insert samples K slots, evaluates
+    #    all E expert priorities, and evicts from its chosen expert's
+    #    priority ranking.  The pool is a BYTE budget (64B blocks): an
+    #    insert charges its object size and evictions credit the victim's
+    #    size, so the over-capacity catch-up quota is a per-op *block*
+    #    deficit — each evicting op peels ranked victims (lowest priority
+    #    first, up to K) until the freed blocks cover its share.  With
+    #    uniform 1-block objects this degenerates exactly to the old
+    #    object-count quota.
     # ------------------------------------------------------------------
     consumes = plain | fallback_hist                          # +1 live object
-    n_consume = jnp.sum(consumes).astype(I32)
-    over = state.n_cached + n_consume - state.capacity
-    # Per-op victim quota in [0, K]: 1 while at capacity, more on drift.
+    # SETs that re-size an existing object charge (or credit) the byte
+    # delta vs the stored size, and *growing* SETs join the evictor set —
+    # otherwise hit-only write traffic could inflate objects past the
+    # budget with nothing ever sampling a victim. Uniform 1-block
+    # workloads have zero delta, recovering the old behavior exactly.
+    old_sz = state.size[jnp.maximum(slot, 0)]
+    set_growth = jnp.where(hit & is_write,
+                           obj_size.astype(I32) - old_sz.astype(I32), 0)
+    growing_set = hit & is_write & (set_growth > 0)
+    chargers = consumes | growing_set
+    n_charge = jnp.sum(chargers).astype(I32)
+    inc_blocks = (jnp.sum(jnp.where(consumes, obj_size, U32(0))).astype(I32)
+                  + jnp.sum(set_growth))
+    over = state.bytes_cached + inc_blocks - state.capacity_blocks
+    # Per-op victim quota in blocks: each evicting op must free (at least)
+    # its ceil-share of the block deficit, bounded by K victims.
     quota = jnp.where(
         over <= 0, 0,
-        jnp.clip((over + jnp.maximum(n_consume, 1) - 1)
-                 // jnp.maximum(n_consume, 1), 1, K))
-    must_evict = consumes & (over > 0)
+        jnp.maximum((over + jnp.maximum(n_charge, 1) - 1)
+                    // jnp.maximum(n_charge, 1), 1))
+    must_evict = chargers & (over > 0)
 
     # Contiguous-window sampling (§4.2.1): ONE read of W consecutive slots
     # from a random offset; the first K live objects in the window are the
@@ -384,24 +400,30 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         cand_slot = jnp.take_along_axis(samp, cand_k, axis=1)  # [B, E]
 
         # Chosen expert's priority ranking over this op's samples:
-        # peel off the lowest-priority sample quota times (== the first
-        # quota entries of a stable sort; the exact mirror of the fused
-        # kernel's loop, and far cheaper than an argsort on CPU).
+        # peel off the lowest-priority sample until the freed blocks
+        # cover the op's quota (== the shortest prefix of a stable sort
+        # whose sizes sum past the deficit; the exact mirror of the
+        # fused kernel's loop, and far cheaper than an argsort on CPU).
         prio_e = jnp.take_along_axis(
             s_prio, e_choice[:, None, None], axis=2)[:, :, 0]  # [B, W]
+        s_blocks = jnp.where(s_live, s_md.size, 0.0)          # [B, W]
         cols = jnp.arange(W)[None, :]
         vs = []
+        freed = jnp.zeros((B,), F32)
         for j in range(K):
             arg = jnp.argmin(prio_e, axis=1)                  # [B]
             val = jnp.take_along_axis(prio_e, arg[:, None], axis=1)[:, 0]
-            ok = (j < quota) & (val < jnp.inf) & must_evict
+            ok = (freed < quota.astype(F32)) & (val < jnp.inf) & must_evict
             vs.append(jnp.where(ok, jnp.take_along_axis(
                 samp, arg[:, None], axis=1)[:, 0], -1))
+            freed = freed + jnp.where(ok, jnp.take_along_axis(
+                s_blocks, arg[:, None], axis=1)[:, 0], 0.0)
             prio_e = jnp.where(cols == arg[:, None], jnp.inf, prio_e)
         victims_2d = jnp.stack(vs, axis=1)                    # [B, K]
         take = victims_2d >= 0
-    V = victims_2d.shape[1]  # K on both paths (quota <= K), so the
-    # reference and fused rankings coincide rank for rank.
+    V = victims_2d.shape[1]  # K on both paths (at most K victims per op
+    # regardless of the block quota), so the reference and fused rankings
+    # coincide rank for rank.
     victims = victims_2d.reshape(-1)                          # [B*V]
     ev_winner = _first_winner(victims, victims >= 0, n_slots_total)
     n_evict = jnp.sum(ev_winner).astype(I32)
@@ -455,15 +477,24 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     n_cached = (state.n_cached + jnp.sum(plain).astype(I32)
                 + jnp.sum(fallback_hist).astype(I32) - n_evict)
+    # Byte occupancy is recomputed exactly from the final table (one
+    # reduce over a column the step already rewrote): inserts charge
+    # obj_size, evictions credit the victim's size, SET re-sizes and
+    # bucket-fallback overwrites net out — the invariant
+    # `bytes_cached == sum(live sizes)` holds by construction and can
+    # never drift the way an incremental counter could.
+    bytes_cached = jnp.sum(
+        jnp.where(_is_live(sizes3), sizes3, U32(0))).astype(I32)
 
     result_vals = state.values[jnp.maximum(slot, 0)]
 
     new_state = CacheState(
         key=key2, key_hash=khash2, size=sizes3, ptr=ptr3,
         insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
-        n_cached=n_cached, hist_ctr=state.hist_ctr + n_hist,
+        n_cached=n_cached, bytes_cached=bytes_cached,
+        hist_ctr=state.hist_ctr + n_hist,
         clock=clock + U32(G), weights=gw, gds_L=gds_L,
-        capacity=state.capacity)
+        capacity_blocks=state.capacity_blocks)
     new_clients = clients._replace(
         local_weights=local_w, penalty_acc=pacc, penalty_cnt=pcnt)
 
@@ -491,9 +522,31 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
               + sep_hist * 2)
     cas = n_ins + jnp.sum(ev_winner)      # slot atomic installs/tags
     faa = n_faa + n_hist + sep_hist
+    # Wire-byte accounting (payload-size-dependent reads/writes, DESIGN.md
+    # §10): slot structures move at 32B apiece (16B atomic field + 16B
+    # inline metadata), object payloads at their real size*64B — this is
+    # what makes the cost model's bandwidth bound respond to sized traces.
+    SLOT_B = 32
+    hit_blocks = jnp.sum(jnp.where(hit, old_sz, U32(0))).astype(I32)
+    miss_blocks = jnp.sum(jnp.where(miss, obj_size, U32(0))).astype(I32)
+    ins_blocks = jnp.sum(jnp.where(ins_ok, obj_size, U32(0))).astype(I32)
+    set_blocks = jnp.sum(jnp.where(hit & is_write, obj_size,
+                                   U32(0))).astype(I32)
+    read_b = (n_op * A * SLOT_B           # bucket probe
+              + (0 if sf else n_hit * SLOT_B)
+              + hit_blocks * 64           # object payload reads
+              + (0 if (cfg.use_lwh or not adaptive)
+                 else jnp.sum(miss) * SLOT_B)
+              + jnp.sum(evicting) * (W if sf else K) * SLOT_B)
+    write_b = (n_hit * (SLOT_B // 2 if sf else SLOT_B)
+               + ins_blocks * 64 + n_ins * SLOT_B   # payload + slot init
+               + set_blocks * 64                    # SET payload rewrite
+               + jnp.sum(write_hist) * 16 + sep_hist * SLOT_B)
     stats = stats_add(
         stats, rdma_read=reads, rdma_write=writes, rdma_cas=cas,
         rdma_faa=faa, rpc=n_sync, gets=n_op - n_set, sets=n_set,
+        rdma_read_bytes=read_b, rdma_write_bytes=write_b,
+        hit_bytes=hit_blocks * 64, miss_bytes=miss_blocks * 64,
         hits=n_hit, misses=jnp.sum(miss), regrets=jnp.sum(regret),
         evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
         insert_drops=jnp.sum(dropped), fc_hits=n_fc_hit,

@@ -35,7 +35,14 @@ class CacheConfig:
 
     n_buckets: int = 4096
     assoc: int = 8                      # slots per bucket
-    capacity: int = 16384               # max live objects (memory budget)
+    capacity: int = 16384               # max live *objects* (sizes the
+                                        # table, history and discount; the
+                                        # eviction trigger is byte-accurate,
+                                        # see capacity_blocks)
+    capacity_blocks: int = 0            # memory budget in 64B blocks;
+                                        # 0 -> `capacity` blocks (uniform
+                                        # 1-block objects: byte accounting
+                                        # degenerates to object counting)
     hist_len: int = 0                   # 0 -> defaults to capacity (LeCaR)
     n_samples: int = 5                  # K, Redis default
     sample_window: int = 0              # contiguous slots read per eviction
@@ -64,6 +71,11 @@ class CacheConfig:
     @property
     def history_len(self) -> int:
         return self.hist_len if self.hist_len > 0 else self.capacity
+
+    @property
+    def budget_blocks(self) -> int:
+        """The byte budget in 64B blocks the pool enforces at runtime."""
+        return self.capacity_blocks if self.capacity_blocks > 0 else self.capacity
 
     @property
     def n_experts(self) -> int:
@@ -102,13 +114,20 @@ class CacheState(NamedTuple):
     values: jnp.ndarray     # u32[n_slots, value_words]
     # --- globals (held by the memory-pool controller in the paper) ---
     n_cached: jnp.ndarray   # i32[]  live object count
+    bytes_cached: jnp.ndarray  # i32[] live bytes in 64B BLOCKS (the paper's
+                            # allocation granule; x64 for real bytes — the
+                            # scenario driver's window key `bytes_cached`
+                            # is that x64 value) — exactly the sum of live
+                            # slot sizes, recomputed every step so the
+                            # byte invariant cannot drift
     hist_ctr: jnp.ndarray   # u32[]  global history counter (logical FIFO tail)
     clock: jnp.ndarray      # u32[]  logical timestamp, +1 per batched step
     weights: jnp.ndarray    # f32[E] global expert weights
     gds_L: jnp.ndarray      # f32[]  GreedyDual inflation value
-    capacity: jnp.ndarray   # i32[]  live-object budget — a *runtime* scalar,
-                            # so growing/shrinking the memory pool is one
-                            # register write (zero data migration, §2.2)
+    capacity_blocks: jnp.ndarray  # i32[] byte budget in 64B blocks — a
+                            # *runtime* scalar, so growing/shrinking the
+                            # memory pool by GB is one register write
+                            # (zero data migration, §2.2)
 
 
 class ClientState(NamedTuple):
@@ -139,10 +158,23 @@ class OpStats(NamedTuple):
     rdma_cas: jnp.ndarray
     rdma_faa: jnp.ndarray
     rpc: jnp.ndarray
+    rdma_read_bytes: jnp.ndarray    # payload-size-dependent wire bytes:
+    rdma_write_bytes: jnp.ndarray   # probes/metadata at 32B/slot, object
+                                    # payloads at size*64B (DESIGN.md §10).
+                                    # NB: byte counters grow ~1000x faster
+                                    # than op counters; without x64 the
+                                    # i32 accumulators hold ~2GB, i.e.
+                                    # ~500k max-size (4KB) ops per
+                                    # process — ample for the benchmark
+                                    # traces, snapshot/delta for more
     gets: jnp.ndarray
     sets: jnp.ndarray
     hits: jnp.ndarray
     misses: jnp.ndarray
+    hit_bytes: jnp.ndarray          # bytes served from cache (stored size)
+    miss_bytes: jnp.ndarray         # bytes fetched from storage (request
+                                    # size) — hit_bytes/(hit+miss) is the
+                                    # byte hit ratio (paper Table 3 sizes)
     regrets: jnp.ndarray
     evictions: jnp.ndarray
     bucket_evictions: jnp.ndarray   # in-bucket fallback evictions
@@ -180,11 +212,12 @@ def init_cache(cfg: CacheConfig) -> CacheState:
         ext=jnp.zeros((n, EXT_WIDTH), jnp.float32),
         values=jnp.zeros((n, cfg.value_words), jnp.uint32),
         n_cached=jnp.zeros((), jnp.int32),
+        bytes_cached=jnp.zeros((), jnp.int32),
         hist_ctr=jnp.zeros((), jnp.uint32),
         clock=jnp.ones((), jnp.uint32),
         weights=jnp.full((cfg.n_experts,), 1.0 / cfg.n_experts, jnp.float32),
         gds_L=jnp.zeros((), jnp.float32),
-        capacity=jnp.asarray(cfg.capacity, jnp.int32),
+        capacity_blocks=jnp.asarray(cfg.budget_blocks, jnp.int32),
     )
 
 
@@ -223,3 +256,27 @@ def stats_delta(new: OpStats, old: OpStats) -> OpStats:
     """Counter difference between two snapshots — the per-window counters
     that drive the elastic runtime's feedback loop (DESIGN.md §8)."""
     return OpStats(*[n - o for n, o in zip(new, old)])
+
+
+def hit_ratio(stats: OpStats) -> float:
+    """THE canonical hit ratio: hits over *executed* ops.
+
+    ``gets + sets`` counts only executed operations — requests the DM
+    router dropped (``route_drops``) never reach the cache, so this is
+    identically ``hits / (issued - route_drops)`` (DESIGN.md §2: never
+    divide by issued lanes). Every consumer (scenario driver, controller
+    metrics, benchmarks) must use this instead of re-deriving it."""
+    return float(stats.hits) / max(float(stats.gets + stats.sets), 1.0)
+
+
+def byte_hit_ratio(stats: OpStats) -> float:
+    """Byte hit ratio: bytes served from cache over bytes requested.
+
+    The metric under which the size-aware experts (size/GDS/GDSF) earn
+    their keep on skew-sized traces (paper Table 3, §7 trace shapes).
+    Counters past the i32 range (see OpStats) wrap negative; surface
+    that as 0 rather than a plausible-looking wrong ratio."""
+    hit_b, miss_b = float(stats.hit_bytes), float(stats.miss_bytes)
+    if hit_b < 0 or miss_b < 0:
+        return 0.0
+    return hit_b / max(hit_b + miss_b, 1.0)

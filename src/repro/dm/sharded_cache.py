@@ -83,9 +83,11 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
     runs a local core cache over 1/n_shards of the buckets/capacity."""
     assert cfg.n_buckets % n_shards == 0
     assert cfg.capacity % n_shards == 0
+    assert cfg.capacity_blocks % n_shards == 0
     local = dataclasses.replace(
         cfg, n_buckets=cfg.n_buckets // n_shards,
         capacity=cfg.capacity // n_shards,
+        capacity_blocks=cfg.capacity_blocks // n_shards,
         hist_len=cfg.history_len // n_shards)
     mesh = _mesh(n_shards)
     state = init_cache(cfg)  # global arrays; shard by slot ranges
@@ -93,10 +95,11 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
     def rep(x):
         return jnp.broadcast_to(x[None], (n_shards,) + x.shape)
     state = state._replace(
-        n_cached=rep(state.n_cached), hist_ctr=rep(state.hist_ctr),
+        n_cached=rep(state.n_cached), bytes_cached=rep(state.bytes_cached),
+        hist_ctr=rep(state.hist_ctr),
         clock=rep(state.clock), weights=rep(state.weights),
         gds_L=rep(state.gds_L),
-        capacity=rep(jnp.asarray(local.capacity, jnp.int32)))
+        capacity_blocks=rep(jnp.asarray(local.budget_blocks, jnp.int32)))
     clients = init_clients(cfg, n_shards * lanes_per_shard, seed)
 
     sh_slot = NamedSharding(mesh, P(AXIS))
@@ -111,10 +114,14 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
 
 
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
-              keys: jnp.ndarray, is_write=None,
+              keys: jnp.ndarray, is_write=None, obj_size=None,
               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
     """One DM step: keys [n_shards * lanes] or a request group
     [G, n_shards * lanes] (0 = no-op). Returns hits of the same shape.
+    ``obj_size`` ([.. like keys], 64B blocks, default 1) is bit-packed
+    with the write flag into a second u32 word of the keys' exchange,
+    so the owning shard charges the byte-accurate insert cost of each
+    routed request without an extra collective.
 
     Batched routing: the router packs each round of the group into
     per-destination request blocks, ships the whole [G, q] group per
@@ -136,6 +143,8 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         keys = keys[None]
         if is_write is not None:
             is_write = is_write[None]
+        if obj_size is not None:
+            obj_size = obj_size[None]
     G = keys.shape[0]
     lanes = keys.shape[1] // n_shards
     if route_factor <= 0:
@@ -146,8 +155,10 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
     if is_write is None:
         is_write = jnp.zeros_like(keys, dtype=bool)
+    if obj_size is None:
+        obj_size = jnp.ones_like(keys, dtype=jnp.uint32)
 
-    def route_one(keys_l, write_l):
+    def route_one(keys_l, write_l, size_l):
         # --- client side: decide owners, pack per-destination slots -----
         kh = hash_key(keys_l)
         owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
@@ -163,40 +174,48 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         rank = jnp.arange(lanes) - seg_start
         send = jnp.zeros((n_shards, q), jnp.uint32)
         wsend = jnp.zeros((n_shards, q), bool)
+        zsend = jnp.ones((n_shards, q), jnp.uint32)
         src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
         ok = rank < q
         dst = jnp.where(ok, sorted_owner, n_shards)
         rr = jnp.where(ok, rank, 0)
         send = send.at[dst, rr].set(keys_l[order], mode="drop")
         wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
+        zsend = zsend.at[dst, rr].set(size_l[order], mode="drop")
         src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
                                             mode="drop")
         # Requests beyond the per-destination capacity are NOT executed
         # this step (the caller sees hit=False and may reissue); count
         # them so skewed-trace hit ratios stay honest.
         n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
-        return send, wsend, src_slot, n_drop
+        return send, wsend, zsend, src_slot, n_drop
 
-    def step(state, clients, stats, keys_l, write_l):
+    def step(state, clients, stats, keys_l, write_l, size_l):
         # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
         state = state._replace(
-            n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
+            n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
+            hist_ctr=state.hist_ctr[0],
             clock=state.clock[0], weights=state.weights[0],
-            gds_L=state.gds_L[0], capacity=state.capacity[0])
+            gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0])
         stats = jax.tree.map(lambda x: x[0], stats)
         # --- per-round routing: group blocks per destination ------------
-        send, wsend, src_slot, n_drop = jax.vmap(route_one)(keys_l, write_l)
+        send, wsend, zsend, src_slot, n_drop = jax.vmap(route_one)(
+            keys_l, write_l, size_l)
         # --- the network: ONE exchange ships each destination's whole
-        # [G, q] request group (RDMA doorbell-batching analogue) ---------
-        recv = jax.lax.all_to_all(send, AXIS, 1, 1, tiled=True)  # [G, S, q]
-        wrecv = jax.lax.all_to_all(wsend, AXIS, 1, 1, tiled=True)
-        recv = recv.reshape(G, n_shards * q)
-        wrecv = wrecv.reshape(G, n_shards * q)
+        # [G, q] request group (RDMA doorbell-batching analogue); the op
+        # sideband (object size in 64B blocks << 1 | write bit) rides as
+        # a second u32 word of the SAME collective ----------------------
+        meta = (zsend.astype(jnp.uint32) << 1) | wsend.astype(jnp.uint32)
+        packed = jnp.stack([send, meta], axis=-1)         # [G, S, q, 2]
+        precv = jax.lax.all_to_all(packed, AXIS, 1, 1, tiled=True)
+        recv = precv[..., 0].reshape(G, n_shards * q)
+        wrecv = (precv[..., 1] & 1).astype(bool).reshape(G, n_shards * q)
+        zrecv = (precv[..., 1] >> 1).reshape(G, n_shards * q)
 
         # --- memory-pool side: one widened client-centric group step ----
         state, clients2, stats, res = access_group(
             local_cfg, state, _pad_clients(clients, n_shards * q), stats,
-            recv, is_write=wrecv)
+            recv, is_write=wrecv, obj_size=zrecv)
         stats = stats_add(stats, route_drops=jnp.sum(n_drop))
 
         # --- route replies back + merge hit masks ------------------------
@@ -232,9 +251,10 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
                 clients.local_weights))
         # Re-expand shard scalars for the sharded output layout.
         state = state._replace(
-            n_cached=state.n_cached[None], hist_ctr=state.hist_ctr[None],
+            n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
+            hist_ctr=state.hist_ctr[None],
             clock=state.clock[None], weights=state.weights[None],
-            gds_L=state.gds_L[None], capacity=state.capacity[None])
+            gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None])
         stats = jax.tree.map(lambda x: x[None], stats)
         return state, clients, stats, hits
 
@@ -245,11 +265,11 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     fn = shard_map(
         step, mesh=mesh,
         in_specs=(spec_state, spec_clients, spec_stats,
-                  P(None, AXIS), P(None, AXIS)),
+                  P(None, AXIS), P(None, AXIS), P(None, AXIS)),
         out_specs=(spec_state, spec_clients, spec_stats, P(None, AXIS)),
         check_rep=False)
     state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
-                                     keys, is_write)
+                                     keys, is_write, obj_size)
     if squeeze:
         hits = hits[0]
     return DMCache(state, clients, stats), hits
@@ -257,7 +277,8 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
 def dm_set_capacity(dm: DMCache, new_global_capacity: int,
                     n_shards: int) -> DMCache:
-    """Elastic memory resize: one scalar write per shard, no migration.
+    """Elastic memory resize (budget in 64B blocks): one scalar write per
+    shard, no migration.
 
     Thin alias for `repro.elastic.resize.set_capacity` (the single resize
     entry point); use `repro.elastic.resize.resize_memory` for the online

@@ -23,6 +23,8 @@ import dataclasses
 import math
 from typing import NamedTuple, Optional
 
+from repro.core.types import hit_ratio
+
 
 class WindowMetrics(NamedTuple):
     """One observation window, distilled from OpStats deltas."""
@@ -35,6 +37,34 @@ class WindowMetrics(NamedTuple):
     lanes: int
     offered_mops: Optional[float] = None   # demand, for compute scaling
     tput_mops: float = 0.0                 # achievable at current lanes
+    # Byte-accurate occupancy (64B blocks). When capacity_blocks > 0 the
+    # memory decisions key off these instead of object counts — growing
+    # and shrinking *memory*, as the paper claims, not ±N objects.
+    blocks_cached: int = 0
+    capacity_blocks: int = 0
+
+    @classmethod
+    def from_stats(cls, delta, *, n_cached, capacity, lanes,
+                   blocks_cached=0, capacity_blocks=0,
+                   offered_mops=None, tput_mops=0.0) -> "WindowMetrics":
+        """Distill an OpStats window delta. The hit rate is THE canonical
+        `hit_ratio` (executed ops only — router drops excluded), so every
+        consumer of WindowMetrics agrees on the denominator."""
+        ops = max(float(delta.gets + delta.sets), 1.0)
+        return cls(hit_rate=hit_ratio(delta),
+                   evictions_per_op=float(delta.evictions) / ops,
+                   insert_drops_per_op=float(delta.insert_drops) / ops,
+                   n_cached=n_cached, capacity=capacity, lanes=lanes,
+                   offered_mops=offered_mops, tput_mops=tput_mops,
+                   blocks_cached=blocks_cached,
+                   capacity_blocks=capacity_blocks)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the budget in use — bytes when available."""
+        if self.capacity_blocks > 0:
+            return self.blocks_cached / self.capacity_blocks
+        return self.n_cached / max(self.capacity, 1)
 
 
 class Decision(NamedTuple):
@@ -56,6 +86,10 @@ class AutoscalerConfig:
     occupancy_low: float = 0.60       # shrink only if pool this empty OR
     #                                 # hit rate comfortably above band
     mem_step: float = 2.0             # multiplicative resize step
+    # min/max memory bounds share the unit of the window's reported
+    # capacity: 64B blocks when WindowMetrics carries capacity_blocks
+    # (the byte-accurate runtime), live objects otherwise — tune them in
+    # blocks for sized workloads.
     min_capacity: int = 1024
     max_capacity: int = 1 << 20
     # --- compute targets -----------------------------------------------
@@ -96,8 +130,10 @@ class Autoscaler:
     def _memory_surplus(self, m: WindowMetrics) -> bool:
         comfortable = m.hit_rate > (self.cfg.hit_rate_floor
                                     + self.cfg.hit_rate_slack)
+        # Occupancy is byte-accurate when the window reports blocks: an
+        # over-provisioned pool is one whose *bytes* sit idle.
         idle = (m.evictions_per_op <= self.cfg.evict_pressure
-                and m.n_cached < self.cfg.occupancy_low * m.capacity)
+                and m.occupancy < self.cfg.occupancy_low)
         return comfortable and idle
 
     def _util(self, m: WindowMetrics) -> Optional[float]:
@@ -128,17 +164,21 @@ class Autoscaler:
             self._streak[k] = self._streak[k] + 1 if on else 0
 
         c = self.cfg
+        # Memory targets are denominated in whatever unit the window
+        # reports: 64B blocks when byte occupancy is available (the
+        # elastic runtime's native unit), live objects otherwise.
+        cap = m.capacity_blocks if m.capacity_blocks > 0 else m.capacity
+        occ = m.blocks_cached if m.capacity_blocks > 0 else m.n_cached
         if self._streak["grow_memory"] >= c.patience:
-            target = min(int(m.capacity * c.mem_step), c.max_capacity)
-            if target > m.capacity:
+            target = min(int(cap * c.mem_step), c.max_capacity)
+            if target > cap:
                 return self._act("grow_memory", target,
                                  f"hit_rate={m.hit_rate:.3f} under churn")
         if self._streak["shrink_memory"] >= c.patience:
-            target = max(int(m.capacity / c.mem_step), c.min_capacity,
-                         m.n_cached)
-            if target < m.capacity:
+            target = max(int(cap / c.mem_step), c.min_capacity, occ)
+            if target < cap:
                 return self._act("shrink_memory", target,
-                                 f"occupancy={m.n_cached}/{m.capacity}")
+                                 f"occupancy={occ}/{cap}")
         if self._streak["grow_lanes"] >= c.patience:
             target = min(int(math.ceil(m.lanes * c.lane_step)), c.max_lanes)
             if target > m.lanes:

@@ -60,11 +60,12 @@ class ResizeReport(NamedTuple):
 
 def set_capacity(dm, new_global_capacity: int, n_shards: int):
     """The paper's elastic resize primitive: one scalar write per shard,
-    no data movement. Shrinks done through this alone leave the pool over
-    budget until organic evictions drain it — use `resize_memory` for the
-    online path."""
+    no data movement. The budget is denominated in 64B blocks (resizing
+    by GB is ``gb * (1 << 30) // 64`` blocks). Shrinks done through this
+    alone leave the pool over budget until organic evictions drain it —
+    use `resize_memory` for the online path."""
     cap = jnp.full((n_shards,), new_global_capacity // n_shards, jnp.int32)
-    return dm._replace(state=dm.state._replace(capacity=cap))
+    return dm._replace(state=dm.state._replace(capacity_blocks=cap))
 
 
 # ----------------------------------------------------------------------
@@ -73,19 +74,20 @@ def set_capacity(dm, new_global_capacity: int, n_shards: int):
 
 def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     """Evict up to `batch` lowest-priority live objects on one shard,
-    bounded by the shard's capacity deficit. Scalars arrive [1]-sliced."""
+    bounded by the shard's *byte* deficit: victims peel off in priority
+    order until the freed blocks cover it. Scalars arrive [1]-sliced."""
     names = local_cfg.experts
     E = local_cfg.n_experts
     adaptive = E > 1
     state = state._replace(
-        n_cached=state.n_cached[0], hist_ctr=state.hist_ctr[0],
+        n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
+        hist_ctr=state.hist_ctr[0],
         clock=state.clock[0], weights=state.weights[0],
-        gds_L=state.gds_L[0], capacity=state.capacity[0])
+        gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0])
     stats = jax.tree.map(lambda x: x[0], stats)
 
     n_slots = state.key.shape[0]
-    deficit = jnp.maximum(state.n_cached - state.capacity, 0)
-    k = jnp.minimum(deficit, batch)
+    deficit = jnp.maximum(state.bytes_cached - state.capacity_blocks, 0)
 
     live = _is_live(state.size)
     md = _md_view(state, jnp.arange(n_slots))
@@ -96,7 +98,12 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     pe = jnp.where(live, jnp.take_along_axis(
         prios, jnp.full((n_slots, 1), e), axis=1)[:, 0], jnp.inf)
     order = jnp.argsort(pe)                                  # low prio first
-    take = (jnp.arange(n_slots) < k) & live[order]
+    # Multi-victim byte take: claim the shortest priority-ordered prefix
+    # whose summed sizes reach the deficit, at most `batch` victims.
+    sz_sorted = jnp.where(live[order], state.size[order].astype(I32), 0)
+    freed_before = jnp.cumsum(sz_sorted) - sz_sorted         # exclusive
+    take = (live[order] & (freed_before < deficit)
+            & (jnp.arange(n_slots) < batch))
     victims = jnp.where(take, order, n_slots)
 
     # Victims enter the embedded history (§4.3.1) exactly as sampled
@@ -107,8 +114,7 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     n_hist = jnp.sum(write_hist).astype(U32)
     bmap = jnp.full((n_slots,), U32(1) << e.astype(U32))
 
-    freed = jnp.sum(jnp.where(take, state.size[jnp.minimum(victims,
-                                                           n_slots - 1)], 0))
+    freed = jnp.sum(jnp.where(take, sz_sorted, 0))           # blocks
     size2 = state.size.at[victims].set(
         jnp.where(write_hist, U32(SIZE_HISTORY), U32(SIZE_EMPTY)), mode="drop")
     ptr2 = state.ptr.at[victims].set(
@@ -119,6 +125,8 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     state = state._replace(
         size=size2, ptr=ptr2, insert_ts=ins2,
         n_cached=state.n_cached - n_evict,
+        bytes_cached=jnp.sum(
+            jnp.where(_is_live(size2), size2, U32(0))).astype(I32),
         hist_ctr=state.hist_ctr + n_hist)
     # Cost accounting: the drain is a server-driven sweep — one sampling
     # read per victim batch, one CAS per victim, history writes + FAA.
@@ -128,9 +136,10 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         evictions=n_evict)
 
     state = state._replace(
-        n_cached=state.n_cached[None], hist_ctr=state.hist_ctr[None],
+        n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
+        hist_ctr=state.hist_ctr[None],
         clock=state.clock[None], weights=state.weights[None],
-        gds_L=state.gds_L[None], capacity=state.capacity[None])
+        gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None])
     stats = jax.tree.map(lambda x: x[None], stats)
     return state, stats, n_evict[None], freed.astype(I32)[None]
 
@@ -177,8 +186,9 @@ def resize_memory(mesh: Mesh, local_cfg: CacheConfig, dm,
                   new_global_capacity: int, *, drain: bool = True,
                   batch_per_shard: int = 64, max_steps: int = 256,
                   ) -> Tuple["DMCache", ResizeReport]:
-    """Online memory resize: grow = scalar write (zero migration); shrink
-    = scalar write + bounded priority-ordered drain to the new capacity.
+    """Online memory resize (budget in 64B blocks): grow = scalar write
+    (zero migration); shrink = scalar write + bounded priority-ordered
+    drain until every shard's *byte* occupancy meets the new budget.
 
     Returns the resized cache and a report with measured state deltas.
     Raises RuntimeError if the drain cannot reach capacity in `max_steps`
@@ -193,12 +203,12 @@ def resize_memory(mesh: Mesh, local_cfg: CacheConfig, dm,
     if drain:
         fn = _drain_fn(mesh, local_cfg, batch_per_shard)
         cap_per_shard = new_global_capacity // n_shards
-        while (np.asarray(dm.state.n_cached) > cap_per_shard).any():
+        while (np.asarray(dm.state.bytes_cached) > cap_per_shard).any():
             if steps >= max_steps:
                 raise RuntimeError(
                     f"shrink drain did not reach capacity={new_global_capacity}"
-                    f" in {max_steps} steps "
-                    f"(n_cached={int(np.asarray(dm.state.n_cached).sum())})")
+                    f" blocks in {max_steps} steps (bytes_cached="
+                    f"{int(np.asarray(dm.state.bytes_cached).sum())})")
             state, stats, n_ev, n_freed = fn(dm.state, dm.stats)
             dm = dm._replace(state=state, stats=stats)
             drained += int(np.asarray(n_ev).sum())
@@ -215,7 +225,7 @@ def resize_memory(mesh: Mesh, local_cfg: CacheConfig, dm,
 def enforce_budget(mesh: Mesh, local_cfg: CacheConfig, dm, *,
                    batch_per_shard: int = 64, max_steps: int = 8,
                    ) -> Tuple["DMCache", int]:
-    """Maintenance sweep: drain any shard over its capacity budget.
+    """Maintenance sweep: drain any shard over its byte budget.
 
     The batched access path tolerates transient occupancy drift (duplicate
     victims, hit-only steps, samples landing on empty slots at low live
@@ -226,8 +236,8 @@ def enforce_budget(mesh: Mesh, local_cfg: CacheConfig, dm, *,
     drained = 0
     fn = _drain_fn(mesh, local_cfg, batch_per_shard)
     for _ in range(max_steps):
-        nc = np.asarray(dm.state.n_cached)
-        cap = np.asarray(dm.state.capacity)
+        nc = np.asarray(dm.state.bytes_cached)
+        cap = np.asarray(dm.state.capacity_blocks)
         if not (nc > cap).any():
             break
         state, stats, n_ev, _ = fn(dm.state, dm.stats)

@@ -9,8 +9,10 @@ A scenario is a request trace plus a timeline of reconfiguration events
 run through the live DM cache. The driver executes the trace step by
 step, applies events through the `elastic.resize` entry points at their
 step index, and records per-window timelines of measured counters:
-hit rate, model throughput, eviction/drop pressure, occupancy, and the
-migration bytes / drain steps each event actually cost. This is what the
+hit rate (the canonical `hit_ratio`), model throughput, eviction/drop
+pressure, byte occupancy (`blocks_cached` / `bytes_cached`), and the
+migration bytes / drain steps each event actually cost. Capacities are
+denominated in 64B blocks (DESIGN.md §10). This is what the
 elasticity benchmarks plot — measured reconfigurations, not two
 disconnected static runs.
 
@@ -39,7 +41,10 @@ Event = Tuple[str, object]          # ("set_capacity"|"set_lanes"|
 
 
 class ScenarioResult(NamedTuple):
-    windows: list       # per-window dicts (t0, t1, hit_rate, tput_mops, ...)
+    windows: list       # per-window dicts (t0, t1, hit_rate, tput_mops,
+                        # capacity/blocks_cached in 64B blocks — the unit
+                        # of CacheState.bytes_cached — and bytes_cached
+                        # in REAL bytes: == 64 * blocks_cached)
     events: list        # applied events: dict(t, event, arg, report)
     dm: object          # final DMCache (for state inspection in tests)
 
@@ -50,9 +55,36 @@ class ScenarioResult(NamedTuple):
 
 
 def _round_capacity(target: int, cfg: CacheConfig, n_shards: int) -> int:
-    target = min(int(target), cfg.n_slots // 2)   # table invariant
-    target = max(target, n_shards)
+    # No upper clamp: a block budget beyond what the table can hold in
+    # objects is legitimate for big-object pools, and the engine degrades
+    # gracefully if objects outnumber slots (bucket-full fallback
+    # evictions, counted drops). Clamping here in object units (the old
+    # n_slots // 2) turned grow events into forced drains or permanent
+    # no-ops; closed-loop growth is governed by AutoscalerConfig's
+    # max_capacity instead.
+    target = max(int(target), n_shards)
     return (target // n_shards) * n_shards
+
+
+def _as_sized_stream(arg, default_sizes=None):
+    """A workload is a flat key stream or a (keys, sizes) pair."""
+    if isinstance(arg, tuple):
+        if default_sizes is not None:
+            raise ValueError(
+                "pass sizes either inside the (keys, sizes) workload "
+                "tuple or as the sizes= kwarg, not both")
+        keys, sizes = arg
+        keys = np.asarray(keys, np.uint32)
+        sizes = np.asarray(sizes, np.uint32)
+    else:
+        keys = np.asarray(arg, np.uint32)
+        if default_sizes is None:
+            return keys, np.ones_like(keys, np.uint32)
+        sizes = np.asarray(default_sizes, np.uint32)
+    if sizes.shape != keys.shape:
+        raise ValueError(
+            f"sizes shape {sizes.shape} != keys shape {keys.shape}")
+    return keys, sizes
 
 
 def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
@@ -62,24 +94,28 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                  controller: Optional[Autoscaler] = None,
                  offered_mops: Optional[Callable[[int], float]] = None,
                  seed: int = 0, drain_batch: int = 64,
-                 drain_max_steps: int = 256) -> ScenarioResult:
+                 drain_max_steps: int = 256,
+                 sizes=None) -> ScenarioResult:
     """Run a [T, lanes] trace through the DM cache under an event stream.
 
     Args:
       keys: flat u32 request stream (wraps around); the initial workload.
       timeline: [(step, (event, arg))] applied when the step begins.
-      workloads: name -> flat stream, for ("switch_workload", name).
+      workloads: name -> flat stream OR (stream, sizes) pair, for
+        ("switch_workload", name).
       controller: optional Autoscaler whose window decisions become events.
       offered_mops: demand curve (step -> Mops) for compute decisions.
+      sizes: optional per-request object sizes (64B blocks) aligned with
+        `keys`; defaults to uniform 1-block objects.
     """
     mesh, dm, local = dm_make(cfg, n_shards, lanes_per_shard)
     step_fn = jax.jit(functools.partial(dm_access, mesh, local))
     model = DittoModel()
     workloads = workloads or {}
 
-    stream = np.asarray(keys, np.uint32)
+    stream, size_stream = _as_sized_stream(keys, sizes)
     lanes = lanes_per_shard
-    capacity = cfg.capacity
+    capacity = cfg.budget_blocks        # the byte budget dm_make enforces
     if horizon is None:
         horizon = len(stream) // (n_shards * lanes)
     pending = sorted(timeline, key=lambda e: e[0])
@@ -93,6 +129,7 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
 
     def apply_event(t: int, name: str, arg) -> None:
         nonlocal dm, lanes, capacity, win_mig, win_drain, stream, pos
+        nonlocal size_stream
         report = ResizeReport(0, 0, 0, 0)
         if name == "set_capacity":
             capacity = _round_capacity(int(arg), cfg, n_shards)
@@ -104,8 +141,8 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             dm, report = resize_lanes(mesh, local, dm, lanes,
                                       seed=seed + 1 + t)
         elif name == "switch_workload":
-            stream = (np.asarray(workloads[arg], np.uint32)
-                      if isinstance(arg, str) else np.asarray(arg, np.uint32))
+            stream, size_stream = _as_sized_stream(
+                workloads[arg] if isinstance(arg, str) else arg)
             pos = 0
         else:
             raise ValueError(f"unknown scenario event {name!r}")
@@ -123,10 +160,11 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         L = n_shards * lanes
         idx = (pos + np.arange(L)) % len(stream)
         pos += L
-        dm, _ = step_fn(dm, jnp.asarray(stream[idx]))
+        dm, _ = step_fn(dm, jnp.asarray(stream[idx]),
+                        obj_size=jnp.asarray(size_stream[idx]))
 
         if (t + 1) % window == 0 or t == horizon - 1:
-            # Maintenance sweep: hold the occupancy budget between events
+            # Maintenance sweep: hold the byte budget between events
             # (the batched sampler alone drifts at low live density).
             dm, enforced = enforce_budget(mesh, local, dm,
                                           batch_per_shard=drain_batch)
@@ -134,19 +172,18 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             d = stats_delta(total, last_stats)
             last_stats = total
             ops = float(d.gets + d.sets)
-            hr = float(d.hits) / max(ops, 1.0)
             n_cached = int(np.asarray(dm.state.n_cached).sum())
+            blocks = int(np.asarray(dm.state.bytes_cached).sum())
             tput = model.throughput(L, d, hit_rate=1.0) / 1e6 if ops else 0.0
-            m = WindowMetrics(
-                hit_rate=hr,
-                evictions_per_op=float(d.evictions) / max(ops, 1.0),
-                insert_drops_per_op=float(d.insert_drops) / max(ops, 1.0),
-                n_cached=n_cached, capacity=capacity, lanes=L,
+            m = WindowMetrics.from_stats(
+                d, n_cached=n_cached, capacity=capacity, lanes=L,
+                blocks_cached=blocks, capacity_blocks=capacity,
                 offered_mops=offered_mops(t) if offered_mops else None,
                 tput_mops=tput)
             windows.append(dict(
                 t0=win_t0, t1=t + 1, capacity=capacity, lanes=L,
-                hit_rate=hr, tput_mops=tput, n_cached=n_cached,
+                hit_rate=m.hit_rate, tput_mops=tput, n_cached=n_cached,
+                blocks_cached=blocks, bytes_cached=blocks * 64,
                 evictions=int(d.evictions), insert_drops=int(d.insert_drops),
                 migration_bytes=win_mig, drain_steps=win_drain,
                 enforced_evictions=enforced, events=list(win_events)))

@@ -52,8 +52,9 @@ def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
 def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
                        must_evict, quota, ts, *, window=20, k=5,
                        experts=("lru", "lfu"), block_b=None):
-    """Quota-extended fused eviction: chosen-expert ranking, up to `quota`
-    victims per op, each op evaluating time-dependent priorities at its
+    """Quota-extended fused eviction: chosen-expert ranking, victims
+    peeled until their summed sizes cover the op's `quota` blocks (at
+    most k victims), each op evaluating time-dependent priorities at its
     own per-request timestamp ``ts`` [B]. Table arrays are
     f32[C + window] wrap-padded (`concatenate([x, x[:window]])`);
     returned slots are mod C."""

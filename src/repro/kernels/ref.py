@@ -72,8 +72,11 @@ def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
 
     Mirrors `core/cache.py` step 5: priorities over the sampled window
     (evaluated at each op's own timestamp ``ts`` [B]), chosen-expert
-    stable ranking, up to `quota` victims per evicting op. Table arrays
-    are f32[C + window] wrap-padded; returned slots mod C.
+    stable ranking, and the byte-deficit take rule — an evicting op
+    claims the shortest ranked prefix of sampled victims whose summed
+    sizes (64B blocks) reach its ``quota``, at most ``k`` victims.
+    Uniform 1-block objects recover the old take-`quota`-victims rule.
+    Table arrays are f32[C + window] wrap-padded; returned slots mod C.
 
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.
@@ -95,7 +98,12 @@ def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
     order = jnp.argsort(pr_sel, axis=1)                           # stable
     ranked_idx = jnp.take_along_axis(idx, order, axis=1)
     ranked_live = jnp.take_along_axis(in_sample, order, axis=1)
-    take = ((jnp.arange(window)[None, :] < quota) & ranked_live
+    ranked_blocks = jnp.where(ranked_live,
+                              jnp.take_along_axis(s, order, axis=1), 0.0)
+    # Exclusive prefix sum of freed blocks: take a victim while the
+    # blocks freed *before* it still fall short of the quota.
+    freed_before = jnp.cumsum(ranked_blocks, axis=1) - ranked_blocks
+    take = ((freed_before < jnp.asarray(quota, jnp.float32)) & ranked_live
             & must_evict[:, None])
     victims = jnp.where(take, ranked_idx % C, -1)[:, :k]
     return victims.astype(jnp.int32), cand.astype(jnp.int32)

@@ -95,7 +95,7 @@ def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
     # priorities (hyperbolic) at its own round's clock, so a batched
     # group decides exactly as its rounds would sequentially.
     clock = ts_ref[...][:, None]                            # [block_b, 1]
-    quota = quota_ref[0]
+    quota = quota_ref[0].astype(jnp.float32)                # blocks to free
     offs = off_ref[...]                                     # [block_b]
     s, ins, last, freq = _gather_windows(
         (size_ref, ins_ref, last_ref, freq_ref), offs, window, block_b,
@@ -123,19 +123,26 @@ def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
     for ei in range(1, len(experts)):
         pr_sel = jnp.where(choice[:, None] == ei, prios[ei], pr_sel)
 
-    # Chosen-expert ranking with per-op victim quota: peel off the lowest
-    # priority sample `quota` times (== the first quota entries of a
-    # stable sort, which is what the reference path computes).
+    # Chosen-expert ranking with per-op BLOCK quota: peel off the lowest
+    # priority sample until the freed blocks (victim sizes) cover the
+    # op's byte deficit, at most k victims (== the shortest prefix of a
+    # stable sort whose sizes sum past the quota, which is what the
+    # reference path computes).  Uniform 1-block objects recover the old
+    # victim-count semantics exactly.
     must = evict_ref[...]
     cols = jax.lax.broadcasted_iota(jnp.int32, (block_b, window), 1)
+    s_blocks = jnp.where(in_sample, s, 0.0)
     victims = []
+    freed = jnp.zeros((block_b,), jnp.float32)
     for j in range(k):
         arg = jnp.argmin(pr_sel, axis=1)
         val = jnp.take_along_axis(pr_sel, arg[:, None], axis=1)[:, 0]
-        ok = (j < quota) & (val < jnp.inf) & must
+        ok = (freed < quota) & (val < jnp.inf) & must
         vj = jnp.where(ok, jnp.take_along_axis(
             idx, arg[:, None], axis=1)[:, 0], -1)
         victims.append(vj)
+        freed = freed + jnp.where(ok, jnp.take_along_axis(
+            s_blocks, arg[:, None], axis=1)[:, 0], 0.0)
         pr_sel = jnp.where(cols == arg[:, None], jnp.inf, pr_sel)
     victim_ref[...] = jnp.stack(victims, axis=1).astype(jnp.int32)
 
@@ -149,8 +156,9 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
     """Quota-extended fused eviction decision (the production hot path).
 
     Like ``sampled_eviction`` but returns the chosen expert's full
-    priority *ranking* over the sampled window: up to ``quota`` victims
-    per op, lowest priority first (the catch-up eviction of
+    priority *ranking* over the sampled window: victims peel off lowest
+    priority first until their summed sizes cover the op's ``quota``
+    blocks, at most ``k`` per op (the byte-deficit catch-up eviction of
     ``core/cache.py`` step 5). Table arrays are f32[C + window] with the
     tail wrapping around to the head (``jnp.concatenate([x, x[:window]])``)
     so modular windows read contiguously; returned slot indices are taken
@@ -160,7 +168,8 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
       offsets: i32[B] window starts in [0, C).
       e_choice: i32[B] chosen expert per op.
       must_evict: bool[B] — ops that must claim victims this step.
-      quota: i32[] per-op victim budget in [0, k] (traced scalar).
+      quota: i32[] per-op block budget to free (traced scalar; with
+        uniform 1-block objects this is the old victim count).
       ts: f32[B] per-op logical clock (the op's round timestamp).
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.

@@ -194,3 +194,39 @@ def object_sizes(keys: np.ndarray, max_blocks: int = 8, seed: int = 3) -> np.nda
     """Deterministic pseudo-random size (in 64B blocks) per key."""
     x = keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(seed)
     return ((x >> np.uint64(33)) % np.uint64(max_blocks) + np.uint64(1)).astype(np.uint32)
+
+
+def sized_zipfian(n_requests: int, n_keys: int, theta: float = 0.99,
+                  seed: int = 0, size_dist: str = "zipf",
+                  max_blocks: int = 32, alpha: float = 0.8):
+    """Zipfian key stream with per-key value sizes (paper §7 analogues).
+
+    The Twitter / IBM object-store traces share a shape the uniform-size
+    YCSB streams cannot express: the request-dominating hot keys are
+    *small* while the byte-dominating cold tail is *large* — exactly the
+    regime where the size-aware priority functions (size/GDS/GDSF, Table
+    3) beat size-oblivious LRU on **byte** hit rate under a byte budget.
+
+    Args:
+      size_dist: ``"zipf"`` — sizes grow with popularity rank:
+        ``blocks = 1 + round((max_blocks-1) * ((rank+1)/n_keys)**alpha)``
+        (rank 0 = hottest key), deterministic per key; ``"uniform"`` —
+        hash-uniform in [1, max_blocks], independent of popularity (the
+        control arm: any byte-hit-rate gap vanishes here).
+    Returns:
+      (keys u32[N], sizes u32[N]); sizes are a pure function of the key.
+    """
+    rng = np.random.default_rng(seed)
+    p = _zipf_probs(n_keys, theta)
+    ranks = rng.choice(n_keys, size=n_requests, p=p)
+    perm = rng.permutation(n_keys)           # scrambled key ids
+    keys = (perm[ranks] + 1).astype(np.uint32)
+    if size_dist == "uniform":
+        sizes = object_sizes(keys, max_blocks=max_blocks, seed=seed + 1)
+    elif size_dist == "zipf":
+        frac = (ranks + 1.0) / float(n_keys)
+        sizes = (1 + np.round((max_blocks - 1) * frac ** alpha)).astype(
+            np.uint32)
+    else:
+        raise ValueError(f"unknown size_dist {size_dist!r}")
+    return keys, sizes

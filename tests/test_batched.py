@@ -223,7 +223,7 @@ def test_evicting_regime_decisions_up_to_commutation(seed, batch):
     assert int(bat.stats.evictions) > 0
     assert int(seq.stats.evictions) > 0
     np.testing.assert_array_equal(seq.ops, bat.ops)
-    cap = int(np.asarray(bat.state.capacity))
+    cap = int(np.asarray(bat.state.capacity_blocks))
     # catch-up quota keeps drift bounded by one group's inserts
     assert int(bat.state.n_cached) <= cap + batch * keys.shape[1]
     h_seq, h_bat = int(seq.hits.sum()), int(bat.hits.sum())

@@ -106,7 +106,7 @@ def test_elastic_capacity_shrink_converges():
     keys = zipfian(C * 300, 5000, seed=2).reshape(300, C)
     for t in range(150):
         st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]))
-    st = st._replace(capacity=jnp.asarray(128, jnp.int32))
+    st = st._replace(capacity_blocks=jnp.asarray(128, jnp.int32))
     for t in range(150, 300):
         st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]))
     assert int(st.n_cached) <= 128 + C

@@ -43,7 +43,7 @@ def test_grow_is_zero_migration_scalar_write():
     for name in ("key", "size", "ptr", "values", "freq", "last_ts"):
         assert np.array_equal(getattr(before, name),
                               np.asarray(getattr(dm2.state, name))), name
-    assert int(dm2.state.capacity[0]) == 512
+    assert int(dm2.state.capacity_blocks[0]) == 512
 
 
 def test_shrink_drains_and_every_step_stays_bounded():
@@ -85,7 +85,7 @@ def test_shrink_evicts_lowest_priority_first():
 def test_dm_set_capacity_delegates_to_elastic():
     cfg, mesh, dm, local, step = small_cache()
     dm2 = dm_set_capacity(dm, 128, 1)
-    assert int(dm2.state.capacity[0]) == 128
+    assert int(dm2.state.capacity_blocks[0]) == 128
     assert np.array_equal(np.asarray(dm.state.key),
                           np.asarray(dm2.state.key))
 

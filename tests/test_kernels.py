@@ -90,10 +90,11 @@ def test_ranked_eviction_matches_ref(rng, C, W, B, experts, quota):
 
 
 @pytest.mark.parametrize("seed", SEEDS[:6])
-@pytest.mark.parametrize("quota", [0, 1, 3, 5])
+@pytest.mark.parametrize("quota", [0, 1, 3, 5, 17])
 def test_ranked_eviction_properties(seed, quota):
-    """Victims are live, distinct, priority-sorted, and exactly
-    min(quota, live-in-sample) many for evicting ops."""
+    """Victims are exactly the shortest chosen-expert-ranked prefix of
+    the sample whose summed sizes (64B blocks) cover the block quota —
+    at most K victims — for evicting ops, and none for the rest."""
     rng = np.random.default_rng(seed)
     C, W, K, B = 512, 20, 5, 16
     experts = ("lru", "lfu")
@@ -109,18 +110,47 @@ def test_ranked_eviction_properties(seed, quota):
                                   window=W, k=K, experts=experts)
     v = np.asarray(v)
     assert v.shape == (B, K)
-    pr_tab = np.stack([last, freq], axis=0)
+    pr_tab = {"lru": last, "lfu": freq}
     for b in range(B):
         idx = np.arange(offs[b], offs[b] + W)
         live = (size[idx] > 0) & (size[idx] < 255)
-        n_samp = min(int(live.sum()), K)
-        taken = v[b][v[b] >= 0]
-        expect = min(quota, n_samp) if must[b] else 0
-        assert len(taken) == expect, (b, taken, expect)
-        assert len(set(taken.tolist())) == len(taken)
-        prios = pr_tab[choice[b]][taken]
-        assert (np.diff(prios) >= 0).all()                # ranked ascending
-        assert ((size[taken] > 0) & (size[taken] < 255)).all()
+        in_sample = live & (np.cumsum(live) <= K)
+        pr = pr_tab[experts[choice[b]]][idx].astype(np.float64).copy()
+        pr[~in_sample] = np.inf
+        expect, freed = [], 0.0
+        if must[b]:
+            for j in np.argsort(pr, kind="stable"):
+                if not in_sample[j] or freed >= quota or len(expect) >= K:
+                    break
+                expect.append(int(idx[j]) % C)
+                freed += float(size[idx][j])
+        taken = [int(x) for x in v[b][v[b] >= 0]]
+        assert taken == expect, (b, taken, expect)
+
+
+def test_ranked_eviction_unit_sizes_recover_count_quota():
+    """With uniform 1-block objects the block quota degenerates to the
+    old take-`quota`-victims rule exactly."""
+    rng = np.random.default_rng(0)
+    C, W, K, B = 512, 20, 5, 16
+    size, ins, last, freq = make_table(rng, C, W, live_frac=0.4)
+    size[size > 0] = np.where(size[size > 0] < 255, 1, size[size > 0])
+    for arr in (size, ins, last, freq):
+        arr[C:] = arr[:W]
+    offs = rng.integers(0, C, B).astype(np.int32)
+    choice = rng.integers(0, 2, B).astype(np.int32)
+    must = np.ones(B, bool)
+    for quota in (1, 3, 5):
+        v, _ = ops.ranked_eviction_op(
+            size, ins, last, freq, offs, choice, must, quota,
+            np.full(B, 1000.0, np.float32), window=W, k=K,
+            experts=("lru", "lfu"))
+        v = np.asarray(v)
+        for b in range(B):
+            idx = np.arange(offs[b], offs[b] + W)
+            live = (size[idx] > 0) & (size[idx] < 255)
+            n_samp = min(int(live.sum()), K)
+            assert (v[b] >= 0).sum() == min(quota, n_samp)
 
 
 def test_ranked_eviction_zero_quota_is_noop(rng):

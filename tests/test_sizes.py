@@ -1,0 +1,323 @@
+"""Byte-accurate memory pool: the `bytes_cached <= capacity_blocks`
+invariant under access storms and elastic shrinks, multi-victim
+byte-quota eviction equivalence across backends, sized workloads, and
+the canonical hit-ratio helpers."""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, make_cache, run_trace
+from repro.core.types import (SIZE_HISTORY, byte_hit_ratio, hit_ratio,
+                              init_stats, stats_add)
+from repro.dm import dm_access, dm_make
+from repro.elastic import enforce_budget, resize_memory, set_capacity
+from repro.workloads import interleave, sized_zipfian, zipfian
+from repro.workloads.gen import object_sizes
+
+pytestmark = pytest.mark.fast
+
+U32 = jnp.uint32
+
+
+def _live_blocks(state) -> int:
+    size = np.asarray(state.size)
+    live = (size != 0) & (size != SIZE_HISTORY)
+    return int(size[live].sum())
+
+
+def _run(cfg, keys2d, sizes2d, n_clients, seed=3):
+    st, cl, _ = make_cache(cfg, n_clients, seed)
+    fn = jax.jit(lambda s, c, k, z: run_trace(cfg, s, c, k, obj_size=z))
+    tr = fn(st, cl, jnp.asarray(keys2d), jnp.asarray(sizes2d))
+    return jax.tree.map(np.asarray, tr)
+
+
+# ----------------------------------------------------------------------
+# Core byte accounting
+# ----------------------------------------------------------------------
+
+def test_bytes_cached_is_exact_and_budget_holds_after_storm():
+    """bytes_cached equals the live block sum at all times, and the byte
+    budget holds up to one batch of in-flight inserts."""
+    C, T, MAXB = 16, 300, 8
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=512,
+                      capacity_blocks=1024, sample_window=64,
+                      experts=("lru", "lfu"))
+    keys = zipfian(C * T, 5_000, seed=0)
+    sizes = object_sizes(keys, max_blocks=MAXB)
+    tr = _run(cfg, interleave(keys, C), interleave(sizes, C), C)
+    assert _live_blocks(tr.state) == int(tr.state.bytes_cached)
+    assert int(tr.state.bytes_cached) <= 1024 + C * MAXB
+    assert int(tr.stats.evictions) > 0
+
+
+def test_unit_sizes_degenerate_to_object_accounting():
+    """With 1-block objects bytes_cached == n_cached and the default
+    byte budget equals the object capacity — the refactor is invisible
+    to every uniform-size workload."""
+    C, T = 16, 300
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=512,
+                      experts=("lru", "lfu"))
+    assert cfg.budget_blocks == cfg.capacity
+    keys = interleave(zipfian(C * T, 5_000, seed=1), C)
+    tr = _run(cfg, keys, np.ones_like(keys), C)
+    assert int(tr.state.bytes_cached) == int(tr.state.n_cached)
+    assert int(tr.state.capacity_blocks) == cfg.capacity
+    assert int(tr.state.bytes_cached) <= cfg.capacity + C
+
+
+@pytest.mark.parametrize("experts", [("lru", "lfu"), ("lru", "lfu", "size")])
+def test_sized_trace_backend_bit_equality(experts):
+    """Multi-victim byte-quota eviction decides identically on the
+    reference and fused backends on seeded sized traces — the whole
+    table, every counter, bit for bit."""
+    C, T, MAXB = 16, 120, 8
+    keys = zipfian(C * T, 3_000, seed=1)
+    sizes = object_sizes(keys, max_blocks=MAXB)
+    k2, s2 = interleave(keys, C), interleave(sizes, C)
+    runs = {}
+    for backend in ("reference", "fused"):
+        cfg = CacheConfig(n_buckets=64, assoc=8, capacity=128,
+                          capacity_blocks=512, sample_window=48,
+                          experts=experts, backend=backend)
+        runs[backend] = _run(cfg, k2, s2, C)
+    a, b = runs["reference"], runs["fused"]
+    np.testing.assert_array_equal(a.hits, b.hits)
+    for f in a.state._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, f)), np.asarray(getattr(b.state, f)),
+            f"CacheState.{f}")
+    for f in a.stats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.stats, f)), np.asarray(getattr(b.stats, f)),
+            f"OpStats.{f}")
+    # the byte-deficit catch-up (multi-victim) path really ran
+    assert int(a.stats.evictions) > 0
+    assert _live_blocks(a.state) == int(a.state.bytes_cached) <= 512 + C * MAXB
+
+
+def test_set_resize_growth_triggers_byte_eviction():
+    """Hit-side SETs that grow an object charge the byte deficit and
+    evict like inserts do — hit-only write traffic cannot inflate the
+    pool past the budget unchecked."""
+    from repro.core import access
+    cfg = CacheConfig(n_buckets=64, assoc=8, capacity=128,
+                      capacity_blocks=256, sample_window=64,
+                      experts=("lru", "lfu"))
+    C = 8
+    st, cl, sa = make_cache(cfg, C)
+    wr = jnp.ones((C,), bool)
+    keys = np.arange(1, 65, dtype=np.uint32).reshape(8, C)
+    for t in range(8):          # ~64 objects x 1 block: well under budget
+        st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]),
+                               is_write=wr)
+    # (same-step bucket collisions may drop a few first-time inserts)
+    assert int(sa.evictions) == 0 and 48 <= int(st.bytes_cached) <= 64
+    big = jnp.full((C,), 8, U32)
+    for wave in range(16):      # re-SET every object at 8 blocks (hits)
+        t = wave % 8
+        st, cl, sa, _ = access(cfg, st, cl, sa, jnp.asarray(keys[t]),
+                               is_write=wr, obj_size=big)
+    assert int(sa.evictions) > 0
+    assert _live_blocks(st) == int(st.bytes_cached)
+    # bounded by one batch of in-flight SET growth (C ops x 8 blocks)
+    assert int(st.bytes_cached) <= 256 + C * 8
+
+
+# ----------------------------------------------------------------------
+# Elastic runtime on bytes
+# ----------------------------------------------------------------------
+
+def _fill_dm(capacity_blocks=2048, lanes=8, steps=150, max_blocks=8,
+             seed=0):
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=512,
+                      capacity_blocks=capacity_blocks, sample_window=64,
+                      experts=("lru", "lfu"))
+    mesh, dm, local = dm_make(cfg, n_shards=1, lanes_per_shard=lanes)
+    step = jax.jit(functools.partial(dm_access, mesh, local))
+    keys = zipfian(lanes * steps, 4_000, seed=seed)
+    sizes = object_sizes(keys, max_blocks=max_blocks)
+    k2, s2 = keys.reshape(steps, lanes), sizes.reshape(steps, lanes)
+    for t in range(steps):
+        dm, _ = step(dm, jnp.asarray(k2[t]), obj_size=jnp.asarray(s2[t]))
+    return cfg, mesh, dm, local, step, (k2, s2)
+
+
+def test_elastic_shrink_drains_to_byte_budget():
+    cfg, mesh, dm, local, step, (k2, s2) = _fill_dm()
+    blocks_before = int(dm.state.bytes_cached[0])
+    assert blocks_before > 1024
+    dm, rep = resize_memory(mesh, local, dm, 1024, batch_per_shard=32)
+    assert rep.migration_bytes == 0
+    assert rep.drain_steps >= 1
+    # drained_bytes is exactly the measured byte delta, and each of the
+    # drained objects contributed its real size in [1, max_blocks] blocks
+    assert rep.drained_bytes == (blocks_before
+                                 - int(dm.state.bytes_cached[0])) * 64
+    assert (rep.drained_objects * 64 <= rep.drained_bytes
+            <= rep.drained_objects * 8 * 64)
+    assert int(dm.state.bytes_cached[0]) <= 1024
+    assert _live_blocks(dm.state) == int(dm.state.bytes_cached[0])
+    # keep serving sized traffic: the byte budget stays bounded (one
+    # batch of in-flight inserts of drift, reclaimed by the catch-up)
+    for t in range(60):
+        dm, _ = step(dm, jnp.asarray(k2[t]), obj_size=jnp.asarray(s2[t]))
+        assert int(dm.state.bytes_cached[0]) <= 1024 + 2 * 8 * 8
+
+
+def test_enforce_budget_reclaims_byte_overrun():
+    cfg, mesh, dm, local, step, _ = _fill_dm()
+    # capacity clamp alone leaves the pool over the new byte budget
+    dm = set_capacity(dm, 512, 1)
+    assert int(dm.state.bytes_cached[0]) > 512
+    dm, drained = enforce_budget(mesh, local, dm, batch_per_shard=64)
+    assert drained > 0
+    assert int(dm.state.bytes_cached[0]) <= 512
+    assert _live_blocks(dm.state) == int(dm.state.bytes_cached[0])
+
+
+def test_byte_drain_evicts_lowest_priority_first():
+    """Single LRU expert, one 4-block insert per step: the byte drain
+    must evict exactly the oldest objects needed to cover the deficit."""
+    cfg = CacheConfig(n_buckets=64, assoc=8, capacity=64,
+                      capacity_blocks=256, experts=("lru",))
+    mesh, dm, local = dm_make(cfg, n_shards=1, lanes_per_shard=1)
+    step = jax.jit(functools.partial(dm_access, mesh, local))
+    for k in range(1, 65):
+        dm, _ = step(dm, jnp.asarray([k], jnp.uint32),
+                     obj_size=jnp.asarray([4], jnp.uint32))
+    assert int(dm.state.bytes_cached[0]) == 256
+    dm, rep = resize_memory(mesh, local, dm, 128, batch_per_shard=8)
+    size = np.asarray(dm.state.size)
+    live = (size != 0) & (size != 0xFF)
+    survivors = set(np.asarray(dm.state.key)[live].tolist())
+    # 128 blocks / 4 blocks each = the newest 32 keys survive
+    assert survivors == set(range(33, 65)), sorted(survivors)
+    assert int(dm.state.bytes_cached[0]) == 128
+    assert rep.drained_bytes == 32 * 4 * 64
+
+
+# ----------------------------------------------------------------------
+# Canonical ratio helpers
+# ----------------------------------------------------------------------
+
+def test_hit_ratio_divides_by_executed_ops():
+    s = stats_add(init_stats(), hits=30, gets=40, sets=10, route_drops=50)
+    # 50 issued lanes were dropped by the router: they never executed and
+    # must not deflate the ratio (DESIGN.md §2).
+    assert hit_ratio(s) == pytest.approx(30 / 50)
+
+
+def test_byte_hit_ratio():
+    s = stats_add(init_stats(), hit_bytes=640, miss_bytes=1280)
+    assert byte_hit_ratio(s) == pytest.approx(640 / 1920)
+    assert byte_hit_ratio(init_stats()) == 0.0
+
+
+def test_benchmark_hit_rate_matches_canonical():
+    from benchmarks.common import hit_rate
+    C, T = 8, 100
+    cfg = CacheConfig(n_buckets=256, assoc=8, capacity=512,
+                      experts=("lru", "lfu"))
+    keys = interleave(zipfian(C * T, 1_000, seed=2), C)
+    tr = _run(cfg, keys, np.ones_like(keys), C)
+    assert hit_rate(tr) == pytest.approx(
+        float(tr.hits.sum()) / float(tr.ops.sum()))
+    assert hit_rate(tr) == pytest.approx(hit_ratio(tr.stats))
+
+
+# ----------------------------------------------------------------------
+# Sized workload generator
+# ----------------------------------------------------------------------
+
+def test_sized_zipfian_sizes_are_per_key_deterministic():
+    keys, sizes = sized_zipfian(5_000, 1_000, seed=4, size_dist="zipf",
+                                max_blocks=16)
+    by_key = {}
+    for k, z in zip(keys.tolist(), sizes.tolist()):
+        assert by_key.setdefault(k, z) == z
+    assert sizes.min() >= 1 and sizes.max() <= 16
+    # popularity-correlated: the most-requested keys are smaller than
+    # the stream average (hot = small, tail = large)
+    vals, counts = np.unique(keys, return_counts=True)
+    hot = vals[np.argsort(counts)[-20:]]
+    hot_sz = np.array([by_key[int(k)] for k in hot]).mean()
+    assert hot_sz < sizes.mean()
+
+
+def test_sized_zipfian_uniform_mode_uncorrelated():
+    keys, sizes = sized_zipfian(5_000, 1_000, seed=4, size_dist="uniform",
+                                max_blocks=16)
+    vals, counts = np.unique(keys, return_counts=True)
+    hot = vals[np.argsort(counts)[-50:]]
+    kmap = dict(zip(keys.tolist(), sizes.tolist()))
+    hot_sz = np.array([kmap[int(k)] for k in hot]).mean()
+    assert abs(hot_sz - sizes.mean()) < 3.0
+
+
+# ----------------------------------------------------------------------
+# bench_compare regression gate
+# ----------------------------------------------------------------------
+
+def _bench_compare():
+    import importlib.util
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "scripts", "bench_compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _rec(device, **rows):
+    return {"sha": "x", "time": "t", "device": device,
+            "rows": [{"name": n, "us_per_call": v} for n, v in rows.items()]}
+
+
+def test_bench_compare_first_run_and_missing_file(tmp_path):
+    bc = _bench_compare()
+    regs, _ = bc.compare([_rec("cpu", a=1.0)], 0.3)
+    assert regs == []
+    assert bc.main(["--file", str(tmp_path / "nope.json")]) == 0
+
+
+def test_bench_compare_detects_regression_and_tolerates_row_churn():
+    bc = _bench_compare()
+    hist = [_rec("cpu", a=10.0, gone=5.0),
+            _rec("cpu", a=10.0, gone=5.0),
+            _rec("cpu", a=14.0, fresh=2.0)]     # a: +40%, gone/fresh churn
+    regs, lines = bc.compare(hist, 0.3)
+    assert [r[0] for r in regs] == ["a"]
+    assert any("gone" in ln and "removed" in ln for ln in lines)
+    assert any(ln.startswith("fresh") and "new" in ln for ln in lines)
+    regs, _ = bc.compare(hist, 0.5)             # within a 50% threshold
+    assert regs == []
+
+
+def test_bench_compare_median_baseline_absorbs_one_fast_record():
+    bc = _bench_compare()
+    hist = [_rec("cpu", a=10.0), _rec("cpu", a=6.0), _rec("cpu", a=10.0),
+            _rec("cpu", a=12.0)]                # median(10,6,10)=10 -> 1.2x
+    regs, _ = bc.compare(hist, 0.3)
+    assert regs == []
+
+
+def test_bench_compare_ignores_other_devices():
+    bc = _bench_compare()
+    hist = [_rec("tpu", a=1.0), _rec("cpu", a=10.0)]
+    regs, lines = bc.compare(hist, 0.3)
+    assert regs == [] and "no previous record" in lines[0]
+
+
+def test_bench_compare_cli_gate(tmp_path):
+    import json
+    bc = _bench_compare()
+    f = tmp_path / "BENCH_t.json"
+    f.write_text(json.dumps([_rec("cpu", a=10.0), _rec("cpu", a=20.0)]))
+    assert bc.main(["--file", str(f)]) == 1
+    assert bc.main(["--file", str(f), "--threshold", "1.5"]) == 0
