@@ -33,7 +33,7 @@ def default_n_buckets(capacity: int) -> int:
 
 
 def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
-              n_clients=8, seed=0, is_write=None, sizes=None,
+              n_clients=8, seed=0, is_write=None, sizes=None, tenants=None,
               backend="reference", batch=1, plan_scope="lane", plan=None,
               **cfg_kw):
     """Run a flat trace through the JAX Ditto cache; returns (TraceResult,
@@ -42,35 +42,46 @@ def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
     ``batch=N`` (N > 1) runs the batched execution engine: the trace is
     packed into bucket-disjoint N-round groups (``workloads.plan``) and
     each ``lax.scan`` step retires a whole group; pass a precomputed
-    ``plan`` to reuse one packing across backends/repeats."""
+    ``plan`` to reuse one packing across backends/repeats.  ``tenants``
+    (flat, aligned with ``keys_flat``) routes each request to its tenant
+    when the config is multi-tenant (``n_tenants`` in ``cfg_kw``)."""
     cfg = CacheConfig(n_buckets=default_n_buckets(capacity), assoc=8,
                       capacity=capacity, experts=tuple(experts),
                       backend=backend, **cfg_kw)
     k2 = interleave(keys_flat, n_clients)
     w2 = interleave(is_write, n_clients) if is_write is not None else None
     s2 = interleave(sizes, n_clients) if sizes is not None else None
+    n2 = interleave(tenants, n_clients) if tenants is not None else None
     st, cl, _ = make_cache(cfg, n_clients, seed)
     if batch > 1:
         if plan is None:
             plan = plan_groups(k2, cfg.n_buckets, batch, scope=plan_scope,
-                               is_write=w2, sizes=s2)
+                               is_write=w2, sizes=s2, tenants=n2)
+        elif n2 is not None and plan.tenants is None:
+            raise ValueError(
+                "tenants= given but the precomputed plan carries no "
+                "tenant ids; rebuild it with plan_groups(..., tenants=...)")
         key = (cfg, n_clients, "grouped")
         if key not in _JIT_CACHE:
             _JIT_CACHE[key] = jax.jit(
-                lambda s, c, k, w, z: run_trace_grouped(cfg, s, c, k, w, z))
+                lambda s, c, k, w, z, t: run_trace_grouped(
+                    cfg, s, c, k, w, z, t))
         fn = _JIT_CACHE[key]
+        pn = (jnp.zeros(plan.keys.shape, jnp.uint32)
+              if plan.tenants is None else jnp.asarray(plan.tenants))
         args = (jnp.asarray(plan.keys), jnp.asarray(plan.is_write),
-                jnp.asarray(plan.sizes))
+                jnp.asarray(plan.sizes), pn)
     else:
         key = (cfg, n_clients)
         if key not in _JIT_CACHE:
             _JIT_CACHE[key] = jax.jit(
-                lambda s, c, k, w, z: run_trace(cfg, s, c, k, w, z))
+                lambda s, c, k, w, z, t: run_trace(cfg, s, c, k, w, z, t))
         fn = _JIT_CACHE[key]
         T, C = k2.shape
         w2 = jnp.zeros((T, C), bool) if w2 is None else jnp.asarray(w2)
         s2 = jnp.ones((T, C), jnp.uint32) if s2 is None else jnp.asarray(s2)
-        args = (jnp.asarray(k2), w2, s2)
+        n2 = jnp.zeros((T, C), jnp.uint32) if n2 is None else jnp.asarray(n2)
+        args = (jnp.asarray(k2), w2, s2, n2)
     t0 = time.time()
     tr = fn(st, cl, *args)
     jax.block_until_ready(tr.hits)

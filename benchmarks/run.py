@@ -18,13 +18,14 @@ def main() -> None:
 
     from benchmarks import (ablation, adaptivity, algorithms, efficiency,
                             elasticity, fc_sweep, resources, roofline_table,
-                            sizes, throughput)
+                            sizes, tenants, throughput)
     modules = [
         ("elasticity", elasticity),       # Figs. 1, 13
         ("efficiency", efficiency),       # Figs. 2, 14, 15
         ("throughput", throughput),       # hot path: reference vs fused
         ("adaptivity", adaptivity),       # Figs. 16-19
         ("sizes", sizes),                 # byte hit rate: sized traces
+        ("tenants", tenants),             # multi-tenant isolation (§11)
         ("resources", resources),         # Figs. 20-22
         ("algorithms", algorithms),       # Fig. 23, Table 3
         ("ablation", ablation),           # Fig. 24
@@ -32,6 +33,15 @@ def main() -> None:
         ("roofline", roofline_table),     # §Dry-run / §Roofline
     ]
     only = set(filter(None, args.only.split(",")))
+    valid = {name for name, _ in modules}
+    unknown = only - valid
+    if unknown:
+        # A typo'd --only used to silently run nothing and exit green —
+        # fail loudly instead, listing the registry.
+        print(f"run.py: unknown --only module(s): {sorted(unknown)}",
+              file=sys.stderr)
+        print(f"run.py: valid modules: {sorted(valid)}", file=sys.stderr)
+        sys.exit(2)
     failures = 0
     for name, mod in modules:
         if only and name not in only:

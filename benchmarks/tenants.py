@@ -1,0 +1,150 @@
+"""Multi-tenant partitioning: isolation, fairness and budget enforcement
+(DESIGN.md §11; DINOMO-style shared-capacity arbitration).
+
+Three tenants share one byte-budgeted pool: a steady zipfian service, a
+scan-heavy analytics job, and a flash-crowd tenant that idles and then
+stampedes over a hot set larger than its fair share.  The same trace
+runs twice — partitioned (``n_tenants=3``, equal byte budgets) and
+shared (``n_tenants=1``, one undifferentiated pool) — and the benchmark
+reports:
+
+  * per-tenant object/byte hit rates under both modes;
+  * **isolation**: the steady tenant's hit rate *during the flash-crowd
+    burst*, partitioned vs shared — the headline number: partitioning
+    must protect the steady tenant from the stampede;
+  * **fairness**: Jain's index over per-tenant hit rates (1.0 = all
+    tenants served equally well);
+  * **budget enforcement**: the worst per-step overshoot of any
+    tenant's byte budget in the partitioned run — asserted to be zero
+    (budgets are a hard guarantee, not a drifting target).
+
+Appends to BENCH_tenants.json like every benchmark.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import default_n_buckets, emit
+from repro.core import CacheConfig, make_cache
+from repro.core.cache import access
+from repro.workloads import tenant_mix
+
+N_TENANTS = 3
+N_CLIENTS = 12
+CAP_BLOCKS = 768               # global pool: 48 KiB of 64B blocks
+FLASH_START = 0.5              # flash_crowd default start_frac
+# Big flash objects drop live density well under n_slots (memory note in
+# DESIGN.md §10): widen the contiguous sample window — still ONE read.
+SAMPLE_WINDOW = 128
+
+SPECS = (
+    # Steady service: broad working set (theta=0.9) — its hit rate
+    # depends on keeping mid-popularity keys resident, which is exactly
+    # what an un-partitioned stampede evicts.
+    dict(kind="zipf", n_keys=1_500, theta=0.9, lanes=4),
+    dict(kind="scan", hot_keys=1_500, scan_len=500, lanes=2),
+    # The stampede: 6 lanes of 8-block objects over 3k keys — demand
+    # ~10x the whole pool, churning everything un-partitioned.
+    dict(kind="flash", hot_keys=3_000, max_blocks=8, lanes=6),
+)
+
+
+def _run(cfg, keys, tenants, sizes, seed=0):
+    """Scan the [T, C] trace through `access`, recording per-step hit
+    masks and per-tenant occupancy (the budget-invariant witness)."""
+    st, cl, sa = make_cache(cfg, keys.shape[1], seed)
+
+    def step(carry, xs):
+        st, cl, sa = carry
+        k, tn, sz = xs
+        st, cl, sa, res = access(cfg, st, cl, sa, k, tenant=tn, obj_size=sz)
+        return (st, cl, sa), (res.hit, st.tenant_bytes)
+
+    fn = jax.jit(lambda st, cl, sa, k, tn, sz: jax.lax.scan(
+        step, (st, cl, sa), (k, tn, sz)))
+    t0 = time.time()
+    (st, cl, sa), (hits, occ) = fn(st, cl, sa, jnp.asarray(keys),
+                                   jnp.asarray(tenants), jnp.asarray(sizes))
+    jax.block_until_ready(hits)
+    return (np.asarray(hits), np.asarray(occ),
+            np.asarray(st.tenant_budget), time.time() - t0)
+
+
+def _tenant_rates(hits, keys, tenants, sizes, window=None):
+    """(hit_rate[T], byte_hit_rate[T]) per tenant over `window` steps."""
+    sl = slice(None) if window is None else window
+    h, k = hits[sl], keys[sl]
+    tn, sz = tenants[sl], sizes[sl]
+    ops = k != 0
+    hr, bhr = [], []
+    for t in range(N_TENANTS):
+        m = (tn == t) & ops
+        hr.append(float((h & m).sum()) / max(float(m.sum()), 1.0))
+        req_b = float(np.where(m, sz, 0).sum())
+        hit_b = float(np.where(h & m, sz, 0).sum())
+        bhr.append(hit_b / max(req_b, 1.0))
+    return hr, bhr
+
+
+def _jain(xs):
+    xs = np.asarray(xs, float)
+    return float(xs.sum() ** 2 / max(len(xs) * (xs * xs).sum(), 1e-12))
+
+
+def run(quick=False):
+    n = 12_000 if quick else 36_000
+    keys, tenants, sizes = tenant_mix(n, N_CLIENTS, SPECS, seed=11)
+    T = keys.shape[0]
+    flash_win = slice(int(T * FLASH_START), T)
+
+    base = dict(n_buckets=default_n_buckets(CAP_BLOCKS), assoc=8,
+                capacity=CAP_BLOCKS, experts=("lru", "lfu"),
+                sync_period=50, sample_window=SAMPLE_WINDOW)
+    results = {}
+    rows = []
+    for mode, n_ten in (("shared", 1), ("part", N_TENANTS)):
+        cfg = CacheConfig(n_tenants=n_ten, **base)
+        hits, occ, budget, wall = _run(cfg, keys, tenants, sizes)
+        hr, bhr = _tenant_rates(hits, keys, tenants, sizes)
+        fhr, _ = _tenant_rates(hits, keys, tenants, sizes, flash_win)
+        over = (occ - budget[None, :]).max(axis=0) if n_ten > 1 else None
+        results[mode] = dict(hr=hr, bhr=bhr, fhr=fhr, over=over)
+        for t, name in enumerate(("steady", "scan", "flash")):
+            rows.append(dict(
+                name=f"{mode}_{name}", n=n,
+                us_per_call=wall / max(n, 1) * 1e6,
+                hit_rate=round(hr[t], 4),
+                byte_hit_rate=round(bhr[t], 4),
+                flash_window_hit_rate=round(fhr[t], 4),
+                device=jax.default_backend()))
+
+    iso = results["part"]["fhr"][0] - results["shared"]["fhr"][0]
+    worst_over = int(results["part"]["over"].max())
+    rows.append(dict(
+        name="isolation_flash_crowd", us_per_call=0.0,
+        steady_hit_rate_partitioned=round(results["part"]["fhr"][0], 4),
+        steady_hit_rate_shared=round(results["shared"]["fhr"][0], 4),
+        isolation_gain=round(iso, 4),
+        fairness_jain_partitioned=round(_jain(results["part"]["hr"]), 4),
+        fairness_jain_shared=round(_jain(results["shared"]["hr"]), 4),
+        worst_budget_overshoot_blocks=worst_over))
+
+    assert worst_over <= 0, (
+        f"per-tenant byte budgets must never be exceeded; worst "
+        f"overshoot {worst_over} blocks "
+        f"(per-tenant max {results['part']['over'].tolist()})")
+    assert iso > 0, (
+        "partitioning must protect the steady tenant during the flash "
+        f"crowd; got partitioned={results['part']['fhr'][0]:.4f} vs "
+        f"shared={results['shared']['fhr'][0]:.4f}")
+    return emit(rows, "tenants")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -3,8 +3,14 @@
 
 Compares the newest record of a BENCH_*.json trajectory (the record the
 fast lane just appended) against the previous same-device record(s) and
-fails — exit 1 — when any matched row's ``us_per_call`` regressed by
-more than the threshold (default 30%).
+fails — exit 1 — when:
+
+  * any matched row's ``us_per_call`` regressed by more than the
+    threshold (default 30%), or
+  * any matched row's derived *quality* metric (``hit_rate`` /
+    ``byte_hit_rate`` / ``hit_ratio`` / ``byte_hit_ratio``) dropped by
+    more than ``--quality-drop`` (default 0.02 = 2pp absolute) below
+    the median of the recent same-device records.
 
 Noise handling: container wall-clock timings swing ~25% run to run even
 best-of-N, so the per-row baseline is the *median* over up to the last
@@ -15,7 +21,14 @@ turn ordinary jitter into a red build. The gate is tolerant by design:
   * no previous same-device record  -> green ("first run, no baseline")
   * new rows (no baseline)          -> noted, never fail
   * removed rows                    -> noted, never fail
-  * rows with us_per_call <= 0      -> skipped (derived/summary rows)
+  * rows with us_per_call <= 0      -> timing-skipped (summary rows);
+                                       their quality metrics still gate
+
+CI visibility: when ``$GITHUB_STEP_SUMMARY`` is set, a markdown
+bench-trend table (latest vs median-of-last-3 per row, ▲/▼ deltas) is
+appended so regressions are readable without downloading artifacts;
+``--trend-all`` writes that table for every BENCH_*.json at the repo
+root without gating (the nightly lane).
 
 Caveat: "same device" keys on the JAX backend string ("cpu"/"tpu"), not
 the host, so committed records from a faster machine can make a slower
@@ -26,12 +39,14 @@ after a couple of green runs).
 Usage:
   python scripts/bench_compare.py                       # BENCH_throughput
   python scripts/bench_compare.py --file BENCH_x.json --threshold 0.5
+  python scripts/bench_compare.py --trend-all           # summary only
   BENCH_TOLERANCE_PCT=50 python scripts/bench_compare.py
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import statistics
@@ -39,25 +54,48 @@ import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Derived quality metrics gated on absolute drops (a 2pp hit-rate loss
+# is a real regression even when every timing row is green).
+QUALITY_KEYS = ("hit_rate", "byte_hit_rate", "hit_ratio", "byte_hit_ratio")
 
-def _rows_by_name(record):
-    return {r["name"]: r for r in record.get("rows", [])
-            if r.get("us_per_call", 0) and r["us_per_call"] > 0}
+
+def _rows_by_name(record, timing_only=True):
+    out = {}
+    for r in record.get("rows", []):
+        if not timing_only or (r.get("us_per_call", 0)
+                               and r["us_per_call"] > 0):
+            out[r["name"]] = r
+    return out
 
 
-def compare(history: list, threshold: float, window: int = 5):
-    """Returns (regressions, lines): failed rows and a report table."""
+def _prior_same_device(history):
+    """Previous records matching the newest record's device."""
+    newest = history[-1]
+    device = newest.get("device", "unknown")
+    return [r for r in history[:-1] if r.get("device") == device]
+
+
+def compare(history: list, threshold: float, window: int = 5,
+            quality_drop: float = 0.02):
+    """Returns (regressions, lines): failed rows and a report table.
+
+    ``regressions`` entries are (name, base, new, ratio) for timing rows
+    and (name+":"+metric, base, new, ratio) for quality rows.
+    """
     lines = []
     if len(history) < 2:
         return [], ["first run: no baseline record to compare against"]
     newest = history[-1]
     device = newest.get("device", "unknown")
-    prior = [r for r in history[:-1] if r.get("device") == device]
+    prior = _prior_same_device(history)
     if not prior:
         return [], [f"no previous record for device={device!r}: skipping"]
+    prior = prior[-window:]
+    lines.append(f"gating against {len(prior)} prior same-device "
+                 f"record(s) (device={device!r})")
 
     new_rows = _rows_by_name(newest)
-    prior_rows = [_rows_by_name(r) for r in prior[-window:]]
+    prior_rows = [_rows_by_name(r) for r in prior]
     base = {}
     for name in new_rows:
         samples = [rows[name]["us_per_call"]
@@ -81,7 +119,128 @@ def compare(history: list, threshold: float, window: int = 5):
     removed = set().union(*(set(r) for r in prior_rows)) - set(new_rows)
     for name in sorted(removed):
         lines.append(f"{name:<28} {'(removed)':>9}")
+
+    # --- derived quality metrics: absolute-drop gate -------------------
+    q_new = _rows_by_name(newest, timing_only=False)
+    q_prior = [_rows_by_name(r, timing_only=False) for r in prior]
+    for name, row in sorted(q_new.items()):
+        for key in QUALITY_KEYS:
+            if key not in row:
+                continue
+            samples = [rows[name][key] for rows in q_prior
+                       if name in rows and key in rows[name]]
+            if not samples:
+                continue  # new row / new metric: tolerated
+            med = statistics.median(samples)
+            drop = med - float(row[key])
+            if drop > quality_drop:
+                lines.append(
+                    f"{name + ':' + key:<28} {med:>9.4f} "
+                    f"{float(row[key]):>9.4f} {'':>6}  QUALITY DROP "
+                    f"-{drop:.4f}")
+                regressions.append(
+                    (f"{name}:{key}", med, float(row[key]),
+                     1.0 + drop))
     return regressions, lines
+
+
+def trend_markdown(path: str, history: list, window: int = 3) -> list:
+    """Markdown bench-trend table: latest vs median-of-last-`window`
+    same-device records, per row, ▲ (slower/worse) / ▼ (faster) deltas."""
+    out = [f"### {os.path.basename(path)}", ""]
+    if not history:
+        return out + ["_no records_", ""]
+    newest = history[-1]
+    prior = _prior_same_device(history)[-window:]
+    out.append(f"device `{newest.get('device', '?')}` · "
+               f"{len(prior)} prior record(s) in baseline · "
+               f"latest sha `{newest.get('sha', '?')}`")
+    out.append("")
+    out.append("| row | median us | latest us | Δ | quality |")
+    out.append("|---|---:|---:|---|---|")
+    prior_rows = [_rows_by_name(r, timing_only=False) for r in prior]
+    for name, row in sorted(_rows_by_name(newest,
+                                          timing_only=False).items()):
+        us = float(row.get("us_per_call", 0) or 0)
+        samples = [float(rows[name].get("us_per_call", 0) or 0)
+                   for rows in prior_rows if name in rows]
+        samples = [s for s in samples if s > 0]
+        if us > 0 and samples:
+            med = statistics.median(samples)
+            pct = (us - med) / med * 100.0
+            arrow = "▲" if pct > 2 else ("▼" if pct < -2 else "·")
+            med_s, us_s, delta = f"{med:.1f}", f"{us:.1f}", \
+                f"{arrow} {pct:+.0f}%"
+        elif us > 0:
+            med_s, us_s, delta = "new", f"{us:.1f}", "·"
+        else:
+            med_s, us_s, delta = "—", "—", "·"
+        quals = []
+        for key in QUALITY_KEYS:
+            if key not in row:
+                continue
+            qs = [float(rows[name][key]) for rows in prior_rows
+                  if name in rows and key in rows[name]]
+            cur = float(row[key])
+            if qs:
+                d = cur - statistics.median(qs)
+                mark = "▼" if d < -0.02 else ("▲" if d > 0.02 else "·")
+                quals.append(f"{key}={cur:.3f} ({mark} {d:+.3f})")
+            else:
+                quals.append(f"{key}={cur:.3f}")
+        out.append(f"| {name} | {med_s} | {us_s} | {delta} | "
+                   f"{'; '.join(quals) or '—'} |")
+    out.append("")
+    return out
+
+
+def _write_step_summary(md_lines) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not md_lines:
+        return
+    try:
+        with open(path, "a") as fh:
+            fh.write("\n".join(md_lines) + "\n")
+    except OSError:
+        pass
+
+
+def merge_histories(artifact_dir: str, repo_root: str = REPO_ROOT,
+                    limit: int = 50) -> list:
+    """Seed committed BENCH_*.json files from a downloaded artifact dir
+    WITHOUT clobbering git history: the committed file stays
+    authoritative, and only artifact records strictly NEWER than its
+    newest record are appended (the CI appends accumulated since the
+    last commit).  A maintainer who prunes a poisoned record from the
+    committed file therefore wins — the artifact cannot resurrect
+    anything at or before the committed tip.  Rotated to ``limit``
+    records, like benchmarks.common.emit.  Returns report lines."""
+    lines = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir,
+                                              "BENCH_*.json"))):
+        art = _load(path) or []
+        dst = os.path.join(repo_root, os.path.basename(path))
+        committed = _load(dst) or []
+        tip = max((r.get("time", "") for r in committed), default="")
+        add = [r for r in art if r.get("time", "") > tip]
+        merged = (committed + add)[-limit:]
+        if merged != committed or not os.path.exists(dst):
+            with open(dst, "w") as fh:
+                json.dump(merged, fh, indent=1)
+                fh.write("\n")
+        lines.append(f"{os.path.basename(path)}: committed "
+                     f"{len(committed)} + {len(add)} newer artifact "
+                     f"record(s) -> {len(merged)}")
+    return lines
+
+
+def _load(path):
+    try:
+        with open(path) as fh:
+            history = json.load(fh)
+    except (OSError, ValueError):
+        return None
+    return history if isinstance(history, list) and history else None
 
 
 def main(argv=None) -> int:
@@ -96,30 +255,68 @@ def main(argv=None) -> int:
     ap.add_argument("--window", type=int, default=5,
                     help="previous same-device records in the median "
                          "baseline")
+    ap.add_argument("--quality-drop", type=float, default=0.02,
+                    help="absolute drop in hit_rate/byte_hit_rate rows "
+                         "that fails (default 0.02 = 2pp)")
+    ap.add_argument("--trend-all", action="store_true",
+                    help="write the markdown trend table for every "
+                         "BENCH_*.json to $GITHUB_STEP_SUMMARY and exit "
+                         "0 (no gating; the nightly lane)")
+    ap.add_argument("--merge-from", metavar="DIR", default="",
+                    help="merge BENCH_*.json records from a downloaded "
+                         "artifact dir into the committed files "
+                         "(committed history authoritative; only newer "
+                         "records append) and exit 0")
     args = ap.parse_args(argv)
+
+    if args.merge_from:
+        for ln in merge_histories(args.merge_from):
+            print(f"bench_compare: merge {ln}")
+        return 0
+
+    if args.trend_all:
+        for path in sorted(glob.glob(os.path.join(REPO_ROOT,
+                                                  "BENCH_*.json"))):
+            history = _load(path)
+            if history:
+                _write_step_summary(trend_markdown(path, history))
+                print(f"bench_compare: trend written for "
+                      f"{os.path.basename(path)} ({len(history)} records)")
+        return 0
 
     path = args.file if os.path.isabs(args.file) else os.path.join(
         REPO_ROOT, args.file)
-    try:
-        with open(path) as fh:
-            history = json.load(fh)
-    except (OSError, ValueError) as e:
-        print(f"bench_compare: cannot read {path} ({e}): nothing to gate")
-        return 0
-    if not isinstance(history, list) or not history:
-        print(f"bench_compare: {path} holds no records: nothing to gate")
+    history = _load(path)
+    if history is None:
+        print(f"bench_compare: cannot read {path} or it holds no "
+              f"records: nothing to gate")
         return 0
 
-    regressions, lines = compare(history, args.threshold, args.window)
+    regressions, lines = compare(history, args.threshold, args.window,
+                                 args.quality_drop)
     print(f"bench_compare: {os.path.basename(path)} "
-          f"(threshold +{args.threshold:.0%}, window {args.window})")
+          f"(threshold +{args.threshold:.0%}, window {args.window}, "
+          f"quality drop {args.quality_drop:.2f})")
     for ln in lines:
         print("  " + ln)
+    _write_step_summary(trend_markdown(path, history))
     if regressions:
-        worst = max(regressions, key=lambda r: r[3])
-        print(f"bench_compare: FAIL — {len(regressions)} row(s) regressed "
-              f">{args.threshold:.0%}; worst: {worst[0]} "
-              f"{worst[1]:.2f}us -> {worst[2]:.2f}us ({worst[3]:.2f}x)")
+        # Timing entries carry a real us ratio; quality entries (name
+        # suffixed ":metric") carry an absolute drop — report each in
+        # its own unit instead of ranking across incomparable scales.
+        timing = [r for r in regressions if ":" not in r[0]]
+        quality = [r for r in regressions if ":" in r[0]]
+        parts = []
+        if timing:
+            w = max(timing, key=lambda r: r[3])
+            parts.append(f"worst timing: {w[0]} {w[1]:.2f}us -> "
+                         f"{w[2]:.2f}us ({w[3]:.2f}x)")
+        if quality:
+            w = max(quality, key=lambda r: r[1] - r[2])
+            parts.append(f"worst quality: {w[0]} {w[1]:.4f} -> "
+                         f"{w[2]:.4f} (-{w[1] - w[2]:.4f} abs)")
+        print(f"bench_compare: FAIL — {len(regressions)} row(s) "
+              f"regressed; " + "; ".join(parts))
         return 1
     print("bench_compare: OK")
     return 0

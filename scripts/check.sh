@@ -52,11 +52,15 @@ if [[ "$FAST" == "1" ]]; then
         "from benchmarks import throughput; throughput.run(quick=True)"
     phase bench-sizes python -c \
         "from benchmarks import sizes; sizes.run(quick=True)"
+    phase bench-tenants python -c \
+        "from benchmarks import tenants; tenants.run(quick=True)"
     phase bench-compare python scripts/bench_compare.py
-    # sizes rows are un-repeated single measurements: gate them at a
-    # looser threshold so jitter cannot redden the lane
+    # sizes/tenants rows are un-repeated single measurements: gate them
+    # at a looser threshold so jitter cannot redden the lane
     phase bench-compare-sizes python scripts/bench_compare.py \
         --file BENCH_sizes.json --threshold 0.6
+    phase bench-compare-tenants python scripts/bench_compare.py \
+        --file BENCH_tenants.json --threshold 0.6
     echo "check --fast: OK"
     exit 0
 fi
@@ -68,8 +72,12 @@ phase bench-throughput python -c \
     "from benchmarks import throughput; throughput.run(quick=True)"
 phase bench-sizes python -c \
     "from benchmarks import sizes; sizes.run(quick=True)"
+phase bench-tenants python -c \
+    "from benchmarks import tenants; tenants.run(quick=True)"
 phase bench-compare python scripts/bench_compare.py
 phase bench-compare-sizes python scripts/bench_compare.py \
     --file BENCH_sizes.json --threshold 0.6
+phase bench-compare-tenants python scripts/bench_compare.py \
+    --file BENCH_tenants.json --threshold 0.6
 
 echo "check: OK"

@@ -89,10 +89,12 @@ def apply_penalties(weights: jnp.ndarray, penalties: jnp.ndarray,
 
     The single ordering shared by the core path and the DM weight-sync
     RPC (`dm/sharded_cache.py`): normalizing last guarantees the global
-    weights always sum to exactly 1."""
+    weights always sum to exactly 1.  Shape-generic over leading axes
+    (f32[E] classic, f32[T, E] per-tenant): each expert row normalizes
+    independently."""
     w = weights * jnp.exp(-lam * penalties)
     w = jnp.maximum(w, 1e-4)
-    return w / jnp.sum(w)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
 
 
 def _first_winner(x: jnp.ndarray, valid: jnp.ndarray,
@@ -114,6 +116,7 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
                  is_write: jnp.ndarray | None = None,
                  obj_size: jnp.ndarray | None = None,
                  values: jnp.ndarray | None = None,
+                 tenant: jnp.ndarray | None = None,
                  insert_on_miss: bool = True,
                  ) -> Tuple[CacheState, ClientState, OpStats, AccessResult]:
     """One batched cache step over a [G, C] request group.
@@ -133,12 +136,18 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
       is_write: bool[G, C] — SET ops (value update; costed as the Set path).
       obj_size: u32[G, C] object size in 64B blocks (default 1).
       values: u32[G, C, W] payload written on insert/set.
+      tenant: u32[G, C] tenant id per request in [0, n_tenants); ignored
+        (and the per-slot tenant column left untouched) when
+        cfg.n_tenants == 1, so single-tenant behavior is bit-identical
+        to the pre-tenant engine.
     """
     G, C = keys.shape
     B = G * C
     E = cfg.n_experts
     K = cfg.n_samples
     A = cfg.assoc
+    Tn = cfg.n_tenants
+    multi = Tn > 1
     names = cfg.experts
     adaptive = E > 1
     fused = cfg.backend == "fused"
@@ -155,12 +164,15 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         obj_size = jnp.ones((G, C), U32)
     if values is None:
         values = jnp.zeros((G, C, cfg.value_words), U32)
+    if tenant is None:
+        tenant = jnp.zeros((G, C), U32)
 
     keys_b = keys.reshape(B)
     op = keys_b != 0
     is_write = is_write.reshape(B)
     obj_size = jnp.clip(obj_size.reshape(B), 1, SIZE_HISTORY - 1).astype(U32)
     values = values.reshape(B, cfg.value_words)
+    tenant_b = jnp.minimum(tenant.reshape(B).astype(U32), U32(Tn - 1))
 
     clock = state.clock
     n_slots_total = cfg.n_slots
@@ -253,17 +265,22 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         ext = state.ext.at[upd_idx].set(new_ext, mode="drop")
         eidx = jnp.where(emit_slot >= 0, emit_slot, n_slots_total)
         freq = state.freq.at[eidx].add(emit_delta, mode="drop")
-    # SETs overwrite payloads (last-writer-wins within the group).
-    val_idx = jnp.where(hit & is_write, slot, n_slots_total)
-    vals = state.values.at[val_idx].set(values, mode="drop")
-    sizes_upd = state.size.at[val_idx].set(obj_size, mode="drop")
+    # SETs overwrite payloads (last-writer-wins within the group); the
+    # write itself is applied after the tenant budget gate (step 5b),
+    # which may refuse a budget-breaking grow — all inputs here are the
+    # step-entry snapshot, so deferring the scatter changes nothing.
 
     # ------------------------------------------------------------------
     # 3. Regret collection + lazy expert-weight update (§4.3.2).  The
     #    group's penalties aggregate into ONE multiplicative-weights
     #    update and one sync decision per lane per step — the batched
     #    analogue of the paper's locally-buffered penalties (for G=1
-    #    this is exactly the per-round update).
+    #    this is exactly the per-round update).  Weights are per-tenant
+    #    rows ([T, E], §11): every request's regret lands on its own
+    #    tenant's row, so each tenant converges to its own best-fit
+    #    expert.  The math below runs in canonical [C, T, E] space; for
+    #    n_tenants == 1 the T axis is a length-1 broadcast and every
+    #    reduction is elementwise-identical to the pre-tenant engine.
     # ------------------------------------------------------------------
     h_bmap = state.insert_ts[jnp.maximum(hslot, 0)]          # expert bitmap
     h_age_sel = _hist_age(state.hist_ctr, state.ptr[jnp.maximum(hslot, 0)])
@@ -271,8 +288,15 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     pen = jnp.power(d, h_age_sel.astype(F32))                # d^t
     bits = ((h_bmap[:, None] >> jnp.arange(E)[None, :]) & 1).astype(F32)
     pen_e = jnp.where(regret[:, None], pen[:, None] * bits, 0.0)   # [B, E]
-    pen_lane = jnp.sum(pen_e.reshape(G, C, E), axis=0)       # [C, E]
-    reg_lane = jnp.sum(regret.reshape(G, C), axis=0)         # [C]
+    ten_g = tenant_b.reshape(G, C)
+    pen_g = pen_e.reshape(G, C, E)
+    reg_g = regret.reshape(G, C)
+    pen_lane = jnp.stack(
+        [jnp.sum(jnp.where((ten_g == U32(t))[..., None], pen_g, 0.0), axis=0)
+         for t in range(Tn)], axis=1)                        # [C, T, E]
+    reg_lane = jnp.stack(
+        [jnp.sum(jnp.where(ten_g == U32(t), reg_g, False), axis=0)
+         for t in range(Tn)], axis=1)                        # [C, T]
 
     # One threefry draw per request covers both the expert choice and the
     # sampling offset (step_rng is already a per-request folded stream).
@@ -280,23 +304,29 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     u_exp = u2[:, 0]
 
     lam = jnp.float32(cfg.learning_rate)
-    local_w = clients.local_weights * jnp.exp(-lam * pen_lane)
-    pacc = clients.penalty_acc + pen_lane
-    pcnt = clients.penalty_cnt + reg_lane.astype(I32)
+    lw3 = clients.local_weights if multi else clients.local_weights[:, None]
+    pacc3 = clients.penalty_acc if multi else clients.penalty_acc[:, None]
+    pcnt2 = clients.penalty_cnt if multi else clients.penalty_cnt[:, None]
+    w2 = state.weights if multi else state.weights[None]     # [T, E]
+    local_w = lw3 * jnp.exp(-lam * pen_lane)
+    pacc = pacc3 + pen_lane
+    pcnt = pcnt2 + reg_lane.astype(I32)
 
     if cfg.use_lwu:
-        syncing = pcnt >= cfg.sync_period
+        syncing = pcnt >= cfg.sync_period                    # [C, T]
     else:
         syncing = reg_lane > 0  # eager: RPC on every regret
-    tot_pen = jnp.sum(jnp.where(syncing[:, None], pacc, 0.0), axis=0)
-    gw = apply_penalties(state.weights, tot_pen, lam)
-    local_w = jnp.where(syncing[:, None], gw[None, :], local_w)
+    tot_pen = jnp.sum(jnp.where(syncing[..., None], pacc, 0.0),
+                      axis=0)                                # [T, E]
+    gw = apply_penalties(w2, tot_pen, lam)                   # [T, E]
+    local_w = jnp.where(syncing[..., None], gw[None], local_w)
     local_w = jnp.maximum(local_w, 1e-4)
-    pacc = jnp.where(syncing[:, None], 0.0, pacc)
+    pacc = jnp.where(syncing[..., None], 0.0, pacc)
     pcnt = jnp.where(syncing, 0, pcnt)
     n_sync = jnp.sum(syncing).astype(I32)
+    lane_b = jnp.tile(jnp.arange(C, dtype=I32), G)           # [B]
     e_choice = _choose_expert(
-        local_w, u_exp.reshape(G, C)).reshape(B)             # [B]
+        local_w[lane_b, tenant_b.astype(I32)], u_exp)        # [B]
 
     # ------------------------------------------------------------------
     # 4. Inserts: read-through on miss. One insert per (key, bucket) per
@@ -370,7 +400,40 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         over <= 0, 0,
         jnp.maximum((over + jnp.maximum(n_charge, 1) - 1)
                     // jnp.maximum(n_charge, 1), 1))
-    must_evict = chargers & (over > 0)
+
+    # Tenant-scoped budget enforcement (§11): an over-budget tenant's
+    # chargers must peel victims from the tenant's OWN slots (the sample
+    # filter below), with a quota that is their ceil-share of the
+    # *tenant's* byte deficit; under-budget tenants fall back to the
+    # shared-pool ranking and the global quota (work conservation).  For
+    # n_tenants == 1 the single tenant's budget IS capacity_blocks and
+    # every per-tenant quantity collapses to the global ones above, so
+    # the classic engine skips the whole pipeline (identical decisions,
+    # zero extra work on the gated hot path).
+    if multi:
+        occ_t = state.tenant_bytes
+        bud_t = state.tenant_budget
+        charge_d = (jnp.where(consumes, obj_size.astype(I32), 0)
+                    + jnp.where(hit & is_write, set_growth, 0))  # [B]
+        inc_t = jnp.stack(
+            [jnp.sum(jnp.where(tenant_b == U32(t), charge_d, 0))
+             for t in range(Tn)])                            # [T]
+        n_charge_t = jnp.stack(
+            [jnp.sum(chargers & (tenant_b == U32(t))) for t in range(Tn)]
+        ).astype(I32)                                        # [T]
+        over_t = occ_t + inc_t - bud_t                       # [T]
+        quota_t = jnp.where(
+            over_t <= 0, 0,
+            jnp.maximum((over_t + jnp.maximum(n_charge_t, 1) - 1)
+                        // jnp.maximum(n_charge_t, 1), 1))
+        scoped = chargers & (over_t[tenant_b] > 0)           # [B]
+        must_evict = scoped | (chargers & (over > 0))
+        quota_b = jnp.where(scoped, quota_t[tenant_b], quota)  # [B]
+        tfilt = jnp.where(scoped, tenant_b.astype(I32), -1)  # [B]
+    else:
+        must_evict = chargers & (over > 0)
+        quota_b = quota          # scalar; broadcasts in both engines
+        tfilt = None             # no tenant filter (kernel fills -1)
 
     # Contiguous-window sampling (§4.2.1): ONE read of W consecutive slots
     # from a random offset; the first K live objects in the window are the
@@ -385,14 +448,23 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         wrap = lambda x: jnp.concatenate([x, x[:W]])
         victims_2d, cand_slot = kops.ranked_eviction_op(
             wrap(state.size), wrap(state.insert_ts), wrap(state.last_ts),
-            wrap(state.freq), offs, e_choice, must_evict, quota, ts_req,
+            wrap(state.freq), offs, e_choice, must_evict, quota_b, ts_req,
+            tenant=wrap(state.tenant) if multi else None, tfilt=tfilt,
             window=W, k=K, experts=names)                     # [B, K], [B, E]
         take = victims_2d >= 0
     else:
         samp = (offs[:, None] + jnp.arange(W)[None, :]) % cfg.n_slots  # [B, W]
         s_md = _md_view(state, samp, ts_req[:, None])
         s_live_raw = _is_live(state.size[samp])
-        in_sample = s_live_raw & (jnp.cumsum(s_live_raw, axis=1) <= K)
+        if multi:
+            # Tenant filter: a budget-scoped op samples only its own
+            # tenant's live objects (the first K of them in the window).
+            s_ten = state.tenant[samp].astype(I32)
+            s_elig = s_live_raw & ((tfilt[:, None] < 0)
+                                   | (s_ten == tfilt[:, None]))
+        else:
+            s_elig = s_live_raw
+        in_sample = s_elig & (jnp.cumsum(s_elig, axis=1) <= K)
         s_live = in_sample
         s_prio = prio.priorities(s_md, names)                 # [B, W, E]
         s_prio = jnp.where(s_live[:, :, None], s_prio, jnp.inf)
@@ -413,7 +485,7 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         for j in range(K):
             arg = jnp.argmin(prio_e, axis=1)                  # [B]
             val = jnp.take_along_axis(prio_e, arg[:, None], axis=1)[:, 0]
-            ok = (freed < quota.astype(F32)) & (val < jnp.inf) & must_evict
+            ok = (freed < quota_b.astype(F32)) & (val < jnp.inf) & must_evict
             vs.append(jnp.where(ok, jnp.take_along_axis(
                 samp, arg[:, None], axis=1)[:, 0], -1))
             freed = freed + jnp.where(ok, jnp.take_along_axis(
@@ -428,6 +500,51 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     ev_winner = _first_winner(victims, victims >= 0, n_slots_total)
     n_evict = jnp.sum(ev_winner).astype(I32)
     evicting = must_evict & jnp.any(take, axis=1)
+
+    # ------------------------------------------------------------------
+    # 5b. Tenant budget gate (multi-tenant only, §11): the sampled
+    #     eviction is best-effort — a window holding too few of the
+    #     tenant's objects frees fewer blocks than the deficit demands —
+    #     so capacity charges (inserts at obj_size, SET re-sizes at
+    #     their byte delta, shrinks crediting) are admitted against the
+    #     tenant's *post-eviction* allowance as a round-ordered prefix;
+    #     the excess inserts and growing SETs are refused (counted in
+    #     insert_drops; a refused grow keeps the object's old size and
+    #     payload, like a failed remote write).  Prefix admission is
+    #     conservative — a refused charge still occupies its slot in
+    #     the running sum — which is what makes per-tenant budgets a
+    #     hard isolation guarantee instead of a drifting target.
+    #     Single-tenant configs skip the gate entirely (the classic
+    #     engine tolerates transient overshoot; see DESIGN.md §8).
+    # ------------------------------------------------------------------
+    if multi:
+        v_idx = jnp.maximum(victims, 0)
+        v_ten = jnp.where(ev_winner, state.tenant[v_idx].astype(I32), 0)
+        v_sz = jnp.where(ev_winner, state.size[v_idx].astype(I32), 0)
+        freed_t = jnp.zeros((Tn,), I32).at[v_ten].add(v_sz)   # [T]
+        allow_t = bud_t - occ_t + freed_t                     # [T]
+        # Net charge sequence: insert sizes + SET byte deltas (growing
+        # positive, shrinking negative — shrinks are never refused and
+        # free room for later charges in the same step).
+        charge_seq = jnp.where(ins_ok, obj_size.astype(I32), 0) + set_growth
+        chargeable = ins_ok | growing_set
+        cancel = jnp.zeros((B,), bool)
+        for t in range(Tn):
+            m = tenant_b == U32(t)
+            cum = jnp.cumsum(jnp.where(m, charge_seq, 0))
+            cancel = cancel | (m & chargeable & (cum > allow_t[t]))
+        plain = plain & ~cancel
+        fallback_hist = fallback_hist & ~cancel
+        fallback_obj = fallback_obj & ~cancel
+        ins_ok = ins_ok & ~cancel
+        dropped = dropped | cancel
+        set_ok = hit & is_write & ~(growing_set & cancel)
+    else:
+        set_ok = hit & is_write
+    # Apply SET payload/size writes (deferred from step 2 past the gate).
+    val_idx = jnp.where(set_ok, slot, n_slots_total)
+    vals = state.values.at[val_idx].set(values, mode="drop")
+    sizes_upd = state.size.at[val_idx].set(obj_size, mode="drop")
 
     # Expert bitmap per victim: experts whose candidate matches, plus the
     # evicting op's chosen expert (Fig. 9).
@@ -485,6 +602,18 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # never drift the way an incremental counter could.
     bytes_cached = jnp.sum(
         jnp.where(_is_live(sizes3), sizes3, U32(0))).astype(I32)
+    # Per-tenant occupancy: same recompute-exactly discipline as
+    # bytes_cached (one scatter-add over the tenant column), so the
+    # partitioning invariant `tenant_bytes[t] == sum(live sizes of t)`
+    # can never drift either.  Single-tenant: the column stays untouched
+    # and the occupancy is definitionally the global one.
+    if multi:
+        tenant2 = state.tenant.at[ii].set(tenant_b, mode="drop")
+        tenant_bytes = jnp.zeros((Tn,), I32).at[tenant2.astype(I32)].add(
+            jnp.where(_is_live(sizes3), sizes3, U32(0)).astype(I32))
+    else:
+        tenant2 = state.tenant
+        tenant_bytes = bytes_cached[None]
 
     result_vals = state.values[jnp.maximum(slot, 0)]
 
@@ -493,10 +622,14 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
         n_cached=n_cached, bytes_cached=bytes_cached,
         hist_ctr=state.hist_ctr + n_hist,
-        clock=clock + U32(G), weights=gw, gds_L=gds_L,
-        capacity_blocks=state.capacity_blocks)
+        clock=clock + U32(G), weights=gw if multi else gw[0], gds_L=gds_L,
+        capacity_blocks=state.capacity_blocks,
+        tenant=tenant2, tenant_bytes=tenant_bytes,
+        tenant_budget=state.tenant_budget)
     new_clients = clients._replace(
-        local_weights=local_w, penalty_acc=pacc, penalty_cnt=pcnt)
+        local_weights=local_w if multi else local_w[:, 0],
+        penalty_acc=pacc if multi else pacc[:, 0],
+        penalty_cnt=pcnt if multi else pcnt[:, 0])
 
     # ------------------------------------------------------------------
     # 7. Remote-op accounting (cost model; see DESIGN.md §2).
@@ -562,6 +695,7 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
            is_write: jnp.ndarray | None = None,
            obj_size: jnp.ndarray | None = None,
            values: jnp.ndarray | None = None,
+           tenant: jnp.ndarray | None = None,
            insert_on_miss: bool = True,
            ):
     """One single-round cache step: GET each key; read-through insert on
@@ -576,6 +710,7 @@ def access(cfg: CacheConfig, state: CacheState, clients: ClientState,
         is_write=None if is_write is None else is_write[None, :],
         obj_size=None if obj_size is None else obj_size[None, :],
         values=None if values is None else values[None],
+        tenant=None if tenant is None else tenant[None, :],
         insert_on_miss=insert_on_miss)
     return state, clients, stats, AccessResult(
         hit=res.hit[0], value=res.value[0], evicted=res.evicted[0],
@@ -599,32 +734,37 @@ class TraceResult(NamedTuple):
 
 def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
               keys: jnp.ndarray, is_write: jnp.ndarray | None = None,
-              obj_size: jnp.ndarray | None = None) -> TraceResult:
+              obj_size: jnp.ndarray | None = None,
+              tenant: jnp.ndarray | None = None) -> TraceResult:
     """Run a [T, C] trace (T steps of C concurrent client ops)."""
     T, C = keys.shape
     if is_write is None:
         is_write = jnp.zeros((T, C), bool)
     if obj_size is None:
         obj_size = jnp.ones((T, C), U32)
+    if tenant is None:
+        tenant = jnp.zeros((T, C), U32)
     stats = init_stats()
 
     def step(carry, xs):
         st, cl, sa = carry
-        k, w, sz = xs
-        st, cl, sa, res = access(cfg, st, cl, sa, k, is_write=w, obj_size=sz)
+        k, w, sz, tn = xs
+        st, cl, sa, res = access(cfg, st, cl, sa, k, is_write=w, obj_size=sz,
+                                 tenant=tn)
         out = (jnp.sum(res.hit).astype(I32), jnp.sum(k != 0).astype(I32),
                st.weights)
         return (st, cl, sa), out
 
     (state, clients, stats), (hits, ops, weights) = jax.lax.scan(
-        step, (state, clients, stats), (keys, is_write, obj_size))
+        step, (state, clients, stats), (keys, is_write, obj_size, tenant))
     return TraceResult(state, clients, stats, hits, ops, weights)
 
 
 def run_trace_grouped(cfg: CacheConfig, state: CacheState,
                       clients: ClientState, keys: jnp.ndarray,
                       is_write: jnp.ndarray | None = None,
-                      obj_size: jnp.ndarray | None = None) -> TraceResult:
+                      obj_size: jnp.ndarray | None = None,
+                      tenant: jnp.ndarray | None = None) -> TraceResult:
     """Run a planned [NG, G, C] grouped trace: one scan step retires a
     whole G-round request group (see ``workloads.plan.plan_groups``).
 
@@ -636,19 +776,21 @@ def run_trace_grouped(cfg: CacheConfig, state: CacheState,
         is_write = jnp.zeros((NG, G, C), bool)
     if obj_size is None:
         obj_size = jnp.ones((NG, G, C), U32)
+    if tenant is None:
+        tenant = jnp.zeros((NG, G, C), U32)
     stats = init_stats()
 
     def step(carry, xs):
         st, cl, sa = carry
-        k, w, sz = xs
+        k, w, sz, tn = xs
         st, cl, sa, res = access_group(cfg, st, cl, sa, k,
-                                       is_write=w, obj_size=sz)
+                                       is_write=w, obj_size=sz, tenant=tn)
         out = (jnp.sum(res.hit, axis=1).astype(I32),
                jnp.sum(k != 0, axis=1).astype(I32), st.weights)
         return (st, cl, sa), out
 
     (state, clients, stats), (hits, ops, weights) = jax.lax.scan(
-        step, (state, clients, stats), (keys, is_write, obj_size))
+        step, (state, clients, stats), (keys, is_write, obj_size, tenant))
     return TraceResult(state, clients, stats, hits.reshape(-1),
                        ops.reshape(-1), jnp.repeat(weights, G, axis=0))
 

@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Slot states, stored in the `size` field (paper: 0 = empty, 0xFF = history
 # entry, anything else = live object size in 64B blocks).
@@ -43,6 +44,17 @@ class CacheConfig:
                                         # 0 -> `capacity` blocks (uniform
                                         # 1-block objects: byte accounting
                                         # degenerates to object counting)
+    n_tenants: int = 1                  # multi-tenant partitioning: each
+                                        # request carries a tenant id in
+                                        # [0, n_tenants); 1 = the classic
+                                        # single-tenant cache (bit-identical
+                                        # to the pre-tenant engine)
+    tenant_budget_blocks: tuple = ()    # per-tenant byte budgets (64B
+                                        # blocks); () -> budget_blocks
+                                        # split equally. Budgets may
+                                        # overcommit (sum > budget_blocks):
+                                        # the global byte budget still
+                                        # holds, tenants share the slack
     hist_len: int = 0                   # 0 -> defaults to capacity (LeCaR)
     n_samples: int = 5                  # K, Redis default
     sample_window: int = 0              # contiguous slots read per eviction
@@ -82,6 +94,20 @@ class CacheConfig:
         return len(self.experts)
 
     @property
+    def tenant_budgets(self) -> tuple:
+        """Per-tenant byte budgets in 64B blocks (length n_tenants).
+
+        Defaults to an equal split of ``budget_blocks`` (remainder to the
+        lowest tenant ids); the runtime copy lives in
+        ``CacheState.tenant_budget`` so the elastic arbiter can re-split
+        the pool online without retracing."""
+        if self.tenant_budget_blocks:
+            return tuple(int(b) for b in self.tenant_budget_blocks)
+        t = self.n_tenants
+        base, rem = divmod(self.budget_blocks, t)
+        return tuple(base + (1 if i < rem else 0) for i in range(t))
+
+    @property
     def discount(self) -> float:
         # d = 0.005 ** (1/N): penalty d^t decays to 0.005 at history age N.
         return float(self.base_discount) ** (1.0 / float(self.capacity))
@@ -93,6 +119,15 @@ class CacheConfig:
                 " (live objects + embedded history entries)")
         if self.n_experts > 32:
             raise ValueError("expert bitmap is 32 bits wide")
+        if self.n_tenants < 1:
+            raise ValueError(f"n_tenants={self.n_tenants} must be >= 1")
+        if self.tenant_budget_blocks and \
+                len(self.tenant_budget_blocks) != self.n_tenants:
+            raise ValueError(
+                f"tenant_budget_blocks has {len(self.tenant_budget_blocks)} "
+                f"entries for n_tenants={self.n_tenants}")
+        if any(b <= 0 for b in self.tenant_budget_blocks):
+            raise ValueError("tenant budgets must be positive block counts")
         if self.backend not in ("reference", "fused"):
             raise ValueError(f"unknown backend {self.backend!r}")
 
@@ -122,12 +157,23 @@ class CacheState(NamedTuple):
                             # byte invariant cannot drift
     hist_ctr: jnp.ndarray   # u32[]  global history counter (logical FIFO tail)
     clock: jnp.ndarray      # u32[]  logical timestamp, +1 per batched step
-    weights: jnp.ndarray    # f32[E] global expert weights
+    weights: jnp.ndarray    # f32[E] global expert weights (f32[T, E]
+                            # when n_tenants > 1: one row per tenant)
     gds_L: jnp.ndarray      # f32[]  GreedyDual inflation value
     capacity_blocks: jnp.ndarray  # i32[] byte budget in 64B blocks — a
                             # *runtime* scalar, so growing/shrinking the
                             # memory pool by GB is one register write
                             # (zero data migration, §2.2)
+    # --- multi-tenant partitioning (DESIGN.md §11) ---
+    tenant: jnp.ndarray     # u32[n_slots] owning tenant of a live slot
+                            # (set at insert; all-zero when n_tenants==1)
+    tenant_bytes: jnp.ndarray   # i32[T] live blocks per tenant — like
+                            # bytes_cached, recomputed exactly per step
+    tenant_budget: jnp.ndarray  # i32[T] per-tenant byte budgets (64B
+                            # blocks) — runtime scalars the elastic
+                            # arbiter rewrites online; when n_tenants==1
+                            # the engine reads capacity_blocks instead
+                            # so classic resizes stay one scalar write
 
 
 class ClientState(NamedTuple):
@@ -141,8 +187,12 @@ class ClientState(NamedTuple):
     fc_delta: jnp.ndarray     # u32[F]  buffered freq delta
     fc_ins: jnp.ndarray       # u32[F]  entry insert time
     local_weights: jnp.ndarray  # f32[E] weights used for eviction decisions
+                              # (f32[T, E] when n_tenants > 1: each tenant
+                              # converges to its own best-fit expert)
     penalty_acc: jnp.ndarray  # f32[E]  sum of pending d^t penalties
+                              # (f32[T, E] when n_tenants > 1)
     penalty_cnt: jnp.ndarray  # i32[]   buffered regret count
+                              # (i32[T] when n_tenants > 1)
     rng: jnp.ndarray          # PRNG key
 
 
@@ -199,6 +249,31 @@ class MDView(NamedTuple):
     cost: jnp.ndarray       # f32 — local info, estimated from size (§4.2.1)
 
 
+def split_tenant_budgets(budgets, n_shards: int):
+    """Exact per-shard split of global tenant budgets: i32[n_shards, T]
+    with column sums EQUAL to the global budgets (remainder blocks go to
+    the lowest shard ids).  `b // n_shards`-style rounding would
+    silently inflate or deflate the enforced global budget — the hard
+    per-tenant invariant (DESIGN.md §11) is only as exact as this
+    split.  A shard whose share is 0 simply refuses that tenant's
+    inserts: conservation over convenience."""
+    out = np.zeros((n_shards, len(budgets)), np.int32)
+    for t, b in enumerate(budgets):
+        base, rem = divmod(int(b), n_shards)
+        out[:, t] = base
+        out[:rem, t] += 1
+    return out
+
+
+def _weight_shape(cfg: CacheConfig) -> tuple:
+    """[E] for the classic single-tenant cache, [T, E] otherwise — the
+    single-tenant engine keeps its exact pre-tenant array shapes so every
+    existing consumer (and bit-equality contract) is untouched."""
+    if cfg.n_tenants > 1:
+        return (cfg.n_tenants, cfg.n_experts)
+    return (cfg.n_experts,)
+
+
 def init_cache(cfg: CacheConfig) -> CacheState:
     n = cfg.n_slots
     return CacheState(
@@ -215,23 +290,30 @@ def init_cache(cfg: CacheConfig) -> CacheState:
         bytes_cached=jnp.zeros((), jnp.int32),
         hist_ctr=jnp.zeros((), jnp.uint32),
         clock=jnp.ones((), jnp.uint32),
-        weights=jnp.full((cfg.n_experts,), 1.0 / cfg.n_experts, jnp.float32),
+        weights=jnp.full(_weight_shape(cfg), 1.0 / cfg.n_experts,
+                         jnp.float32),
         gds_L=jnp.zeros((), jnp.float32),
         capacity_blocks=jnp.asarray(cfg.budget_blocks, jnp.int32),
+        tenant=jnp.zeros((n,), jnp.uint32),
+        tenant_bytes=jnp.zeros((cfg.n_tenants,), jnp.int32),
+        tenant_budget=jnp.asarray(cfg.tenant_budgets, jnp.int32),
     )
 
 
 def init_clients(cfg: CacheConfig, n_clients: int, seed: int = 0) -> ClientState:
     f = cfg.fc_size
     e = cfg.n_experts
+    wshape = _weight_shape(cfg)
+    cnt_shape = (n_clients, cfg.n_tenants) if cfg.n_tenants > 1 \
+        else (n_clients,)
     keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
     return ClientState(
         fc_slot=jnp.full((n_clients, f), -1, jnp.int32),
         fc_delta=jnp.zeros((n_clients, f), jnp.uint32),
         fc_ins=jnp.zeros((n_clients, f), jnp.uint32),
-        local_weights=jnp.full((n_clients, e), 1.0 / e, jnp.float32),
-        penalty_acc=jnp.zeros((n_clients, e), jnp.float32),
-        penalty_cnt=jnp.zeros((n_clients,), jnp.int32),
+        local_weights=jnp.full((n_clients,) + wshape, 1.0 / e, jnp.float32),
+        penalty_acc=jnp.zeros((n_clients,) + wshape, jnp.float32),
+        penalty_cnt=jnp.zeros(cnt_shape, jnp.int32),
         rng=keys,
     )
 

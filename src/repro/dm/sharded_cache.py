@@ -29,7 +29,7 @@ from repro.core.cache import access_group, apply_penalties
 from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
                               init_cache, init_clients, init_stats,
-                              stats_add)
+                              split_tenant_budgets, stats_add)
 
 AXIS = "pool"
 
@@ -99,7 +99,11 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
         hist_ctr=rep(state.hist_ctr),
         clock=rep(state.clock), weights=rep(state.weights),
         gds_L=rep(state.gds_L),
-        capacity_blocks=rep(jnp.asarray(local.budget_blocks, jnp.int32)))
+        capacity_blocks=rep(jnp.asarray(local.budget_blocks, jnp.int32)),
+        tenant_bytes=rep(state.tenant_bytes),
+        # Exact per-shard split (column sums == the global budgets).
+        tenant_budget=jnp.asarray(
+            split_tenant_budgets(cfg.tenant_budgets, n_shards)))
     clients = init_clients(cfg, n_shards * lanes_per_shard, seed)
 
     sh_slot = NamedSharding(mesh, P(AXIS))
@@ -115,13 +119,17 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
 
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
               keys: jnp.ndarray, is_write=None, obj_size=None,
+              tenant=None,
               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
     """One DM step: keys [n_shards * lanes] or a request group
     [G, n_shards * lanes] (0 = no-op). Returns hits of the same shape.
     ``obj_size`` ([.. like keys], 64B blocks, default 1) is bit-packed
     with the write flag into a second u32 word of the keys' exchange,
     so the owning shard charges the byte-accurate insert cost of each
-    routed request without an extra collective.
+    routed request without an extra collective.  ``tenant`` ([.. like
+    keys], ids in [0, n_tenants)) rides the same sideband word (bits
+    9+), so multi-tenant budget enforcement needs no extra collective
+    either; ignored when ``local_cfg.n_tenants == 1``.
 
     Batched routing: the router packs each round of the group into
     per-destination request blocks, ships the whole [G, q] group per
@@ -145,6 +153,8 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             is_write = is_write[None]
         if obj_size is not None:
             obj_size = obj_size[None]
+        if tenant is not None:
+            tenant = tenant[None]
     G = keys.shape[0]
     lanes = keys.shape[1] // n_shards
     if route_factor <= 0:
@@ -157,8 +167,10 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         is_write = jnp.zeros_like(keys, dtype=bool)
     if obj_size is None:
         obj_size = jnp.ones_like(keys, dtype=jnp.uint32)
+    if tenant is None:
+        tenant = jnp.zeros_like(keys, dtype=jnp.uint32)
 
-    def route_one(keys_l, write_l, size_l):
+    def route_one(keys_l, write_l, size_l, ten_l):
         # --- client side: decide owners, pack per-destination slots -----
         kh = hash_key(keys_l)
         owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
@@ -175,6 +187,7 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         send = jnp.zeros((n_shards, q), jnp.uint32)
         wsend = jnp.zeros((n_shards, q), bool)
         zsend = jnp.ones((n_shards, q), jnp.uint32)
+        nsend = jnp.zeros((n_shards, q), jnp.uint32)
         src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
         ok = rank < q
         dst = jnp.where(ok, sorted_owner, n_shards)
@@ -182,40 +195,50 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         send = send.at[dst, rr].set(keys_l[order], mode="drop")
         wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
         zsend = zsend.at[dst, rr].set(size_l[order], mode="drop")
+        nsend = nsend.at[dst, rr].set(ten_l[order], mode="drop")
         src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
                                             mode="drop")
         # Requests beyond the per-destination capacity are NOT executed
         # this step (the caller sees hit=False and may reissue); count
         # them so skewed-trace hit ratios stay honest.
         n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
-        return send, wsend, zsend, src_slot, n_drop
+        return send, wsend, zsend, nsend, src_slot, n_drop
 
-    def step(state, clients, stats, keys_l, write_l, size_l):
+    def step(state, clients, stats, keys_l, write_l, size_l, ten_l):
         # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
         state = state._replace(
             n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
             hist_ctr=state.hist_ctr[0],
             clock=state.clock[0], weights=state.weights[0],
-            gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0])
+            gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
+            tenant_bytes=state.tenant_bytes[0],
+            tenant_budget=state.tenant_budget[0])
         stats = jax.tree.map(lambda x: x[0], stats)
         # --- per-round routing: group blocks per destination ------------
-        send, wsend, zsend, src_slot, n_drop = jax.vmap(route_one)(
-            keys_l, write_l, size_l)
+        # The sideband word carries size (bits 1-8) + tenant (bits 9+),
+        # so sizes are clipped to the engine's own 8-bit clamp (the
+        # access path clips identically — bit-identical results).
+        size_c = jnp.clip(size_l, 1, 254).astype(jnp.uint32)
+        send, wsend, zsend, nsend, src_slot, n_drop = jax.vmap(route_one)(
+            keys_l, write_l, size_c, ten_l)
         # --- the network: ONE exchange ships each destination's whole
         # [G, q] request group (RDMA doorbell-batching analogue); the op
-        # sideband (object size in 64B blocks << 1 | write bit) rides as
-        # a second u32 word of the SAME collective ----------------------
-        meta = (zsend.astype(jnp.uint32) << 1) | wsend.astype(jnp.uint32)
+        # sideband (tenant id << 9 | object size in 64B blocks << 1 |
+        # write bit) rides as a second u32 word of the SAME collective --
+        meta = ((nsend.astype(jnp.uint32) << 9)
+                | (zsend.astype(jnp.uint32) << 1)
+                | wsend.astype(jnp.uint32))
         packed = jnp.stack([send, meta], axis=-1)         # [G, S, q, 2]
         precv = jax.lax.all_to_all(packed, AXIS, 1, 1, tiled=True)
         recv = precv[..., 0].reshape(G, n_shards * q)
         wrecv = (precv[..., 1] & 1).astype(bool).reshape(G, n_shards * q)
-        zrecv = (precv[..., 1] >> 1).reshape(G, n_shards * q)
+        zrecv = ((precv[..., 1] >> 1) & 0xFF).reshape(G, n_shards * q)
+        nrecv = (precv[..., 1] >> 9).reshape(G, n_shards * q)
 
         # --- memory-pool side: one widened client-centric group step ----
         state, clients2, stats, res = access_group(
             local_cfg, state, _pad_clients(clients, n_shards * q), stats,
-            recv, is_write=wrecv, obj_size=zrecv)
+            recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv)
         stats = stats_add(stats, route_drops=jnp.sum(n_drop))
 
         # --- route replies back + merge hit masks ------------------------
@@ -254,7 +277,9 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
             hist_ctr=state.hist_ctr[None],
             clock=state.clock[None], weights=state.weights[None],
-            gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None])
+            gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
+            tenant_bytes=state.tenant_bytes[None],
+            tenant_budget=state.tenant_budget[None])
         stats = jax.tree.map(lambda x: x[None], stats)
         return state, clients, stats, hits
 
@@ -265,11 +290,13 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     fn = shard_map(
         step, mesh=mesh,
         in_specs=(spec_state, spec_clients, spec_stats,
-                  P(None, AXIS), P(None, AXIS), P(None, AXIS)),
+                  P(None, AXIS), P(None, AXIS), P(None, AXIS),
+                  P(None, AXIS)),
         out_specs=(spec_state, spec_clients, spec_stats, P(None, AXIS)),
         check_rep=False)
     state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
-                                     keys, is_write, obj_size)
+                                     keys, is_write, obj_size,
+                                     tenant.astype(jnp.uint32))
     if squeeze:
         hits = hits[0]
     return DMCache(state, clients, stats), hits

@@ -1,15 +1,19 @@
 """Elastic resource runtime: online pool resize, feedback autoscaling,
-and scenario-driven elasticity timelines (DESIGN.md §8)."""
+multi-tenant budget arbitration, and scenario-driven elasticity
+timelines (DESIGN.md §8, §11)."""
 
 from repro.elastic.controller import (Autoscaler, AutoscalerConfig, Decision,
-                                      WindowMetrics)
+                                      TenantArbiter, TenantArbiterConfig,
+                                      TenantWindow, WindowMetrics)
 from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
-                                  resize_memory, set_capacity)
+                                  resize_memory, set_capacity,
+                                  set_tenant_budgets)
 from repro.elastic.scenario import ScenarioResult, run_scenario
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "Decision", "WindowMetrics",
+    "TenantArbiter", "TenantArbiterConfig", "TenantWindow",
     "ResizeReport", "enforce_budget", "resize_lanes", "resize_memory",
-    "set_capacity",
+    "set_capacity", "set_tenant_budgets",
     "ScenarioResult", "run_scenario",
 ]

@@ -194,3 +194,88 @@ class Autoscaler:
         for k in self._streak:
             self._streak[k] = 0
         return Decision(action, target, reason)
+
+
+# ----------------------------------------------------------------------
+# Multi-tenant budget arbitration (DESIGN.md §11).
+# ----------------------------------------------------------------------
+
+class TenantWindow(NamedTuple):
+    """One tenant's view of an observation window."""
+
+    occupancy_blocks: int        # live blocks the tenant holds
+    budget_blocks: int           # its current budget
+    hit_rate: float              # canonical per-tenant hit ratio
+    miss_blocks: float = 0.0     # bytes (blocks) fetched on its misses —
+    #                            # the demand signal: unserved traffic
+
+
+@dataclasses.dataclass
+class TenantArbiterConfig:
+    floor_frac: float = 0.5      # guaranteed fraction of the fair share
+    #                            # (total/T) every tenant always keeps —
+    #                            # demand can never starve a tenant below
+    #                            # floor_frac * total / T blocks
+    ema: float = 0.5             # demand smoothing (1.0 = last window)
+    min_change_frac: float = 0.05  # re-split only when some tenant's
+    #                            # budget would move by more than this
+    #                            # fraction of the fair share (hysteresis)
+
+    def __post_init__(self):
+        assert 0.0 <= self.floor_frac <= 1.0
+        assert 0.0 < self.ema <= 1.0
+
+
+class TenantArbiter:
+    """Arbitrates the global byte budget across tenants.
+
+    Deterministic floor + demand-proportional split: every tenant keeps
+    a guaranteed floor (``floor_frac`` of the fair share), and the
+    remaining blocks split proportionally to a smoothed demand signal —
+    miss bytes (traffic the tenant's current budget failed to serve)
+    plus its live occupancy (what it proved it can use). A flash-crowd
+    tenant therefore *earns* budget from idle tenants without ever
+    pushing an active tenant below its floor; the hysteresis band keeps
+    a steady mix from oscillating."""
+
+    def __init__(self, cfg: Optional[TenantArbiterConfig] = None):
+        self.cfg = cfg or TenantArbiterConfig()
+        self._demand: Optional[list] = None
+        self.log: list = []
+
+    def propose(self, total_blocks: int,
+                windows: "list[TenantWindow]") -> Optional[tuple]:
+        """New per-tenant budgets summing to ``total_blocks``, or None
+        when the current split is within the hysteresis band."""
+        t = len(windows)
+        if t == 0:
+            return None
+        raw = [max(float(w.miss_blocks), 0.0)
+               + max(int(w.occupancy_blocks), 0) for w in windows]
+        if self._demand is None or len(self._demand) != t:
+            self._demand = raw
+        else:
+            a = self.cfg.ema
+            self._demand = [a * r + (1 - a) * d
+                            for r, d in zip(raw, self._demand)]
+        fair = total_blocks // t
+        floor = max(1, int(fair * self.cfg.floor_frac))
+        spare = total_blocks - floor * t
+        dsum = sum(self._demand)
+        if dsum <= 0:
+            shares = [spare // t] * t
+        else:
+            shares = [int(spare * d / dsum) for d in self._demand]
+        budgets = [floor + s for s in shares]
+        # Hand leftover rounding blocks to the hungriest tenants.
+        rest = total_blocks - sum(budgets)
+        order = sorted(range(t), key=lambda i: -self._demand[i])
+        for i in range(rest):
+            budgets[order[i % t]] += 1
+        budgets = tuple(budgets)
+        cur = tuple(int(w.budget_blocks) for w in windows)
+        band = max(1, int(fair * self.cfg.min_change_frac))
+        if all(abs(b - c) <= band for b, c in zip(budgets, cur)):
+            return None
+        self.log.append(budgets)
+        return budgets

@@ -39,7 +39,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core import priority as prio
 from repro.core.cache import _is_live, _md_view
 from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
-                              init_clients, stats_add)
+                              init_clients, split_tenant_budgets, stats_add)
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -63,9 +63,29 @@ def set_capacity(dm, new_global_capacity: int, n_shards: int):
     no data movement. The budget is denominated in 64B blocks (resizing
     by GB is ``gb * (1 << 30) // 64`` blocks). Shrinks done through this
     alone leave the pool over budget until organic evictions drain it —
-    use `resize_memory` for the online path."""
+    use `resize_memory` for the online path.
+
+    Multi-tenant pools: this rewrites only the *global* budget; the
+    per-tenant split is the arbiter's job (`set_tenant_budgets`)."""
     cap = jnp.full((n_shards,), new_global_capacity // n_shards, jnp.int32)
     return dm._replace(state=dm.state._replace(capacity_blocks=cap))
+
+
+def set_tenant_budgets(dm, budgets, n_shards: int):
+    """Rewrite the per-tenant byte budgets (64B blocks, global units):
+    one T-vector write per shard, no data movement — the multi-tenant
+    analogue of `set_capacity`, and the primitive the elastic arbiter
+    uses to re-split the pool across tenants online (DESIGN.md §11).
+    Shard shares sum exactly to the global budgets (a shard whose share
+    is 0 simply refuses that tenant's inserts — conservation over
+    convenience).
+
+    A tenant shrunk below its occupancy drains organically: its inserts
+    are gated off and its own budget-scoped evictions peel it back under
+    budget as it keeps issuing traffic."""
+    tb = jnp.asarray(split_tenant_budgets(budgets, n_shards))
+    tb = jax.device_put(tb, dm.state.tenant_budget.sharding)
+    return dm._replace(state=dm.state._replace(tenant_budget=tb))
 
 
 # ----------------------------------------------------------------------
@@ -83,7 +103,9 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
         hist_ctr=state.hist_ctr[0],
         clock=state.clock[0], weights=state.weights[0],
-        gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0])
+        gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
+        tenant_bytes=state.tenant_bytes[0],
+        tenant_budget=state.tenant_budget[0])
     stats = jax.tree.map(lambda x: x[0], stats)
 
     n_slots = state.key.shape[0]
@@ -94,7 +116,11 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     prios = prio.priorities(md, names)                       # [n, E]
     # Drain under the dominant expert — the policy the weight vector
     # currently trusts most (same signal opportunistic eviction samples).
-    e = jnp.argmax(state.weights)
+    # Per-tenant weight rows ([T, E]) vote as their tenant-mean; for the
+    # classic [E] vector this is exactly argmax(weights).
+    w_vec = state.weights if state.weights.ndim == 1 \
+        else state.weights.mean(axis=0)
+    e = jnp.argmax(w_vec)
     pe = jnp.where(live, jnp.take_along_axis(
         prios, jnp.full((n_slots, 1), e), axis=1)[:, 0], jnp.inf)
     order = jnp.argsort(pe)                                  # low prio first
@@ -122,11 +148,16 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
     ins2 = state.insert_ts.at[victims].set(bmap, mode="drop")
 
     n_evict = jnp.sum(take).astype(I32)
+    live2 = _is_live(size2)
+    n_tenants = state.tenant_bytes.shape[0]
     state = state._replace(
         size=size2, ptr=ptr2, insert_ts=ins2,
         n_cached=state.n_cached - n_evict,
         bytes_cached=jnp.sum(
-            jnp.where(_is_live(size2), size2, U32(0))).astype(I32),
+            jnp.where(live2, size2, U32(0))).astype(I32),
+        tenant_bytes=jnp.zeros((n_tenants,), I32).at[
+            state.tenant.astype(I32)].add(
+            jnp.where(live2, size2, U32(0)).astype(I32)),
         hist_ctr=state.hist_ctr + n_hist)
     # Cost accounting: the drain is a server-driven sweep — one sampling
     # read per victim batch, one CAS per victim, history writes + FAA.
@@ -139,7 +170,9 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
         hist_ctr=state.hist_ctr[None],
         clock=state.clock[None], weights=state.weights[None],
-        gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None])
+        gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
+        tenant_bytes=state.tenant_bytes[None],
+        tenant_budget=state.tenant_budget[None])
     stats = jax.tree.map(lambda x: x[None], stats)
     return state, stats, n_evict[None], freed.astype(I32)[None]
 
@@ -269,7 +302,6 @@ def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
         return dm, ResizeReport(0, 0, 0, 0)
     before = _snapshot(dm, n_shards, local_cfg.value_words)
 
-    E = local_cfg.n_experts
     local_slots = local_cfg.n_slots
     cl = jax.tree.map(np.asarray, dm.clients)
     per_shard = jax.tree.map(
@@ -281,7 +313,9 @@ def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
 
     if new_lanes_per_shard < old_lanes:
         # --- decommission flush (lanes [keep:]) -------------------------
-        pen_total = np.zeros((E,), np.float32)
+        # Penalty buffers are [E] classic / [T, E] per-tenant; the fold
+        # below is shape-generic (each expert row normalizes on axis -1).
+        pen_total = np.zeros(per_shard.penalty_acc.shape[2:], np.float32)
         for s in range(n_shards):
             fs = per_shard.fc_slot[s, keep:].reshape(-1)
             fd = per_shard.fc_delta[s, keep:].reshape(-1)
@@ -290,7 +324,8 @@ def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
             pen_total += per_shard.penalty_acc[s, keep:].sum(axis=0)
         lam = np.float32(local_cfg.learning_rate)
         w = weights[0] * np.exp(-lam * pen_total)
-        w = np.maximum(w / max(w.sum(), 1e-30), 1e-4)
+        w = np.maximum(
+            w / np.maximum(w.sum(axis=-1, keepdims=True), 1e-30), 1e-4)
         weights = np.broadcast_to(w, weights.shape).copy()
 
     fresh = jax.tree.map(
@@ -303,11 +338,13 @@ def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
         out[:, :keep] = old[:, :keep]
         return out.reshape((new_total,) + out.shape[2:])
     merged = jax.tree.map(merge, per_shard, fresh)
-    # New lanes adopt the (post-flush) global weights.
-    lw = merged.local_weights.reshape(n_shards, new_lanes_per_shard, E)
-    lw[:, keep:] = weights[:, None, :]
+    # New lanes adopt the (post-flush) global weights ([E] or [T, E]).
+    wtail = per_shard.local_weights.shape[2:]
+    lw = merged.local_weights.reshape(
+        (n_shards, new_lanes_per_shard) + wtail)
+    lw[:, keep:] = weights[:, None]
     merged = merged._replace(
-        local_weights=lw.reshape(new_total, E))
+        local_weights=lw.reshape((new_total,) + wtail))
 
     sh = NamedSharding(mesh, P(AXIS))
     clients = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sh),

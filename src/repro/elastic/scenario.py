@@ -32,11 +32,13 @@ import numpy as np
 from repro.baselines.systems import DittoModel
 from repro.core.types import CacheConfig, stats_delta, stats_sum
 from repro.dm.sharded_cache import dm_access, dm_make
-from repro.elastic.controller import Autoscaler, WindowMetrics
+from repro.elastic.controller import (Autoscaler, TenantArbiter,
+                                      TenantWindow, WindowMetrics)
 from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
-                                  resize_memory)
+                                  resize_memory, set_tenant_budgets)
 
 Event = Tuple[str, object]          # ("set_capacity"|"set_lanes"|
+#                                   #  "set_tenant_budgets"|
 #                                   #  "switch_workload", arg)
 
 
@@ -66,25 +68,41 @@ def _round_capacity(target: int, cfg: CacheConfig, n_shards: int) -> int:
     return (target // n_shards) * n_shards
 
 
-def _as_sized_stream(arg, default_sizes=None):
-    """A workload is a flat key stream or a (keys, sizes) pair."""
+def _as_sized_stream(arg, default_sizes=None, default_tenants=None):
+    """A workload is a flat key stream, a (keys, sizes) pair, or a
+    (keys, sizes, tenants) triple."""
+    tenants = None
     if isinstance(arg, tuple):
-        if default_sizes is not None:
+        if default_sizes is not None or default_tenants is not None:
             raise ValueError(
-                "pass sizes either inside the (keys, sizes) workload "
-                "tuple or as the sizes= kwarg, not both")
-        keys, sizes = arg
+                "pass sizes/tenants either inside the workload tuple or "
+                "as the sizes=/tenants= kwargs, not both")
+        if len(arg) == 2:
+            keys, sizes = arg
+        elif len(arg) == 3:
+            keys, sizes, tenants = arg
+            tenants = np.asarray(tenants, np.uint32)
+        else:
+            raise ValueError(
+                f"workload tuple must be (keys, sizes[, tenants]); "
+                f"got {len(arg)} entries")
         keys = np.asarray(keys, np.uint32)
         sizes = np.asarray(sizes, np.uint32)
     else:
         keys = np.asarray(arg, np.uint32)
-        if default_sizes is None:
-            return keys, np.ones_like(keys, np.uint32)
-        sizes = np.asarray(default_sizes, np.uint32)
+        sizes = (np.ones_like(keys, np.uint32) if default_sizes is None
+                 else np.asarray(default_sizes, np.uint32))
+        if default_tenants is not None:
+            tenants = np.asarray(default_tenants, np.uint32)
+    if tenants is None:
+        tenants = np.zeros_like(keys, np.uint32)
     if sizes.shape != keys.shape:
         raise ValueError(
             f"sizes shape {sizes.shape} != keys shape {keys.shape}")
-    return keys, sizes
+    if tenants.shape != keys.shape:
+        raise ValueError(
+            f"tenants shape {tenants.shape} != keys shape {keys.shape}")
+    return keys, sizes, tenants
 
 
 def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
@@ -92,30 +110,39 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                  horizon: Optional[int] = None, window: int = 32,
                  workloads: Optional[dict] = None,
                  controller: Optional[Autoscaler] = None,
+                 arbiter: Optional[TenantArbiter] = None,
                  offered_mops: Optional[Callable[[int], float]] = None,
                  seed: int = 0, drain_batch: int = 64,
                  drain_max_steps: int = 256,
-                 sizes=None) -> ScenarioResult:
+                 sizes=None, tenants=None) -> ScenarioResult:
     """Run a [T, lanes] trace through the DM cache under an event stream.
 
     Args:
       keys: flat u32 request stream (wraps around); the initial workload.
       timeline: [(step, (event, arg))] applied when the step begins.
-      workloads: name -> flat stream OR (stream, sizes) pair, for
-        ("switch_workload", name).
+      workloads: name -> flat stream OR (stream, sizes) pair OR
+        (stream, sizes, tenants) triple, for ("switch_workload", name).
       controller: optional Autoscaler whose window decisions become events.
+      arbiter: optional TenantArbiter (n_tenants > 1): at each window
+        boundary it sees per-tenant occupancy/hit-rate windows and its
+        proposed budget splits apply as ("set_tenant_budgets", ...)
+        events — the closed-loop arbitration of DESIGN.md §11.
       offered_mops: demand curve (step -> Mops) for compute decisions.
       sizes: optional per-request object sizes (64B blocks) aligned with
         `keys`; defaults to uniform 1-block objects.
+      tenants: optional per-request tenant ids aligned with `keys`;
+        defaults to tenant 0 everywhere.
     """
     mesh, dm, local = dm_make(cfg, n_shards, lanes_per_shard)
     step_fn = jax.jit(functools.partial(dm_access, mesh, local))
     model = DittoModel()
     workloads = workloads or {}
+    n_ten = cfg.n_tenants
 
-    stream, size_stream = _as_sized_stream(keys, sizes)
+    stream, size_stream, ten_stream = _as_sized_stream(keys, sizes, tenants)
     lanes = lanes_per_shard
     capacity = cfg.budget_blocks        # the byte budget dm_make enforces
+    tenant_budgets = list(cfg.tenant_budgets)
     if horizon is None:
         horizon = len(stream) // (n_shards * lanes)
     pending = sorted(timeline, key=lambda e: e[0])
@@ -126,10 +153,16 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
     win_mig = win_drain = 0
     win_events: list[str] = []
     last_stats = stats_sum(jax.tree.map(np.asarray, dm.stats))
+    # Per-tenant window counters, accumulated host-side from the routed
+    # hit masks (router-dropped requests count as misses here).
+    t_ops = np.zeros(n_ten, np.int64)
+    t_hits = np.zeros(n_ten, np.int64)
+    t_req_blocks = np.zeros(n_ten, np.float64)
+    t_hit_blocks = np.zeros(n_ten, np.float64)
 
     def apply_event(t: int, name: str, arg) -> None:
         nonlocal dm, lanes, capacity, win_mig, win_drain, stream, pos
-        nonlocal size_stream
+        nonlocal size_stream, ten_stream, tenant_budgets
         report = ResizeReport(0, 0, 0, 0)
         if name == "set_capacity":
             capacity = _round_capacity(int(arg), cfg, n_shards)
@@ -140,8 +173,11 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             lanes = max(1, int(arg))
             dm, report = resize_lanes(mesh, local, dm, lanes,
                                       seed=seed + 1 + t)
+        elif name == "set_tenant_budgets":
+            tenant_budgets = [int(b) for b in arg]
+            dm = set_tenant_budgets(dm, tenant_budgets, n_shards)
         elif name == "switch_workload":
-            stream, size_stream = _as_sized_stream(
+            stream, size_stream, ten_stream = _as_sized_stream(
                 workloads[arg] if isinstance(arg, str) else arg)
             pos = 0
         else:
@@ -160,8 +196,18 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         L = n_shards * lanes
         idx = (pos + np.arange(L)) % len(stream)
         pos += L
-        dm, _ = step_fn(dm, jnp.asarray(stream[idx]),
-                        obj_size=jnp.asarray(size_stream[idx]))
+        step_ten = np.minimum(ten_stream[idx], np.uint32(n_ten - 1))
+        step_sz = size_stream[idx]
+        dm, hits = step_fn(dm, jnp.asarray(stream[idx]),
+                           obj_size=jnp.asarray(step_sz),
+                           tenant=jnp.asarray(step_ten))
+        hn = np.asarray(hits, bool)
+        ops_mask = stream[idx] != 0
+        np.add.at(t_ops, step_ten, ops_mask)
+        np.add.at(t_hits, step_ten, hn & ops_mask)
+        np.add.at(t_req_blocks, step_ten, np.where(ops_mask, step_sz, 0))
+        np.add.at(t_hit_blocks, step_ten,
+                  np.where(hn & ops_mask, step_sz, 0))
 
         if (t + 1) % window == 0 or t == horizon - 1:
             # Maintenance sweep: hold the byte budget between events
@@ -180,16 +226,35 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 blocks_cached=blocks, capacity_blocks=capacity,
                 offered_mops=offered_mops(t) if offered_mops else None,
                 tput_mops=tput)
+            # Per-tenant occupancy (exact, from the pool) + hit rates
+            # (host-accumulated from routed hit masks).
+            ten_blocks = np.asarray(dm.state.tenant_bytes).sum(axis=0)
+            ten_hr = (t_hits / np.maximum(t_ops, 1)).tolist()
+            ten_bhr = (t_hit_blocks / np.maximum(t_req_blocks, 1)).tolist()
+            ten_windows = [TenantWindow(
+                occupancy_blocks=int(ten_blocks[i]),
+                budget_blocks=int(tenant_budgets[i]),
+                hit_rate=float(ten_hr[i]),
+                miss_blocks=float(t_req_blocks[i] - t_hit_blocks[i]))
+                for i in range(n_ten)]
             windows.append(dict(
                 t0=win_t0, t1=t + 1, capacity=capacity, lanes=L,
                 hit_rate=m.hit_rate, tput_mops=tput, n_cached=n_cached,
                 blocks_cached=blocks, bytes_cached=blocks * 64,
                 evictions=int(d.evictions), insert_drops=int(d.insert_drops),
                 migration_bytes=win_mig, drain_steps=win_drain,
-                enforced_evictions=enforced, events=list(win_events)))
+                enforced_evictions=enforced, events=list(win_events),
+                tenant_blocks=[int(b) for b in ten_blocks],
+                tenant_budget=[int(b) for b in tenant_budgets],
+                tenant_hit_rate=[round(float(h), 6) for h in ten_hr],
+                tenant_byte_hit_rate=[round(float(h), 6) for h in ten_bhr]))
             win_t0 = t + 1
             win_mig = win_drain = 0
             win_events = []
+            t_ops[:] = 0
+            t_hits[:] = 0
+            t_req_blocks[:] = 0.0
+            t_hit_blocks[:] = 0.0
 
             if controller is not None:
                 dec = controller.observe(m)
@@ -198,5 +263,9 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 elif dec.action in ("grow_lanes", "shrink_lanes"):
                     per_shard = -(-dec.target // n_shards)
                     apply_event(t + 1, "set_lanes", per_shard)
+            if arbiter is not None and n_ten > 1:
+                prop = arbiter.propose(capacity, ten_windows)
+                if prop is not None:
+                    apply_event(t + 1, "set_tenant_budgets", prop)
 
     return ScenarioResult(windows, events_log, dm)

@@ -50,19 +50,24 @@ def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
 
 
 def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
-                       must_evict, quota, ts, *, window=20, k=5,
-                       experts=("lru", "lfu"), block_b=None):
+                       must_evict, quota, ts, *, tenant=None, tfilt=None,
+                       window=20, k=5, experts=("lru", "lfu"), block_b=None):
     """Quota-extended fused eviction: chosen-expert ranking, victims
     peeled until their summed sizes cover the op's `quota` blocks (at
-    most k victims), each op evaluating time-dependent priorities at its
-    own per-request timestamp ``ts`` [B]. Table arrays are
-    f32[C + window] wrap-padded (`concatenate([x, x[:window]])`);
-    returned slots are mod C."""
+    most k victims; `quota` is i32[B] or a scalar broadcast), each op
+    evaluating time-dependent priorities at its own per-request
+    timestamp ``ts`` [B]. Table arrays are f32[C + window] wrap-padded
+    (`concatenate([x, x[:window]])`); returned slots are mod C.
+    ``tenant`` (wrap-padded owner column) + ``tfilt`` (i32[B], -1 = no
+    filter) scope a budget-enforcing op's sample to its own tenant's
+    slots (DESIGN.md §11)."""
     return ranked_eviction(
         size.astype(jnp.float32), insert_ts.astype(jnp.float32),
         last_ts.astype(jnp.float32), freq.astype(jnp.float32),
         offsets.astype(jnp.int32), e_choice.astype(jnp.int32),
         must_evict.astype(jnp.bool_), quota, ts.astype(jnp.float32),
+        None if tenant is None else tenant.astype(jnp.float32),
+        None if tfilt is None else tfilt.astype(jnp.int32),
         window=window, k=k, experts=tuple(experts),
         block_b=block_b or _auto_block_b(offsets.shape[0]),
         interpret=_interpret_default())

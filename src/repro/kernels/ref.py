@@ -67,25 +67,37 @@ def sampled_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
 
 def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
                         must_evict, quota, ts, *, window: int, k: int,
-                        experts):
+                        experts, tenant=None, tfilt=None):
     """Reference for the quota-extended ranked eviction kernel.
 
     Mirrors `core/cache.py` step 5: priorities over the sampled window
     (evaluated at each op's own timestamp ``ts`` [B]), chosen-expert
     stable ranking, and the byte-deficit take rule — an evicting op
     claims the shortest ranked prefix of sampled victims whose summed
-    sizes (64B blocks) reach its ``quota``, at most ``k`` victims.
-    Uniform 1-block objects recover the old take-`quota`-victims rule.
-    Table arrays are f32[C + window] wrap-padded; returned slots mod C.
+    sizes (64B blocks) reach its ``quota`` (scalar or per-op i32[B]),
+    at most ``k`` victims.  Uniform 1-block objects recover the old
+    take-`quota`-victims rule.  Table arrays are f32[C + window]
+    wrap-padded; returned slots mod C.
+
+    Multi-tenant scoping (DESIGN.md §11): ``tenant`` is the wrap-padded
+    per-slot owner column and ``tfilt`` i32[B] restricts op b's sample
+    to slots of that tenant (-1 = unfiltered shared-pool sample); both
+    default to the single-tenant behavior.
 
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.
       cand:    i32[B, E] per-expert argmin candidate.
     """
+    B = offsets.shape[0]
     C = size.shape[0] - window
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.float32), (B,))
     idx = offsets[:, None] + jnp.arange(window)[None, :]          # [B, W]
     s = size[idx]
     live = (s > 0) & (s < 255)
+    if tenant is not None and tfilt is not None:
+        tf = jnp.asarray(tfilt, jnp.int32)
+        live = live & ((tf[:, None] < 0)
+                       | (tenant[idx].astype(jnp.int32) == tf[:, None]))
     in_sample = live & (jnp.cumsum(live, axis=1) <= k)
     pr = priorities_ref(s, insert_ts[idx], last_ts[idx], freq[idx],
                         ts[:, None], experts)                     # [B, W, E]
@@ -103,7 +115,7 @@ def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
     # Exclusive prefix sum of freed blocks: take a victim while the
     # blocks freed *before* it still fall short of the quota.
     freed_before = jnp.cumsum(ranked_blocks, axis=1) - ranked_blocks
-    take = ((freed_before < jnp.asarray(quota, jnp.float32)) & ranked_live
+    take = ((freed_before < quota[:, None]) & ranked_live
             & must_evict[:, None])
     victims = jnp.where(take, ranked_idx % C, -1)[:, :k]
     return victims.astype(jnp.int32), cand.astype(jnp.int32)

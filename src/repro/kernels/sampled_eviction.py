@@ -87,21 +87,26 @@ def _kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref, choice_ref,
     cand_ref[...] = cand.astype(jnp.int32)
 
 
-def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
-                   choice_ref, evict_ref, quota_ref, ts_ref,
-                   victim_ref, cand_ref, *, window, k, experts, block_b,
-                   vectorized=False):
+def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, tenant_ref,
+                   off_ref, choice_ref, evict_ref, quota_ref, tfilt_ref,
+                   ts_ref, victim_ref, cand_ref, *, window, k, experts,
+                   block_b, vectorized=False):
     # Per-op logical timestamps: each request evaluates time-dependent
     # priorities (hyperbolic) at its own round's clock, so a batched
     # group decides exactly as its rounds would sequentially.
     clock = ts_ref[...][:, None]                            # [block_b, 1]
-    quota = quota_ref[0].astype(jnp.float32)                # blocks to free
+    quota = quota_ref[...].astype(jnp.float32)              # [block_b]
     offs = off_ref[...]                                     # [block_b]
-    s, ins, last, freq = _gather_windows(
-        (size_ref, ins_ref, last_ref, freq_ref), offs, window, block_b,
-        vectorized)
+    s, ins, last, freq, ten = _gather_windows(
+        (size_ref, ins_ref, last_ref, freq_ref, tenant_ref), offs, window,
+        block_b, vectorized)
 
     live = (s > 0.0) & (s < 255.0)
+    # Tenant-scoped sampling (DESIGN.md §11): an op with tfilt >= 0 only
+    # samples its own tenant's live objects; tfilt = -1 is the classic
+    # shared-pool sample.
+    tfilt = tfilt_ref[...].astype(jnp.float32)[:, None]     # [block_b, 1]
+    live = live & ((tfilt < 0.0) | (ten == tfilt))
     in_sample = live & (jnp.cumsum(live.astype(jnp.int32), axis=1) <= k)
     idx = offs[:, None] + jax.lax.broadcasted_iota(
         jnp.int32, (block_b, window), 1)
@@ -150,9 +155,9 @@ def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, off_ref,
 @functools.partial(jax.jit, static_argnames=("window", "k", "experts",
                                              "block_b", "interpret"))
 def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
-                    must_evict, quota, ts, *, window: int = 20,
-                    k: int = 5, experts=("lru", "lfu"), block_b: int = 8,
-                    interpret: bool = True):
+                    must_evict, quota, ts, tenant=None, tfilt=None, *,
+                    window: int = 20, k: int = 5, experts=("lru", "lfu"),
+                    block_b: int = 8, interpret: bool = True):
     """Quota-extended fused eviction decision (the production hot path).
 
     Like ``sampled_eviction`` but returns the chosen expert's full
@@ -168,9 +173,13 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
       offsets: i32[B] window starts in [0, C).
       e_choice: i32[B] chosen expert per op.
       must_evict: bool[B] — ops that must claim victims this step.
-      quota: i32[] per-op block budget to free (traced scalar; with
-        uniform 1-block objects this is the old victim count).
+      quota: per-op block budget to free — i32[B] or a scalar broadcast
+        (with uniform 1-block objects this is the old victim count).
       ts: f32[B] per-op logical clock (the op's round timestamp).
+      tenant: f32[C + window] wrap-padded per-slot owner column; None =
+        single-tenant (all zeros).
+      tfilt: i32[B] tenant filter per op — a budget-scoped op samples
+        only slots of that tenant; -1 (or None) = shared-pool sample.
     Returns:
       victims: i32[B, k] ranked victim slots, -1 where not taken.
       cand:    i32[B, E] per-expert argmin candidate (undefined where the
@@ -178,12 +187,19 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
     """
     B = offsets.shape[0]
     C = size.shape[0] - window
+    if tenant is None:
+        tenant = jnp.zeros_like(size)
+    if tfilt is None:
+        tfilt = jnp.full((B,), -1, jnp.int32)
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (B,))
     pad = (-B) % block_b
     if pad:
         offsets = jnp.concatenate([offsets, jnp.zeros((pad,), offsets.dtype)])
         e_choice = jnp.concatenate([e_choice, jnp.zeros((pad,), e_choice.dtype)])
         must_evict = jnp.concatenate(
             [must_evict, jnp.zeros((pad,), must_evict.dtype)])
+        quota = jnp.concatenate([quota, jnp.zeros((pad,), quota.dtype)])
+        tfilt = jnp.concatenate([tfilt, jnp.full((pad,), -1, tfilt.dtype)])
         ts = jnp.concatenate([ts, jnp.zeros((pad,), ts.dtype)])
     Bp = B + pad
     e = len(experts)
@@ -197,17 +213,16 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
         fn,
         grid=grid,
         in_specs=[table_spec, table_spec, table_spec, table_spec,
-                  lane_spec, lane_spec, lane_spec,
-                  pl.BlockSpec((1,), lambda i: (0,)),
+                  table_spec,
+                  lane_spec, lane_spec, lane_spec, lane_spec, lane_spec,
                   lane_spec],
         out_specs=(pl.BlockSpec((block_b, k), lambda i: (i, 0)),
                    pl.BlockSpec((block_b, e), lambda i: (i, 0))),
         out_shape=(jax.ShapeDtypeStruct((Bp, k), jnp.int32),
                    jax.ShapeDtypeStruct((Bp, e), jnp.int32)),
         interpret=interpret,
-    )(size, insert_ts, last_ts, freq, offsets, e_choice, must_evict,
-      jnp.asarray(quota, jnp.int32).reshape(1),
-      ts.astype(jnp.float32))
+    )(size, insert_ts, last_ts, freq, tenant, offsets, e_choice, must_evict,
+      quota, tfilt.astype(jnp.int32), ts.astype(jnp.float32))
     victims = jnp.where(victims >= 0, victims % C, -1)
     return victims[:B], (cand % C)[:B]
 

@@ -1,11 +1,13 @@
-from repro.workloads.gen import (changing_workload, interleave, lfu_friendly,
-                                 loop_window, lru_friendly, mixed_apps,
-                                 object_sizes, scan_polluted_zipf,
-                                 sized_zipfian, ycsb, zipfian)
+from repro.workloads.gen import (changing_workload, flash_crowd, interleave,
+                                 lfu_friendly, loop_window, lru_friendly,
+                                 mixed_apps, object_sizes,
+                                 scan_polluted_zipf, shifting_zipf,
+                                 sized_zipfian, tenant_mix, ycsb, zipfian)
 from repro.workloads.plan import GroupPlan, plan_groups
 
 __all__ = [
-    "GroupPlan", "changing_workload", "interleave", "lfu_friendly",
-    "loop_window", "lru_friendly", "mixed_apps", "object_sizes",
-    "plan_groups", "scan_polluted_zipf", "sized_zipfian", "ycsb", "zipfian",
+    "GroupPlan", "changing_workload", "flash_crowd", "interleave",
+    "lfu_friendly", "loop_window", "lru_friendly", "mixed_apps",
+    "object_sizes", "plan_groups", "scan_polluted_zipf", "shifting_zipf",
+    "sized_zipfian", "tenant_mix", "ycsb", "zipfian",
 ]

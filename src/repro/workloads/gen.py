@@ -175,6 +175,121 @@ def mixed_apps(n_requests: int, n_clients: int, lru_fraction: float,
     return np.stack(cols, axis=1)
 
 
+def flash_crowd(n_requests: int, hot_keys: int = 512, theta: float = 1.1,
+                start_frac: float = 0.5, stop_frac: float = 1.0,
+                background_every: int = 8, background_keys: int = 20_000,
+                seed: int = 0) -> np.ndarray:
+    """A tenant that idles, then stampedes (the cloud-service flash
+    crowd): before ``start_frac`` of the trace it issues sparse uniform
+    background traffic (one real request every ``background_every``
+    slots, the rest no-op pads), then floods dense zipfian traffic over
+    a small hot set until ``stop_frac``.  The burst is what stresses
+    isolation: un-partitioned, it evicts every other tenant's working
+    set; partitioned, it can only churn its own budget."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros(n_requests, np.uint32)
+    t0 = int(n_requests * start_frac)
+    t1 = min(n_requests, int(n_requests * stop_frac))
+    bg = np.arange(n_requests) % background_every == 0
+    n_bg = int(bg[:t0].sum())
+    out[:t0][bg[:t0]] = rng.integers(
+        hot_keys + 1, hot_keys + 1 + background_keys, n_bg).astype(np.uint32)
+    n_burst = t1 - t0
+    if n_burst > 0:
+        p = _zipf_probs(hot_keys, theta)
+        out[t0:t1] = (rng.choice(hot_keys, size=n_burst, p=p) + 1).astype(
+            np.uint32)
+    if t1 < n_requests:  # post-burst: back to background
+        tail = bg[t1:]
+        out[t1:][tail] = rng.integers(
+            hot_keys + 1, hot_keys + 1 + background_keys,
+            int(tail.sum())).astype(np.uint32)
+    return out
+
+
+def shifting_zipf(n_requests: int, n_keys: int = 4_000, n_phases: int = 4,
+                  theta: float = 1.0, seed: int = 0) -> np.ndarray:
+    """Zipfian traffic whose hot set rotates every phase (the shifting
+    tenant): same marginal skew, disjointly permuted rank->key maps, so
+    a cache that adapted to one phase's hot set re-learns on the next."""
+    rng = np.random.default_rng(seed)
+    p = _zipf_probs(n_keys, theta)
+    out = np.empty(n_requests, np.uint32)
+    per = max(1, n_requests // n_phases)
+    for ph in range((n_requests + per - 1) // per):
+        lo, hi = ph * per, min((ph + 1) * per, n_requests)
+        perm = rng.permutation(n_keys)
+        ranks = rng.choice(n_keys, size=hi - lo, p=p)
+        out[lo:hi] = (perm[ranks] + 1).astype(np.uint32)
+    return out
+
+
+# Per-tenant workload kinds for `tenant_mix`.
+_TENANT_KINDS = ("zipf", "scan", "flash", "shift")
+
+
+def tenant_mix(n_requests: int, n_clients: int, specs, seed: int = 0,
+               key_stride: int = 1 << 21):
+    """Build a multi-tenant [T, C] request mix (DESIGN.md §11).
+
+    Each spec describes one tenant: a kind string or a dict
+    ``{"kind": ..., "lanes": int, "max_blocks": int, **kind_kwargs}``.
+    Kinds: ``zipf`` (steady zipfian service), ``scan`` (one-touch scan
+    bursts over a zipf core, LFU-friendly), ``flash`` (idle ->
+    flash-crowd stampede), ``shift`` (hot set rotates per phase).
+    Client lanes are assigned to tenants contiguously (spec order);
+    key spaces are disjoint (tenant t's keys offset by ``t * key_stride``).
+
+    Returns:
+      (keys u32[T, C], tenants u32[T, C], sizes u32[T, C]) — sizes are 1
+      block unless a spec sets ``max_blocks`` (then hash-sized per key).
+    """
+    specs = [dict(kind=s) if isinstance(s, str) else dict(s) for s in specs]
+    for s in specs:
+        if s.get("kind") not in _TENANT_KINDS:
+            raise ValueError(
+                f"unknown tenant kind {s.get('kind')!r}; "
+                f"expected one of {_TENANT_KINDS}")
+    auto = max(1, n_clients // len(specs))
+    lanes = [int(s.pop("lanes", auto)) for s in specs]
+    if sum(lanes) != n_clients:
+        raise ValueError(
+            f"tenant lane counts {lanes} must sum to n_clients={n_clients}")
+    T = n_requests // n_clients
+    key_cols, ten_cols, size_cols = [], [], []
+    for tid, (s, nl) in enumerate(zip(specs, lanes)):
+        kind = s.pop("kind")
+        max_blocks = int(s.pop("max_blocks", 1))
+        n = T * nl
+        sd = seed * 1009 + tid
+        if kind == "zipf":
+            flat = zipfian(n, s.pop("n_keys", 4_000),
+                           theta=s.pop("theta", 0.99), seed=sd, **s)
+        elif kind == "scan":
+            flat = scan_polluted_zipf(n, seed=sd, **s)
+        elif kind == "flash":
+            flat = flash_crowd(n, seed=sd, **s)
+        else:  # shift
+            flat = shifting_zipf(n, seed=sd, **s)
+        # Disjoint key spaces; key 0 (no-op idle slots) stays 0.
+        flat = np.where(flat != 0,
+                        flat + np.uint32(tid * key_stride), 0).astype(
+            np.uint32)
+        k2 = flat[:T * nl].reshape(T, nl)
+        key_cols.append(k2)
+        ten_cols.append(np.full((T, nl), tid, np.uint32))
+        if max_blocks > 1:
+            sz = object_sizes(k2.reshape(-1), max_blocks=max_blocks,
+                              seed=sd + 7).reshape(T, nl)
+            sz = np.where(k2 != 0, sz, 1).astype(np.uint32)
+        else:
+            sz = np.ones((T, nl), np.uint32)
+        size_cols.append(sz)
+    return (np.concatenate(key_cols, axis=1),
+            np.concatenate(ten_cols, axis=1),
+            np.concatenate(size_cols, axis=1))
+
+
 def interleave(keys: np.ndarray, n_clients: int,
                is_write: np.ndarray | None = None):
     """Shape a flat stream into [T, C] concurrent-client steps.

@@ -56,6 +56,8 @@ class GroupPlan(NamedTuple):
     src_t: np.ndarray       # i32[NG, G, C] original trace row, -1 = pad
     batch: int              # G, rounds per group
     scope: str              # "strict" | "lane"
+    tenants: Optional[np.ndarray] = None  # u32[NG, G, C] tenant ids
+    #                       # (None for single-tenant plans)
 
     @property
     def n_groups(self) -> int:
@@ -103,6 +105,7 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
                 scope: str = "strict",
                 is_write: Optional[np.ndarray] = None,
                 sizes: Optional[np.ndarray] = None,
+                tenants: Optional[np.ndarray] = None,
                 lookahead: Optional[int] = None) -> GroupPlan:
     """Greedily pack a [T, C] trace into bucket-disjoint [G, C] groups.
 
@@ -114,7 +117,8 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
         (global, the commutativity invariant); "lane" — per-lane bucket
         disjointness with read-read reuse (denser packing, concurrent
         cross-lane races and within-lane read combining).
-      is_write / sizes: optional [T, C] op tensors carried through.
+      is_write / sizes / tenants: optional [T, C] op tensors carried
+        through (tenants: per-request tenant ids, DESIGN.md §11).
       lookahead: how far past a blocked request a lane may schedule
         ahead (default 4*batch).  Blocked requests and all later
         requests to the same key park until the next group.
@@ -129,17 +133,21 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
         is_write = np.zeros((T, C), bool)
     if sizes is None:
         sizes = np.ones((T, C), np.uint32)
+    carry_tenants = tenants is not None
+    if tenants is None:
+        tenants = np.zeros((T, C), np.uint32)
     look = max(4 * batch, 16) if lookahead is None else max(1, int(lookahead))
     bucket = _buckets_of(keys, n_buckets)
 
     # Per-lane remaining request rows, in program order.
     rem = [[t for t in range(T) if keys[t, c] != 0] for c in range(C)]
 
-    g_keys, g_wr, g_sz, g_src = [], [], [], []
+    g_keys, g_wr, g_sz, g_tn, g_src = [], [], [], [], []
     while any(rem):
         gk = np.zeros((batch, C), np.uint32)
         gw = np.zeros((batch, C), bool)
         gs = np.ones((batch, C), np.uint32)
+        gn = np.zeros((batch, C), np.uint32)
         gt = np.full((batch, C), -1, np.int64)
         bucket_round = {}                      # strict: bucket -> round
         # lane scope: bucket -> True if any scheduled op on it wrote
@@ -176,6 +184,7 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
                     gk[r, c] = keys[t, c]
                     gw[r, c] = is_write[t, c]
                     gs[r, c] = sizes[t, c]
+                    gn[r, c] = tenants[t, c]
                     gt[r, c] = t
                     taken[c].add(j)
                     break
@@ -185,12 +194,15 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
         g_keys.append(gk)
         g_wr.append(gw)
         g_sz.append(gs)
+        g_tn.append(gn)
         g_src.append(gt)
 
     if not g_keys:  # empty trace
         g_keys = [np.zeros((batch, C), np.uint32)]
         g_wr = [np.zeros((batch, C), bool)]
         g_sz = [np.ones((batch, C), np.uint32)]
+        g_tn = [np.zeros((batch, C), np.uint32)]
         g_src = [np.full((batch, C), -1, np.int64)]
     return GroupPlan(np.stack(g_keys), np.stack(g_wr), np.stack(g_sz),
-                     np.stack(g_src).astype(np.int32), batch, scope)
+                     np.stack(g_src).astype(np.int32), batch, scope,
+                     np.stack(g_tn) if carry_tenants else None)

@@ -1,0 +1,149 @@
+"""Edge cases of the CI benchmark-regression gate
+(scripts/bench_compare.py): first-run/row-churn tolerance, the
+us_per_call median gate, and the derived-quality (>2pp hit-ratio drop)
+gate added for the bench-history CI pipeline.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+pytestmark = pytest.mark.fast
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "scripts", "bench_compare.py"))
+bc = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bc)
+
+
+def rec(device="cpu", **rows):
+    return {"sha": "abc", "time": "t", "device": device,
+            "rows": [dict(name=k, **v) for k, v in rows.items()]}
+
+
+def test_first_run_tolerated():
+    regs, lines = bc.compare([rec(r=dict(us_per_call=10.0))], 0.3)
+    assert regs == []
+    assert "first run" in lines[0]
+
+
+def test_no_same_device_baseline_tolerated():
+    hist = [rec(device="tpu", r=dict(us_per_call=1.0)),
+            rec(device="cpu", r=dict(us_per_call=99.0))]
+    regs, lines = bc.compare(hist, 0.3)
+    assert regs == []
+    assert "no previous record" in lines[0]
+
+
+def test_timing_regression_fails_and_median_resists_outliers():
+    base = [rec(r=dict(us_per_call=v)) for v in (10.0, 1.0, 10.0, 10.0)]
+    # median(10,1,10,10)=10: one freak-fast record must not redden 12us
+    regs, _ = bc.compare(base + [rec(r=dict(us_per_call=12.0))], 0.3)
+    assert regs == []
+    regs, _ = bc.compare(base + [rec(r=dict(us_per_call=14.0))], 0.3)
+    assert [r[0] for r in regs] == ["r"]
+
+
+def test_new_and_removed_rows_tolerated():
+    hist = [rec(old=dict(us_per_call=10.0)),
+            rec(new=dict(us_per_call=10.0))]
+    regs, lines = bc.compare(hist, 0.3)
+    assert regs == []
+    joined = "\n".join(lines)
+    assert "(removed)" in joined and "new" in joined
+
+
+def test_quality_drop_fails():
+    hist = [rec(r=dict(us_per_call=10.0, hit_rate=0.80)),
+            rec(r=dict(us_per_call=10.0, hit_rate=0.81)),
+            rec(r=dict(us_per_call=10.0, hit_rate=0.76))]
+    regs, lines = bc.compare(hist, 0.3)
+    assert [r[0] for r in regs] == ["r:hit_rate"]
+    assert any("QUALITY DROP" in ln for ln in lines)
+
+
+def test_quality_drop_within_tolerance_passes():
+    hist = [rec(r=dict(us_per_call=10.0, byte_hit_rate=0.80)),
+            rec(r=dict(us_per_call=10.0, byte_hit_rate=0.785))]
+    regs, _ = bc.compare(hist, 0.3)
+    assert regs == []
+
+
+def test_quality_gates_summary_rows_without_timing():
+    """Rows with us_per_call == 0 (derived/summary rows) skip the timing
+    gate but their quality metrics still gate."""
+    hist = [rec(r=dict(us_per_call=0.0, hit_ratio=0.9)),
+            rec(r=dict(us_per_call=0.0, hit_ratio=0.5))]
+    regs, _ = bc.compare(hist, 0.3)
+    assert [r[0] for r in regs] == ["r:hit_ratio"]
+
+
+def test_quality_new_metric_tolerated():
+    hist = [rec(r=dict(us_per_call=10.0)),
+            rec(r=dict(us_per_call=10.0, hit_rate=0.1))]
+    regs, _ = bc.compare(hist, 0.3)
+    assert regs == []
+
+
+def test_prior_record_count_reported():
+    hist = [rec(r=dict(us_per_call=10.0)) for _ in range(3)]
+    _, lines = bc.compare(hist, 0.3)
+    assert "gating against 2 prior same-device record(s)" in lines[0]
+
+
+def test_main_gate_and_trend(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_x.json"
+    hist = [rec(r=dict(us_per_call=10.0, hit_rate=0.8)),
+            rec(r=dict(us_per_call=10.0, hit_rate=0.5))]
+    path.write_text(json.dumps(hist))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert bc.main(["--file", str(path)]) == 1      # quality drop
+    md = summary.read_text()
+    assert "BENCH_x.json" in md and "hit_rate" in md
+    # threshold-only failure
+    path.write_text(json.dumps([rec(r=dict(us_per_call=10.0)),
+                                rec(r=dict(us_per_call=20.0))]))
+    assert bc.main(["--file", str(path)]) == 1
+    assert bc.main(["--file", str(path), "--threshold", "2.0"]) == 0
+
+
+def test_main_missing_file_tolerated(tmp_path):
+    assert bc.main(["--file", str(tmp_path / "nope.json")]) == 0
+
+
+def test_merge_histories_appends_only_newer_records(tmp_path):
+    """Artifact seeding must not clobber committed history: records at
+    or before the committed tip never come back (a git-side prune of a
+    poisoned record sticks), while CI appends newer than the tip do."""
+    art = tmp_path / "art"
+    art.mkdir()
+    r1 = {"sha": "a", "time": "2026-01-01T00:00:00+0000", "rows": []}
+    r2 = {"sha": "b", "time": "2026-01-02T00:00:00+0000", "rows": []}
+    r3 = {"sha": "c", "time": "2026-01-03T00:00:00+0000", "rows": []}
+    r4 = {"sha": "d", "time": "2026-01-04T00:00:00+0000", "rows": []}
+    # artifact carries r2 (pruned from git as poisoned) + new append r4
+    (art / "BENCH_x.json").write_text(json.dumps([r1, r2, r3, r4]))
+    (tmp_path / "BENCH_x.json").write_text(json.dumps([r1, r3]))
+    bc.merge_histories(str(art), repo_root=str(tmp_path))
+    merged = json.loads((tmp_path / "BENCH_x.json").read_text())
+    assert merged == [r1, r3, r4]      # r4 appended, r2 NOT resurrected
+    # no committed file yet: artifact history seeds it wholesale
+    (art / "BENCH_y.json").write_text(json.dumps([r1, r2]))
+    bc.merge_histories(str(art), repo_root=str(tmp_path))
+    assert json.loads((tmp_path / "BENCH_y.json").read_text()) == [r1, r2]
+
+
+def test_merge_histories_rotates(tmp_path):
+    art = tmp_path / "art"
+    art.mkdir()
+    recs = [{"sha": str(i), "time": f"2026-01-01T00:00:{i:02d}+0000",
+             "rows": []} for i in range(60)]
+    (art / "BENCH_z.json").write_text(json.dumps(recs))
+    bc.merge_histories(str(art), repo_root=str(tmp_path))
+    out = json.loads((tmp_path / "BENCH_z.json").read_text())
+    assert len(out) == 50 and out[-1] == recs[-1]

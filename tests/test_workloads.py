@@ -6,8 +6,9 @@ import pytest
 pytestmark = pytest.mark.fast
 
 from repro.baselines import simulate_policy
-from repro.workloads import (interleave, lfu_friendly, loop_window,
-                             lru_friendly, mixed_apps, object_sizes, ycsb,
+from repro.workloads import (flash_crowd, interleave, lfu_friendly,
+                             loop_window, lru_friendly, mixed_apps,
+                             object_sizes, shifting_zipf, tenant_mix, ycsb,
                              zipfian)
 
 
@@ -77,3 +78,47 @@ def test_object_sizes_deterministic_per_key():
     s = object_sizes(keys)
     assert s[0] == s[1] and s[2] == s[3]
     assert s.min() >= 1 and s.max() <= 8
+
+
+def test_flash_crowd_idles_then_stampedes():
+    tr = flash_crowd(10_000, hot_keys=256, start_frac=0.5, seed=3)
+    pre, post = tr[:5_000], tr[5_000:]
+    assert (pre == 0).mean() > 0.7          # mostly idle no-op slots
+    assert (post != 0).all()                # dense burst
+    assert (post <= 256).all()              # ...over the hot set only
+    # determinism
+    np.testing.assert_array_equal(tr, flash_crowd(
+        10_000, hot_keys=256, start_frac=0.5, seed=3))
+
+
+def test_shifting_zipf_rotates_hot_set():
+    tr = shifting_zipf(20_000, n_keys=2_000, n_phases=2, seed=1)
+    a, b = tr[:10_000], tr[10_000:]
+    top_a = set(np.argsort(np.bincount(a))[-20:].tolist())
+    top_b = set(np.argsort(np.bincount(b))[-20:].tolist())
+    assert len(top_a & top_b) < 10          # hot sets mostly disjoint
+
+
+def test_tenant_mix_shapes_ids_and_disjoint_keys():
+    keys, ten, sizes = tenant_mix(
+        1_200, 6,
+        (dict(kind="zipf", lanes=2), dict(kind="scan", lanes=2),
+         dict(kind="flash", max_blocks=4, lanes=2)), seed=0)
+    assert keys.shape == ten.shape == sizes.shape == (200, 6)
+    np.testing.assert_array_equal(np.unique(ten), [0, 1, 2])
+    # lanes are contiguous per tenant, key spaces disjoint
+    for t in range(3):
+        lanes = ten[0] == t
+        ks = keys[:, lanes].reshape(-1)
+        ks = ks[ks != 0]
+        assert ((ks - 1) // (1 << 21) == t).all()
+    assert sizes.min() >= 1
+    assert (sizes[keys == 0] == 1).all()    # pads carry unit size
+
+
+def test_tenant_mix_validates_specs():
+    with pytest.raises(ValueError, match="kind"):
+        tenant_mix(100, 2, (dict(kind="nope"),))
+    with pytest.raises(ValueError, match="sum"):
+        tenant_mix(100, 4, (dict(kind="zipf", lanes=1),
+                            dict(kind="zipf", lanes=1)))
