@@ -1,4 +1,4 @@
-.PHONY: check check-fast test
+.PHONY: check check-fast test lint
 
 check:
 	scripts/check.sh
@@ -8,3 +8,9 @@ check-fast:
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# Static analysis only: ruff (if installed) + the dittolint fast passes
+# (AST rules + GroupPlan conflict checker). See DESIGN.md §12.
+lint:
+	@command -v ruff >/dev/null 2>&1 && ruff check . || true
+	python scripts/dittolint.py --plan-check

@@ -45,6 +45,12 @@ else
     echo "== lint: ruff not installed, skipping (CI runs it)"
 fi
 
+# dittolint analysis phase (DESIGN.md §12). Fast lane: AST rules + the
+# static GroupPlan conflict checker (milliseconds-to-seconds).  The full
+# lane adds the jaxpr audit of every entry point and a checkified
+# sanitize=True smoke trace (minutes — it traces real configs).
+phase dittolint python scripts/dittolint.py --plan-check
+
 phase tier-1 python -m pytest "${PYTEST_ARGS[@]}"
 
 if [[ "$FAST" == "1" ]]; then
@@ -64,6 +70,9 @@ if [[ "$FAST" == "1" ]]; then
     echo "check --fast: OK"
     exit 0
 fi
+
+phase dittolint-full python scripts/dittolint.py --no-astlint \
+    --jaxpr --sanitize-smoke
 
 phase bench-elasticity python benchmarks/elasticity.py --quick
 phase bench-adaptivity python -c \

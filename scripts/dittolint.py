@@ -1,0 +1,354 @@
+#!/usr/bin/env python
+"""dittolint CLI — the repo's static-analysis + sanitizer front door.
+
+Modes (combinable; any finding in any selected pass fails the run):
+
+  (default)          AST lint (DL0xx) over ``src/`` or the given paths.
+  --jaxpr            Closed-jaxpr audit (JX0xx) of the production entry
+                     points across backend x width x tenant configs.
+  --plan-check       Build representative strict/lane ``GroupPlan``s and
+                     prove SAN006 conflict freedom; also negative-controls
+                     the checker against a seeded overlapping plan (a
+                     vacuous checker fails the run too).
+  --sanitize-smoke   Run a seeded trace with ``sanitize=True`` through
+                     ``checkify`` (clean must pass) and assert
+                     ``sanitize=False`` stays bit-identical.
+  --demo RULE        Run RULE's seeded-violation fixture; exits 1 when the
+                     rule fires (the expected outcome), 3 when it fails to
+                     fire (the fixture or rule is broken).
+  --selftest         Run every rule's fixture; exits 0 only if EVERY rule
+                     fires on its fixture.
+  --list-rules       Print the full rule catalog.
+
+Exit codes: 0 clean / selftest-pass, 1 findings (or a fixture firing
+under --demo), 2 usage error, 3 broken fixture under --demo.
+
+See DESIGN.md §12 for the rule catalog and the per-line escape
+(``# dittolint: disable=RULE``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+# ----------------------------------------------------------------------
+# Seeded-violation fixtures: one per rule, each REQUIRED to fire.
+# ----------------------------------------------------------------------
+
+_AST_FIXTURES = {
+    # DL001 is scoped to traced modules, DL003 to hot-path modules — the
+    # fixture paths place each snippet inside its rule's scope.
+    "DL001": ("src/repro/core/_fixture.py",
+              "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    if jnp.sum(x) > 0:\n"
+              "        return 1\n"
+              "    return 0\n"),
+    "DL002": ("src/repro/core/_fixture.py",
+              "import jax\n"
+              "def f(key):\n"
+              "    a = jax.random.uniform(key)\n"
+              "    b = jax.random.uniform(key)\n"
+              "    return a + b\n"),
+    "DL003": ("src/repro/kernels/_fixture.py",
+              "import jax.numpy as jnp\n"
+              "def rank(x):\n"
+              "    return jnp.argsort(x)\n"),
+    "DL004": ("src/repro/core/_fixture.py",
+              "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    return x.astype(jnp.float64)\n"),
+    "DL005": ("src/repro/kernels/_fixture.py",
+              "def run(x, interpret=True):\n"
+              "    return x\n"),
+    "DL006": ("src/repro/core/_fixture.py",
+              "def f(x, acc=[]):\n"
+              "    acc.append(x)\n"
+              "    return acc\n"),
+}
+
+
+def _demo_ast(rule: str):
+    from repro.analysis import astlint
+    path, src = _AST_FIXTURES[rule]
+    return [str(f) for f in astlint.lint_source(src, path)
+            if f.rule == rule]
+
+
+def _demo_jaxpr(rule: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_audit
+
+    if rule == "JX001":
+        from jax.experimental import enable_x64
+        with enable_x64():
+            closed = jax.make_jaxpr(
+                lambda x: x.astype(jnp.float64) * 2)(
+                    jnp.ones((4,), jnp.float32))
+        found = jaxpr_audit.audit_closed(closed, "fixture")
+    elif rule == "JX002":
+        closed = jax.make_jaxpr(
+            lambda x: x.astype(jnp.float32).astype(jnp.uint32))(
+                jnp.ones((4,), jnp.uint32))
+        found = jaxpr_audit.audit_closed(closed, "fixture")
+    elif rule == "JX003":
+        def f(x):
+            jax.debug.print("x = {x}", x=x)
+            return x * 2
+        found = jaxpr_audit.audit_closed(
+            jax.make_jaxpr(f)(jnp.ones((4,))), "fixture")
+    elif rule == "JX004":
+        closed = jax.make_jaxpr(
+            lambda x: (x * 2, jnp.zeros((2,), jnp.float32)))(jnp.ones((4,)))
+        found = jaxpr_audit.audit_closed(closed, "fixture")
+    elif rule == "JX005":
+        # Weak-type flapping: two compiles for one shape signature.
+        n = jaxpr_audit.count_retraces(
+            lambda x: x * 2, [(1.0,), (jnp.float32(1.0),)])
+        found = ([jaxpr_audit.Finding(
+            "JX005", "fixture",
+            f"{n} compiles for 1 shape signature (weak-type flap)")]
+            if n > 1 else [])
+    else:
+        raise KeyError(rule)
+    return [str(f) for f in found if f.rule == rule]
+
+
+def _san_fixture_state():
+    import jax.numpy as jnp
+
+    from repro.core.cache import access_group
+    from repro.core.types import (CacheConfig, init_cache, init_clients,
+                                  init_stats)
+    cfg = CacheConfig(n_buckets=64, assoc=4, capacity=64, hist_len=64,
+                      n_tenants=2, tenant_budget_blocks=(32, 32),
+                      sanitize=True)
+    st = init_cache(cfg)
+    cl = init_clients(cfg, 4)
+    sa = init_stats()
+    keys = (jnp.arange(1, 33, dtype=jnp.uint32).reshape(8, 4) % 7) + 1
+    import dataclasses
+    plain = dataclasses.replace(cfg, sanitize=False)
+    st, cl, sa, _ = access_group(
+        plain, st, cl, sa, keys, is_write=jnp.ones((8, 4), bool),
+        tenant=jnp.zeros((8, 4), jnp.uint32))
+    return cfg, st, cl
+
+
+def _demo_sanitize(rule: str):
+    import jax.numpy as jnp
+
+    from repro.analysis import sanitize
+
+    if rule == "SAN006":
+        import numpy as np
+
+        from repro.workloads.plan import GroupPlan
+        k = np.full((1, 2, 1), 7, np.uint32)     # same key both rounds
+        plan = GroupPlan(k, np.zeros_like(k, bool),
+                         np.ones_like(k), np.zeros_like(k, np.int32),
+                         batch=2, scope="strict")
+        return [str(f) for f in sanitize.check_plan(plan, 64)
+                if f.rule == rule]
+
+    cfg, st, cl = _san_fixture_state()
+    if rule == "SAN001":
+        bad = st._replace(bytes_cached=st.bytes_cached + 5)
+        probe = lambda: sanitize.check_state(cfg, bad, rules=[rule])
+    elif rule == "SAN002":
+        over = st._replace(
+            tenant_bytes=st.tenant_budget + 1,
+            bytes_cached=jnp.sum(st.tenant_budget + 1))
+        probe = lambda: sanitize.check_step(cfg, st, over, rules=[rule])
+    elif rule == "SAN003":
+        key2 = st.key.at[0].set(7).at[1].set(7)
+        sz2 = st.size.at[0].set(1).at[1].set(1)
+        bad = st._replace(key=key2, size=sz2)
+        probe = lambda: sanitize.check_state(cfg, bad, rules=[rule])
+    elif rule == "SAN004":
+        bad = st._replace(weights=st.weights * 0 + 2.0)
+        probe = lambda: sanitize.check_state(cfg, bad, rules=[rule])
+    elif rule == "SAN005":
+        sz2 = st.size.at[0].set(1)
+        ts2 = st.last_ts.at[0].set(st.clock + 5)
+        bad = st._replace(size=sz2, last_ts=ts2)
+        probe = lambda: sanitize.check_state(cfg, bad, rules=[rule])
+    else:
+        raise KeyError(rule)
+    try:
+        probe()
+    except Exception as e:  # checkify raises on the failed check
+        msg = str(e)
+        return [msg.splitlines()[0]] if rule in msg else []
+    return []
+
+
+def run_demo(rule: str):
+    if rule.startswith("DL"):
+        return _demo_ast(rule)
+    if rule.startswith("JX"):
+        return _demo_jaxpr(rule)
+    if rule.startswith("SAN"):
+        return _demo_sanitize(rule)
+    raise KeyError(rule)
+
+
+# ----------------------------------------------------------------------
+# Tree-level passes.
+# ----------------------------------------------------------------------
+
+def run_astlint(paths):
+    from repro.analysis import astlint
+    return [str(f) for f in astlint.lint_paths(paths)]
+
+
+def run_jaxpr():
+    from repro.analysis import jaxpr_audit
+    return [str(f) for f in jaxpr_audit.audit_entry_points()]
+
+
+def run_plan_check():
+    import numpy as np
+
+    from repro.analysis import sanitize
+    from repro.workloads.plan import GroupPlan, plan_groups
+
+    rng = np.random.RandomState(0)
+    # zipf-ish skew: hot keys collide on buckets, exercising both scopes.
+    keys = (rng.zipf(1.3, size=(64, 8)) % 97 + 1).astype(np.uint32)
+    wr = rng.rand(64, 8) < 0.3
+    out = []
+    for scope in ("strict", "lane"):
+        plan = plan_groups(keys, 64, 4, scope=scope, is_write=wr)
+        out += [str(f) for f in sanitize.check_plan(plan, 64)]
+    # Negative control: the checker must CATCH a seeded overlap, or the
+    # green result above proves nothing.
+    k = np.full((1, 2, 1), 7, np.uint32)
+    seeded = GroupPlan(k, np.zeros_like(k, bool), np.ones_like(k),
+                       np.zeros_like(k, np.int32), batch=2, scope="strict")
+    if not sanitize.check_plan(seeded, 64):
+        out.append("plan-check: SAN006 negative control did NOT fire "
+                   "(checker is vacuous)")
+    return out
+
+
+def run_sanitize_smoke():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import sanitize
+    from repro.core.cache import run_trace
+    from repro.core.types import (CacheConfig, init_cache, init_clients,
+                                  init_stats)
+
+    out = []
+    for backend in ("reference", "fused"):
+        cfg = CacheConfig(n_buckets=64, assoc=4, capacity=64, hist_len=64,
+                          backend=backend)
+        scfg = dataclasses.replace(cfg, sanitize=True)
+        st, cl = init_cache(cfg), init_clients(cfg, 4)
+        keys = (jnp.arange(1, 161, dtype=jnp.uint32).reshape(40, 4) % 23) + 1
+        wr = jnp.ones_like(keys, dtype=bool).at[20:].set(False)
+        try:
+            res_s = sanitize.checked(
+                lambda: run_trace(scfg, st, cl, keys, wr))()
+        except Exception as e:
+            out.append(f"sanitize-smoke[{backend}]: clean trace raised: "
+                       f"{str(e).splitlines()[0]}")
+            continue
+        res_p = run_trace(cfg, st, cl, keys, wr)
+        for a, b in zip(jax.tree.leaves(res_s), jax.tree.leaves(res_p)):
+            if not bool((a == b).all()):
+                out.append(f"sanitize-smoke[{backend}]: sanitize=True "
+                           "changed a decision (must be bit-identical)")
+                break
+    _ = init_stats  # traced indirectly via run_trace
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="dittolint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", help="files/dirs to AST-lint "
+                    "(default: src/)")
+    ap.add_argument("--jaxpr", action="store_true")
+    ap.add_argument("--plan-check", action="store_true")
+    ap.add_argument("--sanitize-smoke", action="store_true")
+    ap.add_argument("--no-astlint", action="store_true",
+                    help="skip the AST pass (run only the selected extras)")
+    ap.add_argument("--demo", metavar="RULE")
+    ap.add_argument("--selftest", action="store_true")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import all_rules
+    rules = all_rules()
+
+    if args.list_rules:
+        for rid in sorted(rules):
+            print(f"{rid}  {rules[rid]}")
+        return 0
+
+    if args.demo:
+        rid = args.demo.upper()
+        if rid not in rules:
+            print(f"unknown rule {rid!r}", file=sys.stderr)
+            return 2
+        found = run_demo(rid)
+        for f in found:
+            print(f)
+        if found:
+            print(f"--demo {rid}: rule fired on its seeded fixture "
+                  "(exit 1, as intended)")
+            return 1
+        print(f"--demo {rid}: rule did NOT fire — fixture or rule broken",
+              file=sys.stderr)
+        return 3
+
+    if args.selftest:
+        broken = []
+        for rid in sorted(rules):
+            fired = run_demo(rid)
+            status = "fired" if fired else "DID NOT FIRE"
+            print(f"{rid}: {status}")
+            if not fired:
+                broken.append(rid)
+        if broken:
+            print(f"selftest FAILED: {', '.join(broken)}", file=sys.stderr)
+            return 1
+        print(f"selftest OK: all {len(rules)} rules fire on their fixtures")
+        return 0
+
+    findings = []
+    if not args.no_astlint:
+        paths = args.paths or [str(ROOT / "src")]
+        findings += run_astlint(paths)
+    if args.plan_check:
+        findings += run_plan_check()
+    if args.jaxpr:
+        findings += run_jaxpr()
+    if args.sanitize_smoke:
+        findings += run_sanitize_smoke()
+
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"dittolint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("dittolint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""dittolint — repo-specific static analysis + invariant sanitizer.
+
+Three passes guard the cache hot path (DESIGN.md §12):
+
+  1. ``astlint``      — AST rules over ``src/`` (DL0xx): traced-value
+     branching, PRNG key reuse, argsort in hot-path modules, 64-bit
+     promotion, ``interpret=True`` outside tests, mutable defaults.
+  2. ``jaxpr_audit``  — closed-jaxpr audit of the real entry points
+     (JX0xx): wide dtypes, convert churn, host callbacks, dead outputs,
+     jit retrace budgets.
+  3. ``sanitize``     — checkify-based runtime invariant checks
+     (SAN0xx) behind ``CacheConfig.sanitize=True``, plus the static
+     ``GroupPlan`` conflict checker.
+
+CLI: ``scripts/dittolint.py`` (wired into ``scripts/check.sh`` and CI).
+Every rule has an id and a per-line escape:
+``# dittolint: disable=RULE``.
+"""
+
+from repro.analysis import astlint, jaxpr_audit, sanitize
+
+__all__ = ["astlint", "jaxpr_audit", "sanitize", "all_rules"]
+
+
+def all_rules() -> dict:
+    """The full rule catalog: id -> one-line description."""
+    cat = {}
+    cat.update(astlint.RULES)
+    cat.update(jaxpr_audit.RULES)
+    cat.update(sanitize.RULES)
+    return cat

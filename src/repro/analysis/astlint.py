@@ -1,0 +1,326 @@
+"""dittolint pass 1: repo-specific AST lint over ``src/``.
+
+Every rule encodes a bug class this repo has actually shipped (or nearly
+shipped) and that review keeps re-catching by hand:
+
+  DL001  Python branch on a traced value — an ``if``/``while``/``assert``
+         whose test calls into ``jnp``/``lax`` raises a
+         ``TracerBoolConversionError`` under jit (use ``jnp.where`` /
+         ``lax.cond``).  Scoped to the traced hot-path modules.
+  DL002  PRNG key consumed twice — the same key name passed to two
+         ``jax.random`` draws without an intervening
+         ``split``/``fold_in`` reassignment (lane-correlated RNG, the
+         PR 2 eviction-correlation bug class).
+  DL003  ``argsort``/``sort``/``top_k`` in a hot-path module — the repo
+         standard is argmin-peel ranking (PR 3 desorts; a sort is O(W
+         log W) serialized vs K fused argmin passes).
+  DL004  64-bit promotion in traced code — explicit ``jnp.float64`` /
+         ``jnp.int64`` / ``jnp.uint64``, or ``astype(float)`` /
+         ``astype(int)`` / ``dtype=float`` weak-type escapes that flip
+         wide under ``jax_enable_x64``.
+  DL005  ``interpret=True`` at a Pallas call site (or as a signature
+         default) outside ``tests/`` — silently runs the Python
+         interpreter on TPU.
+  DL006  Mutable default — a list/dict/set literal as a function-arg
+         default or a dataclass field (shared-state config aliasing).
+
+Escape hatch: append ``# dittolint: disable=DL003`` (comma-separate for
+several rules) to the flagged line.  Use it to *document* an intentional
+exception, never to silence a real bug.
+
+All detection is stdlib ``ast`` — no imports of the linted code — so the
+pass runs in milliseconds and can lint broken trees.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, NamedTuple, Set
+
+RULES: Dict[str, str] = {
+    "DL001": "python branch on a traced value (jnp/lax call in an "
+             "if/while/assert test; use jnp.where or lax.cond)",
+    "DL002": "PRNG key consumed more than once without split/fold_in "
+             "re-threading (correlated random streams)",
+    "DL003": "argsort/sort/top_k in a hot-path module (repo standard: "
+             "argmin-peel ranking)",
+    "DL004": "explicit 64-bit dtype or weak python dtype in traced code "
+             "(f64/i64 upcast under x64)",
+    "DL005": "interpret=True at a Pallas call site or signature default "
+             "outside tests (silent interpreter on TPU)",
+    "DL006": "mutable default (list/dict/set) in a function signature or "
+             "dataclass field",
+}
+
+# Modules where code is jit-traced: DL001 applies here.
+TRACED_MODULES = ("/core/", "/kernels/", "/dm/", "/elastic/resize")
+# The latency-critical subset: DL003 applies here.
+HOT_PATH_MODULES = ("/core/cache.py", "/core/fc_cache.py",
+                    "/core/priority.py", "/kernels/", "/dm/")
+
+_DISABLE_RE = re.compile(r"#.*dittolint:\s*disable=([A-Z0-9_]+(?:\s*,\s*[A-Z0-9_]+)*)")
+
+# jax.random functions that CONSUME a key (one key, one consumption).
+# fold_in/PRNGKey derive fresh streams and are exempt.
+_KEY_CONSUMERS = frozenset({
+    "uniform", "normal", "randint", "bernoulli", "choice", "permutation",
+    "shuffle", "gamma", "beta", "exponential", "poisson", "categorical",
+    "truncated_normal", "gumbel", "laplace", "dirichlet", "split",
+})
+
+_SORT_NAMES = frozenset({"argsort", "sort", "lexsort", "top_k", "sort_key_val"})
+
+_WIDE_DTYPES = frozenset({"float64", "int64", "uint64"})
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain ('' when not a plain chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_traced_call(node: ast.AST) -> bool:
+    """True if the subtree calls into jnp / jax.numpy / lax / jax.lax."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            root = chain.split(".")[0] if chain else ""
+            if root in ("jnp", "lax") or chain.startswith(("jax.numpy.",
+                                                           "jax.lax.")):
+                return True
+    return False
+
+
+def _disabled(source: str) -> Dict[int, Set[str]]:
+    """Line -> suppressed rule ids.  A ``# dittolint: disable=RULE``
+    comment covers its own line and the line after it (a comment *line*
+    naturally shields the statement below, like pylint's disable-next)."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        return _attr_chain(node.func) in ("list", "dict", "set")
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, in_tests: bool):
+        self.path = path
+        self.in_tests = in_tests
+        norm = "/" + path.replace("\\", "/")
+        self.traced = any(m in norm for m in TRACED_MODULES)
+        self.hot = any(m in norm for m in HOT_PATH_MODULES)
+        self.findings: List[Finding] = []
+
+    def flag(self, node: ast.AST, rule: str, detail: str = "") -> None:
+        msg = RULES[rule] + (f" [{detail}]" if detail else "")
+        self.findings.append(Finding(self.path, node.lineno, rule, msg))
+
+    # -- DL001: traced-value branching --------------------------------
+    def _check_branch(self, node, test) -> None:
+        if self.traced and _is_traced_call(test):
+            self.flag(node, "DL001")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_branch(node, node.test)
+        self.generic_visit(node)
+
+    # -- DL002: key reuse / DL006: mutable defaults --------------------
+    def _check_key_reuse(self, fn) -> None:
+        """Linear line-ordered scan of one function body: the same name
+        consumed twice by jax.random draws without a reassignment in
+        between is a reuse.  Branch-insensitive by design — a disable
+        comment documents the rare both-arms case."""
+        def walk_shallow(node):
+            """ast.walk that does not descend into nested defs (they are
+            scanned on their own visit, with their own key scope)."""
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue
+                yield child
+                yield from walk_shallow(child)
+
+        events = []  # (line, order, kind, name, node)
+        for sub in walk_shallow(fn):
+            if isinstance(sub, ast.Call):
+                chain = _attr_chain(sub.func)
+                leaf = chain.rsplit(".", 1)[-1]
+                if (chain.startswith(("jax.random.", "jrandom.", "random."))
+                        and leaf in _KEY_CONSUMERS and sub.args
+                        and isinstance(sub.args[0], ast.Name)):
+                    events.append((sub.lineno, 0, "consume",
+                                   sub.args[0].id, sub))
+            for tgt in self._assign_targets(sub):
+                # Same-line assigns sort AFTER consumes: in
+                # `key, sub = jax.random.split(key)` the RHS consumes the
+                # old key before the LHS rebinds it (python evaluation
+                # order) — the canonical re-threading idiom must not flag.
+                events.append((tgt.lineno, 1, "assign", tgt.id, tgt))
+        events.sort(key=lambda e: (e[0], e[1]))
+        consumed: Dict[str, int] = {}
+        for line, _, kind, name, node in events:
+            if kind == "assign":
+                consumed.pop(name, None)
+            elif name in consumed:
+                self.flag(node, "DL002",
+                          f"key '{name}' already consumed on line "
+                          f"{consumed[name]}")
+            else:
+                consumed[name] = line
+
+    @staticmethod
+    def _assign_targets(node):
+        tgts = []
+        if isinstance(node, ast.Assign):
+            tgts = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.For)):
+            tgts = [node.target]
+        out = []
+        for t in tgts:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    out.append(sub)
+        return out
+
+    def _check_fn(self, node) -> None:
+        self._check_key_reuse(node)
+        args = node.args
+        defaults = list(args.defaults) + list(args.kw_defaults)
+        names = [a.arg for a in args.args][-len(args.defaults):] if \
+            args.defaults else []
+        names += [a.arg for a in args.kwonlyargs]
+        for name, d in zip(names, defaults):
+            if d is None:
+                continue
+            if _is_mutable_literal(d):
+                self.flag(d, "DL006", f"arg '{name}'")
+            # DL005: `interpret: ... = True` signature default.
+            if (name == "interpret" and isinstance(d, ast.Constant)
+                    and d.value is True and not self.in_tests):
+                self.flag(d, "DL005", "signature default")
+
+    def visit_FunctionDef(self, node) -> None:
+        self._check_fn(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self._check_fn(node)
+        self.generic_visit(node)
+
+    # -- DL006: dataclass fields --------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        deco = {_attr_chain(d).rsplit(".", 1)[-1] for d in node.decorator_list
+                if not isinstance(d, ast.Call)}
+        deco |= {_attr_chain(d.func).rsplit(".", 1)[-1]
+                 for d in node.decorator_list if isinstance(d, ast.Call)}
+        if "dataclass" in deco:
+            for stmt in node.body:
+                val = getattr(stmt, "value", None)
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign)) and \
+                        val is not None and _is_mutable_literal(val):
+                    self.flag(stmt, "DL006", f"dataclass '{node.name}'")
+        self.generic_visit(node)
+
+    # -- DL003 / DL004 / DL005 on calls & attributes -------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        leaf = chain.rsplit(".", 1)[-1] if chain else ""
+        if self.hot and leaf in _SORT_NAMES:
+            self.flag(node, "DL003", chain or leaf)
+        # DL004: .astype(float) / .astype(int) and dtype=float/int kwargs.
+        if leaf == "astype" and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Name) and a.id in ("float", "int"):
+                self.flag(node, "DL004", f"astype({a.id})")
+        root = chain.split(".")[0] if chain else ""
+        for kw in node.keywords:
+            if kw.arg == "dtype" and isinstance(kw.value, ast.Name) and \
+                    kw.value.id in ("float", "int") and \
+                    root in ("jnp", "jax", "lax"):
+                self.flag(node, "DL004", f"dtype={kw.value.id}")
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True and not self.in_tests:
+                self.flag(node, "DL005", chain or "call")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        chain = _attr_chain(node)
+        if chain:
+            root, _, leaf = chain.partition(".")
+            leaf = leaf.rsplit(".", 1)[-1]
+            if leaf in _WIDE_DTYPES and root in ("jnp", "jax"):
+                self.flag(node, "DL004", chain)
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one python source string; returns enabled findings only."""
+    in_tests = "tests/" in path.replace("\\", "/") or \
+        Path(path).name.startswith("test_")
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, "DL000",
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(path, in_tests)
+    linter.visit(tree)
+    off = _disabled(source)
+    return sorted(
+        (f for f in linter.findings if f.rule not in off.get(f.line, ())),
+        key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths) -> List[Finding]:
+    """Lint every ``.py`` file under the given files/directories
+    (``tests/`` excluded — fixtures there violate rules on purpose)."""
+    findings: List[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            rel = f.as_posix()
+            if "/tests/" in f"/{rel}" or f.name.startswith("test_"):
+                continue
+            findings.extend(lint_source(f.read_text(), rel))
+    return findings

@@ -1,0 +1,264 @@
+"""dittolint pass 3: checkify-based runtime invariant sanitizer.
+
+``CacheConfig.sanitize=True`` arms jittable invariant checks inside
+``access_group`` (both backends — the checks sit *outside* the
+backend-specific hot path, so they guard the fused kernels too):
+
+  SAN001  ``bytes_cached`` == sum of live slot sizes and ``n_cached`` ==
+          count of live slots (the byte-exactness contract).
+  SAN002  tenant accounting: ``tenant_bytes`` columns equal the
+          per-tenant live-size sums, their total equals
+          ``bytes_cached``, and (step-level) no step may *grow* a
+          tenant past its hard budget — occupancy above a freshly
+          shrunken budget is legal, growing while over it is not.
+  SAN003  no duplicate live keys within a bucket (the probe returns one
+          slot per key; a duplicate silently shadows the other copy).
+  SAN004  expert-weight rows (global and per-client local) live on the
+          simplex: non-negative, each row summing to 1.
+  SAN005  timestamp sanity: live slots satisfy
+          ``insert_ts <= last_ts <= clock``, and (step-level) the
+          logical clock never runs backwards.
+  SAN006  ``GroupPlan`` conflict freedom (static, host-side): strict
+          plans keep every bucket in at most one round per group; lane
+          plans may only revisit a lane's bucket when every op involved
+          is a read; per-lane per-key program order is preserved.
+
+Checks run eagerly (raising immediately) outside jit; under ``jax.jit``
+or ``lax.scan`` wrap the caller with :func:`checked` to functionalize
+them (``checkify``) and re-raise on exit.  ``sanitize=False`` adds no
+equations anywhere — the default path stays bit-identical.
+
+NB: timestamp checks assume the u32 logical clock has not wrapped
+(2**32 batched steps); the sanitizer is a debug mode, not a production
+contract for month-long traces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import checkify
+
+from repro.core.types import CacheConfig, CacheState
+
+RULES: Dict[str, str] = {
+    "SAN001": "bytes_cached/n_cached disagree with the live slots "
+              "(byte-exactness drift)",
+    "SAN002": "tenant accounting broken (column sums) or a step grew a "
+              "tenant past its hard budget",
+    "SAN003": "duplicate live key within a bucket",
+    "SAN004": "expert-weight row off the simplex (negative or not "
+              "summing to 1)",
+    "SAN005": "timestamp order violated (insert_ts <= last_ts <= clock, "
+              "clock monotone)",
+    "SAN006": "GroupPlan conflict: bucket revisited across rounds "
+              "(strict), write-write reuse (lane), or program order "
+              "broken",
+}
+
+_SIMPLEX_TOL = 1e-3
+
+
+def _want(rules: Optional[Sequence[str]], rid: str) -> bool:
+    return rules is None or rid in rules
+
+
+def _is_live(size: jnp.ndarray) -> jnp.ndarray:
+    from repro.core.types import SIZE_EMPTY, SIZE_HISTORY
+    return (size != SIZE_EMPTY) & (size != SIZE_HISTORY)
+
+
+def check_state(cfg: CacheConfig, state: CacheState, *,
+                rules: Optional[Sequence[str]] = None) -> None:
+    """Jittable single-state invariant checks (SAN001-SAN005).
+
+    ``rules`` filters to a subset of rule ids (checkify reports only the
+    first failed check, so mutation tests probe one rule at a time)."""
+    live = _is_live(state.size)
+    live_sizes = jnp.where(live, state.size, jnp.uint32(0))
+
+    if _want(rules, "SAN001"):
+        checkify.check(
+            state.bytes_cached == jnp.sum(live_sizes).astype(jnp.int32),
+            "SAN001: bytes_cached != sum of live slot sizes")
+        checkify.check(
+            state.n_cached == jnp.sum(live).astype(jnp.int32),
+            "SAN001: n_cached != count of live slots")
+
+    if _want(rules, "SAN002"):
+        per_t = jnp.zeros((cfg.n_tenants,), jnp.int32)
+        if cfg.n_tenants > 1:
+            per_t = per_t.at[
+                jnp.where(live, state.tenant, jnp.uint32(0)).astype(
+                    jnp.int32)].add(live_sizes.astype(jnp.int32))
+        else:
+            per_t = jnp.sum(live_sizes).astype(jnp.int32)[None]
+        checkify.check(
+            jnp.all(state.tenant_bytes == per_t),
+            "SAN002: tenant_bytes != per-tenant live-size sums")
+        checkify.check(
+            jnp.sum(state.tenant_bytes) == state.bytes_cached,
+            "SAN002: sum(tenant_bytes) != bytes_cached")
+
+    if _want(rules, "SAN003"):
+        k = state.key.reshape(cfg.n_buckets, cfg.assoc)
+        lv = live.reshape(cfg.n_buckets, cfg.assoc)
+        same = (k[:, :, None] == k[:, None, :]) \
+            & lv[:, :, None] & lv[:, None, :]
+        dup = same & ~jnp.eye(cfg.assoc, dtype=bool)[None]
+        checkify.check(~jnp.any(dup),
+                       "SAN003: duplicate live key within a bucket")
+
+    if _want(rules, "SAN004"):
+        for name, w in (("state.weights", state.weights),):
+            checkify.check(
+                jnp.all(w >= 0.0),
+                f"SAN004: negative expert weight in {name}")
+            checkify.check(
+                jnp.all(jnp.abs(jnp.sum(w, axis=-1) - 1.0) < _SIMPLEX_TOL),
+                f"SAN004: {name} row does not sum to 1")
+
+    if _want(rules, "SAN005"):
+        ok = ~live | ((state.insert_ts <= state.last_ts)
+                      & (state.last_ts <= state.clock))
+        checkify.check(
+            jnp.all(ok),
+            "SAN005: live slot violates insert_ts <= last_ts <= clock")
+
+
+def check_clients(cfg: CacheConfig, clients, *,
+                  rules: Optional[Sequence[str]] = None) -> None:
+    """SAN004 for per-client local weight rows (split out of
+    :func:`check_state` so state-only callers need no ClientState)."""
+    if _want(rules, "SAN004"):
+        w = clients.local_weights
+        checkify.check(jnp.all(w >= 0.0),
+                       "SAN004: negative expert weight in local_weights")
+        checkify.check(
+            jnp.all(jnp.abs(jnp.sum(w, axis=-1) - 1.0) < _SIMPLEX_TOL),
+            "SAN004: local_weights row does not sum to 1")
+
+
+def check_step(cfg: CacheConfig, old: CacheState, new: CacheState, *,
+               rules: Optional[Sequence[str]] = None) -> None:
+    """Jittable transition checks between consecutive states."""
+    if _want(rules, "SAN005"):
+        checkify.check(new.clock >= old.clock,
+                       "SAN005: logical clock ran backwards")
+    if _want(rules, "SAN002"):
+        # Hard non-overshoot: a step may keep a tenant above a freshly
+        # shrunken budget (the arbiter re-splits online) but may never
+        # GROW one past it.  Same contract for the global byte budget.
+        cap = jnp.maximum(new.tenant_budget, old.tenant_bytes)
+        checkify.check(
+            jnp.all(new.tenant_bytes <= cap),
+            "SAN002: step grew a tenant past its hard budget")
+        gcap = jnp.maximum(new.capacity_blocks, old.bytes_cached)
+        checkify.check(new.bytes_cached <= gcap,
+                       "SAN002: step grew the pool past capacity_blocks")
+
+
+def checked(fn: Callable) -> Callable:
+    """Wrap ``fn`` so its ``checkify.check`` calls work under jit/scan:
+    functionalizes user checks and re-raises the first failure on exit.
+
+    Apply OUTERMOST: ``checked(jax.jit(f))`` works, ``jax.jit(checked(f))``
+    does not (``checkify`` must functionalize the checks before any other
+    staging transform sees them)."""
+    cfn = checkify.checkify(fn, errors=checkify.user_checks)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        err, out = cfn(*args, **kwargs)
+        checkify.check_error(err)
+        return out
+
+    return wrapper
+
+
+# ----------------------------------------------------------------------
+# SAN006: the static GroupPlan conflict checker (host-side numpy).
+# ----------------------------------------------------------------------
+
+class PlanFinding(NamedTuple):
+    rule: str
+    group: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"group {self.group}: {self.rule} {self.msg}"
+
+
+def check_plan(plan, n_buckets: int) -> List[PlanFinding]:
+    """Prove (or refute) the planner's commutativity invariant on a
+    concrete ``GroupPlan`` before execution.
+
+    strict: within a group any bucket is touched by at most one round.
+    lane:   a lane may revisit its own bucket across rounds only when
+            every op involved is a read (read-read reuse).
+    both:   per-lane per-key program order (``src_t``) is preserved.
+    """
+    from repro.workloads.plan import _buckets_of
+    findings: List[PlanFinding] = []
+    keys = np.asarray(plan.keys)
+    wr = np.asarray(plan.is_write)
+    src = np.asarray(plan.src_t)
+    ng, g, c = keys.shape
+    bucket = _buckets_of(keys, n_buckets)
+    real = keys != 0
+    for gi in range(ng):
+        if plan.scope == "strict":
+            owner: Dict[int, int] = {}
+            for r in range(g):
+                for l in range(c):
+                    if not real[gi, r, l]:
+                        continue
+                    b = int(bucket[gi, r, l])
+                    if owner.setdefault(b, r) != r:
+                        findings.append(PlanFinding(
+                            "SAN006", gi,
+                            f"bucket {b} touched in rounds "
+                            f"{owner[b]} and {r} (strict scope)"))
+        else:
+            for l in range(c):
+                seen: Dict[int, bool] = {}
+                for r in range(g):
+                    if not real[gi, r, l]:
+                        continue
+                    b = int(bucket[gi, r, l])
+                    w = bool(wr[gi, r, l])
+                    if b in seen and (seen[b] or w):
+                        findings.append(PlanFinding(
+                            "SAN006", gi,
+                            f"lane {l} revisits bucket {b} at round {r} "
+                            f"with a write involved (lane scope)"))
+                    seen[b] = seen.get(b, False) or w
+    # Program order: a lane's requests for the same key keep their
+    # original trace order across the whole plan.
+    for l in range(c):
+        last_src: Dict[int, int] = {}
+        for gi in range(ng):
+            for r in range(g):
+                if not real[gi, r, l] or src[gi, r, l] < 0:
+                    continue
+                k = int(keys[gi, r, l])
+                t = int(src[gi, r, l])
+                if k in last_src and t < last_src[k]:
+                    findings.append(PlanFinding(
+                        "SAN006", gi,
+                        f"lane {l} key {k} scheduled out of program "
+                        f"order (row {t} after row {last_src[k]})"))
+                last_src[k] = t
+    return findings
+
+
+def assert_plan_ok(plan, n_buckets: int) -> None:
+    """Raise ``ValueError`` listing every SAN006 finding (empty = pass)."""
+    findings = check_plan(plan, n_buckets)
+    if findings:
+        raise ValueError(
+            "GroupPlan conflict check failed:\n  "
+            + "\n  ".join(str(f) for f in findings))

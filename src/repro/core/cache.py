@@ -568,7 +568,10 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     write_hist = ev_winner & adaptive & cfg.use_lwh
     hist_rank = jnp.cumsum(write_hist.astype(I32)) - 1
     hist_ids = (state.hist_ctr + hist_rank.astype(U32))
-    n_hist = jnp.sum(write_hist).astype(U32)
+    # i32 here: the FAA tally at step 7 consumes it as i32, so converting
+    # to U32 eagerly would force an i32->u32->i32 round-trip (JX002); the
+    # one u32 consumer (hist_ctr) converts at its use site instead.
+    n_hist = jnp.sum(write_hist)
 
     # ------------------------------------------------------------------
     # 6. Apply: inserts, then evictions (so a victim that collides with a
@@ -621,7 +624,7 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         key=key2, key_hash=khash2, size=sizes3, ptr=ptr3,
         insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
         n_cached=n_cached, bytes_cached=bytes_cached,
-        hist_ctr=state.hist_ctr + n_hist,
+        hist_ctr=state.hist_ctr + n_hist.astype(U32),
         clock=clock + U32(G), weights=gw if multi else gw[0], gds_L=gds_L,
         capacity_blocks=state.capacity_blocks,
         tenant=tenant2, tenant_bytes=tenant_bytes,
@@ -684,6 +687,15 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
         insert_drops=jnp.sum(dropped), fc_hits=n_fc_hit,
         fc_flushes=n_faa, weight_syncs=n_sync)
+
+    if cfg.sanitize:
+        # dittolint pass 3 (DESIGN.md §12): jittable invariant checks on
+        # the state this step produced.  Static gate — sanitize=False
+        # traces to exactly the same jaxpr as before the hook existed.
+        from repro.analysis import sanitize as _sanitize
+        _sanitize.check_state(cfg, new_state)
+        _sanitize.check_clients(cfg, new_clients)
+        _sanitize.check_step(cfg, state, new_state)
 
     return new_state, new_clients, stats, AccessResult(
         hit=hit.reshape(G, C), value=result_vals.reshape(G, C, -1),

@@ -75,6 +75,14 @@ class CacheConfig:
     use_lwh: bool = True                # lightweight (embedded) history
     use_lwu: bool = True                # lazy weight update
     use_fc: bool = True                 # frequency-counter cache
+    sanitize: bool = False              # arm the dittolint invariant
+                                        # sanitizer (analysis/sanitize.py)
+                                        # inside access_group; eager calls
+                                        # raise immediately, jitted/scanned
+                                        # callers wrap with
+                                        # analysis.sanitize.checked.  False
+                                        # adds zero equations: the default
+                                        # path stays bit-identical
 
     @property
     def n_slots(self) -> int:
@@ -319,6 +327,8 @@ def init_clients(cfg: CacheConfig, n_clients: int, seed: int = 0) -> ClientState
 
 
 def init_stats() -> OpStats:
+    # x64-gated on purpose: byte counters overflow i32 on long sized
+    # traces (see rdma_*_bytes note).  dittolint: disable=DL004
     z = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
     return OpStats(*[z for _ in OpStats._fields])
 

@@ -177,6 +177,9 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         # no-op lanes (key 0) route nowhere and never consume capacity
         owner = jnp.where(keys_l != 0, owner, n_shards)
         # rank within destination
+        # Segment packing, not priority ranking: a stable sort by owner
+        # is the one-shot way to pack per-destination request blocks
+        # (argmin-peel would cost O(lanes) peels).  dittolint: disable=DL003
         order = jnp.argsort(owner * (lanes + 1)
                             + jnp.arange(lanes, dtype=owner.dtype))
         sorted_owner = owner[order]

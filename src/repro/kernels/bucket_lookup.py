@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _hash_u32(x):
     # Mirror of repro.core.hashing.splitmix32 — the semantics contract is
@@ -79,10 +81,13 @@ def _kernel(tkey_ref, tsize_ref, keys_ref, found_ref, slot_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("assoc", "block_b", "interpret"))
 def bucket_lookup(table_key, table_size, keys, *, assoc: int = 8,
-                  block_b: int = 8, interpret: bool = True):
+                  block_b: int = 8, interpret: bool | None = None):
     """table_key: u32[n_slots]; table_size: u32[n_slots]; keys: u32[B].
     Returns (found bool[B], slot i32[B]). B need not divide block_b —
-    the batch is padded internally (key 0 never matches a live slot)."""
+    the batch is padded internally (key 0 never matches a live slot).
+    ``interpret=None`` resolves to the backend default (compiled on
+    TPU, interpreter elsewhere)."""
+    interpret = resolve_interpret(interpret)
     keys, B = _pad_batch(keys, block_b)
     Bp = keys.shape[0]
     n_buckets = table_key.shape[0] // assoc
@@ -145,7 +150,7 @@ def _probe_kernel(tkey_ref, tsize_ref, thash_ref, tptr_ref, keys_ref,
                                              "block_b", "interpret"))
 def access_probe(table_key, table_size, table_hash, table_ptr, keys,
                  hist_ctr, *, assoc: int = 8, history_len: int = 1024,
-                 block_b: int = 8, interpret: bool = True):
+                 block_b: int = 8, interpret: bool | None = None):
     """Fused Get-path probe: bucket match + embedded-history match.
 
     table_*: u32[n_slots]; keys: u32[B]; hist_ctr: u32[] global history
@@ -153,6 +158,7 @@ def access_probe(table_key, table_size, table_hash, table_ptr, keys,
     hist_found bool[B], hist_slot i32[B] — the matching history slot,
     bucket base where there is no match, mirroring the reference path).
     """
+    interpret = resolve_interpret(interpret)
     keys, B = _pad_batch(keys, block_b)
     Bp = keys.shape[0]
     n_buckets = table_key.shape[0] // assoc

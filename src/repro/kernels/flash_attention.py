@@ -19,6 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1.0e30
@@ -66,11 +68,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit, static_argnames=("blk_q", "blk_k", "interpret"))
 def flash_attention(q, k, v, *, blk_q: int = 128, blk_k: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Causal attention. q/k/v: [B, T, H, D] (GQA pre-expanded).
 
     Returns [B, T, H, D]. Forward-only (serving/prefill); training keeps
     the differentiable chunked-attention path."""
+    interpret = resolve_interpret(interpret)
     b, t, h, d = q.shape
     blk_q = min(blk_q, t)
     blk_k = min(blk_k, t)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(slots_ref, delta_ref, clock_ref, freq_ref, last_ref,
             freq_out_ref, last_out_ref, *, block_c):
@@ -117,7 +119,7 @@ def _hit_kernel(hit_ref, hts_ref, emit_ref, delta_ref, freq_ref, last_ref,
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def hit_metadata_update(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
                         emit_deltas, *, block_c: int = 512,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """Fused hit-side metadata update (the production hot path).
 
     One pass over the metadata table applying, per table tile:
@@ -135,6 +137,7 @@ def hit_metadata_update(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
     Returns updated (freq, last_ts, ext). C is padded internally to a
     multiple of ``block_c``.
     """
+    interpret = resolve_interpret(interpret)
     c = freq.shape[0]
     ew = ext.shape[1]
     if interpret:
@@ -170,9 +173,10 @@ def hit_metadata_update(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def metadata_update(freq, last_ts, slots, deltas, clock, *,
-                    block_c: int = 512, interpret: bool = True):
+                    block_c: int = 512, interpret: bool | None = None):
     """freq/last_ts: f32[C]; slots: i32[B] (-1 = no-op); deltas: f32[B].
     Returns updated (freq, last_ts)."""
+    interpret = resolve_interpret(interpret)
     c = freq.shape[0]
     assert c % block_c == 0, (c, block_c)
     grid = (c // block_c,)

@@ -1,17 +1,18 @@
 """Public jitted wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU (the kernel body executes in Python
-per the brief) and False on real TPU backends.
+``interpret`` resolves inside each kernel via
+``repro.kernels.runtime.interpret_default`` — interpreter on CPU (the
+kernel body executes in Python per the brief), compiled Mosaic on TPU.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.bucket_lookup import access_probe, bucket_lookup
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.metadata_update import hit_metadata_update, metadata_update
+from repro.kernels.runtime import interpret_default
 from repro.kernels.sampled_eviction import (KERNEL_EXPERTS, ranked_eviction,
                                             sampled_eviction)
 
@@ -20,17 +21,13 @@ __all__ = ["sampled_eviction_op", "ranked_eviction_op", "bucket_lookup_op",
            "flash_attention_op", "KERNEL_EXPERTS"]
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def _auto_block_b(n: int, cap: int = 256) -> int:
     """Scale the request-tile width with the batch — but only for the
     interpreter, whose vectorized-gather branch makes per-cell overhead
     the dominant cost. Compiled Mosaic kernels unroll ``block_b``
     dynamic slices per grid cell, so widening the tile there balloons
     compile time instead; they keep the tuned default."""
-    if not _interpret_default():
+    if not interpret_default():
         return 8
     return max(8, min(cap, n))
 
@@ -45,8 +42,7 @@ def sampled_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
         size.astype(jnp.float32), insert_ts.astype(jnp.float32),
         last_ts.astype(jnp.float32), freq.astype(jnp.float32),
         offsets.astype(jnp.int32), e_choice.astype(jnp.int32), clock,
-        window=window, k=k, experts=tuple(experts), block_b=block_b,
-        interpret=_interpret_default())
+        window=window, k=k, experts=tuple(experts), block_b=block_b)
 
 
 def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
@@ -69,8 +65,7 @@ def ranked_eviction_op(size, insert_ts, last_ts, freq, offsets, e_choice,
         None if tenant is None else tenant.astype(jnp.float32),
         None if tfilt is None else tfilt.astype(jnp.int32),
         window=window, k=k, experts=tuple(experts),
-        block_b=block_b or _auto_block_b(offsets.shape[0]),
-        interpret=_interpret_default())
+        block_b=block_b or _auto_block_b(offsets.shape[0]))
 
 
 def access_probe_op(table_key, table_size, table_hash, table_ptr, keys,
@@ -78,15 +73,14 @@ def access_probe_op(table_key, table_size, table_hash, table_ptr, keys,
     """Fused Get-path probe: bucket match + embedded-history match."""
     return access_probe(table_key, table_size, table_hash, table_ptr, keys,
                         hist_ctr, assoc=assoc, history_len=history_len,
-                        block_b=block_b or _auto_block_b(keys.shape[0]),
-                        interpret=_interpret_default())
+                        block_b=block_b or _auto_block_b(keys.shape[0]))
 
 
 def bucket_lookup_op(table_key, table_size, keys, *, assoc=8, block_b=8):
     return bucket_lookup(table_key.astype(jnp.uint32),
                          table_size.astype(jnp.uint32),
                          keys.astype(jnp.uint32), assoc=assoc,
-                         block_b=block_b, interpret=_interpret_default())
+                         block_b=block_b)
 
 
 def metadata_update_op(freq, last_ts, slots, deltas, clock, *, block_c=512):
@@ -94,7 +88,7 @@ def metadata_update_op(freq, last_ts, slots, deltas, clock, *, block_c=512):
                            last_ts.astype(jnp.float32),
                            slots.astype(jnp.int32),
                            deltas.astype(jnp.float32), clock,
-                           block_c=block_c, interpret=_interpret_default())
+                           block_c=block_c)
 
 
 def hit_metadata_update_op(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
@@ -106,10 +100,9 @@ def hit_metadata_update_op(freq, last_ts, ext, hit_slots, hit_ts, emit_slots,
     return hit_metadata_update(
         freq, last_ts, ext.astype(jnp.float32), hit_slots.astype(jnp.int32),
         hit_ts, emit_slots.astype(jnp.int32), emit_deltas.astype(jnp.float32),
-        block_c=block_c, interpret=_interpret_default())
+        block_c=block_c)
 
 
 def flash_attention_op(q, k, v, *, blk_q=128, blk_k=128):
     """Causal flash attention (forward): see kernels/flash_attention.py."""
-    return flash_attention(q, k, v, blk_q=blk_q, blk_k=blk_k,
-                           interpret=_interpret_default())
+    return flash_attention(q, k, v, blk_q=blk_q, blk_k=blk_k)

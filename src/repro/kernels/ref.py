@@ -107,6 +107,8 @@ def ranked_eviction_ref(size, insert_ts, last_ts, freq, offsets, e_choice,
 
     pr_sel = jnp.take_along_axis(
         pr, e_choice[:, None, None], axis=2)[:, :, 0]             # [B, W]
+    # The oracle ranks the whole window by full sort for clarity; the
+    # fused kernel argmin-peels.  dittolint: disable=DL003
     order = jnp.argsort(pr_sel, axis=1)                           # stable
     ranked_idx = jnp.take_along_axis(idx, order, axis=1)
     ranked_live = jnp.take_along_axis(in_sample, order, axis=1)

@@ -1,0 +1,26 @@
+"""Backend-dependent execution defaults shared by every Pallas kernel.
+
+The kernels run through the Pallas interpreter on CPU/GPU hosts and as
+compiled Mosaic kernels on TPU.  Each kernel signature takes
+``interpret: bool | None = None`` and resolves ``None`` through
+:func:`interpret_default` at trace time — so a TPU caller that forgets
+to thread the flag gets the compiled kernel, never a silent interpreter
+fallback (dittolint rule DL005 enforces that no signature hard-codes
+``interpret=True`` outside tests).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    """True off-TPU (interpreter), False on TPU (compiled Mosaic)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """Resolve a kernel's ``interpret`` argument: ``None`` -> backend
+    default.  Called inside jitted kernels; ``interpret`` is static, so
+    this runs at trace time and costs nothing at runtime."""
+    return interpret_default() if interpret is None else bool(interpret)

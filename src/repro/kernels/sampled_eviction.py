@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -2.0e38
 
 # Kernel-supported experts: pure arithmetic over the default metadata.
@@ -157,7 +159,7 @@ def _ranked_kernel(size_ref, ins_ref, last_ref, freq_ref, tenant_ref,
 def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
                     must_evict, quota, ts, tenant=None, tfilt=None, *,
                     window: int = 20, k: int = 5, experts=("lru", "lfu"),
-                    block_b: int = 8, interpret: bool = True):
+                    block_b: int = 8, interpret: bool | None = None):
     """Quota-extended fused eviction decision (the production hot path).
 
     Like ``sampled_eviction`` but returns the chosen expert's full
@@ -185,6 +187,7 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
       cand:    i32[B, E] per-expert argmin candidate (undefined where the
                sample has no live object, as in the reference path).
     """
+    interpret = resolve_interpret(interpret)
     B = offsets.shape[0]
     C = size.shape[0] - window
     if tenant is None:
@@ -232,9 +235,10 @@ def ranked_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
 def sampled_eviction(size, insert_ts, last_ts, freq, offsets, e_choice,
                      clock, *, window: int = 20, k: int = 5,
                      experts=("lru", "lfu"), block_b: int = 8,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """See ref.sampled_eviction_ref. Table arrays are f32[C + window]
     (tail padded with empty slots so windows never wrap)."""
+    interpret = resolve_interpret(interpret)
     B = offsets.shape[0]
     assert B % block_b == 0, (B, block_b)
     e = len(experts)

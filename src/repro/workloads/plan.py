@@ -106,7 +106,8 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
                 is_write: Optional[np.ndarray] = None,
                 sizes: Optional[np.ndarray] = None,
                 tenants: Optional[np.ndarray] = None,
-                lookahead: Optional[int] = None) -> GroupPlan:
+                lookahead: Optional[int] = None,
+                validate: bool = False) -> GroupPlan:
     """Greedily pack a [T, C] trace into bucket-disjoint [G, C] groups.
 
     Args:
@@ -122,6 +123,10 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
       lookahead: how far past a blocked request a lane may schedule
         ahead (default 4*batch).  Blocked requests and all later
         requests to the same key park until the next group.
+      validate: run the dittolint SAN006 conflict checker
+        (``analysis.sanitize.assert_plan_ok``) on the emitted plan and
+        raise on any violation — cheap insurance when feeding plans
+        from new planner code straight into the batched engine.
     Returns:
       GroupPlan; every non-pad request of `keys` appears exactly once.
     """
@@ -203,6 +208,10 @@ def plan_groups(keys: np.ndarray, n_buckets: int, batch: int, *,
         g_sz = [np.ones((batch, C), np.uint32)]
         g_tn = [np.zeros((batch, C), np.uint32)]
         g_src = [np.full((batch, C), -1, np.int64)]
-    return GroupPlan(np.stack(g_keys), np.stack(g_wr), np.stack(g_sz),
+    plan = GroupPlan(np.stack(g_keys), np.stack(g_wr), np.stack(g_sz),
                      np.stack(g_src).astype(np.int32), batch, scope,
                      np.stack(g_tn) if carry_tenants else None)
+    if validate:
+        from repro.analysis.sanitize import assert_plan_ok
+        assert_plan_ok(plan, n_buckets)
+    return plan
