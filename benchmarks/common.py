@@ -8,17 +8,15 @@ import subprocess
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines import DittoModel
-from repro.core import CacheConfig, make_cache, run_trace
-from repro.core.cache import run_trace_grouped
+from repro.core import CacheConfig, ExecConfig
+from repro.core import execute as core_execute
+from repro.core import make as core_make
 from repro.core.types import byte_hit_ratio, hit_ratio
 from repro.workloads import interleave
-from repro.workloads.plan import plan_groups
 
-_JIT_CACHE = {}
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # BENCH_*.json trajectories keep the last N records only — the files are
 # committed, so an unbounded append would grow them on every CI run.
@@ -35,16 +33,18 @@ def default_n_buckets(capacity: int) -> int:
 def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
               n_clients=8, seed=0, is_write=None, sizes=None, tenants=None,
               backend="reference", batch=1, plan_scope="lane", plan=None,
-              **cfg_kw):
-    """Run a flat trace through the JAX Ditto cache; returns (TraceResult,
-    cfg, wall_s). ``backend`` selects the reference (pure jnp) or fused
-    (Pallas hot-path kernels) execution engine — decision-equivalent.
-    ``batch=N`` (N > 1) runs the batched execution engine: the trace is
-    packed into bucket-disjoint N-round groups (``workloads.plan``) and
-    each ``lax.scan`` step retires a whole group; pass a precomputed
-    ``plan`` to reuse one packing across backends/repeats.  ``tenants``
-    (flat, aligned with ``keys_flat``) routes each request to its tenant
-    when the config is multi-tenant (``n_tenants`` in ``cfg_kw``)."""
+              model=None, **cfg_kw):
+    """Run a flat trace through the JAX Ditto cache via the unified
+    ``repro.core.execute`` facade (DESIGN.md §13); returns ``(ExecResult,
+    cfg, wall_s)``.  ``backend`` selects the reference (pure jnp) or
+    fused (Pallas hot-path kernels) engine — decision-equivalent.
+    ``batch=N`` (N > 1) runs the batched engine with ``plan_scope``
+    selecting the schedule (``"lane"``/``"strict"``/``"adaptive"``);
+    pass a precomputed ``plan`` (``GroupPlan`` or ``SegmentSchedule``)
+    to reuse one packing across backends/repeats.  ``tenants`` (flat,
+    aligned with ``keys_flat``) routes each request to its tenant when
+    the config is multi-tenant.  ``wall_s`` excludes planning time —
+    the plan cost is reported separately in ``ExecResult.plan_s``."""
     cfg = CacheConfig(n_buckets=default_n_buckets(capacity), assoc=8,
                       capacity=capacity, experts=tuple(experts),
                       backend=backend, **cfg_kw)
@@ -52,40 +52,21 @@ def run_ditto(keys_flat, *, capacity=1024, experts=("lru", "lfu"),
     w2 = interleave(is_write, n_clients) if is_write is not None else None
     s2 = interleave(sizes, n_clients) if sizes is not None else None
     n2 = interleave(tenants, n_clients) if tenants is not None else None
-    st, cl, _ = make_cache(cfg, n_clients, seed)
+    cache = core_make(cfg, n_clients, seed)
     if batch > 1:
         if plan is None:
-            plan = plan_groups(k2, cfg.n_buckets, batch, scope=plan_scope,
-                               is_write=w2, sizes=s2, tenants=n2)
-        elif n2 is not None and plan.tenants is None:
+            plan = plan_scope
+        elif (n2 is not None and hasattr(plan, "tenants")
+              and plan.tenants is None):
             raise ValueError(
                 "tenants= given but the precomputed plan carries no "
                 "tenant ids; rebuild it with plan_groups(..., tenants=...)")
-        key = (cfg, n_clients, "grouped")
-        if key not in _JIT_CACHE:
-            _JIT_CACHE[key] = jax.jit(
-                lambda s, c, k, w, z, t: run_trace_grouped(
-                    cfg, s, c, k, w, z, t))
-        fn = _JIT_CACHE[key]
-        pn = (jnp.zeros(plan.keys.shape, jnp.uint32)
-              if plan.tenants is None else jnp.asarray(plan.tenants))
-        args = (jnp.asarray(plan.keys), jnp.asarray(plan.is_write),
-                jnp.asarray(plan.sizes), pn)
     else:
-        key = (cfg, n_clients)
-        if key not in _JIT_CACHE:
-            _JIT_CACHE[key] = jax.jit(
-                lambda s, c, k, w, z, t: run_trace(cfg, s, c, k, w, z, t))
-        fn = _JIT_CACHE[key]
-        T, C = k2.shape
-        w2 = jnp.zeros((T, C), bool) if w2 is None else jnp.asarray(w2)
-        s2 = jnp.ones((T, C), jnp.uint32) if s2 is None else jnp.asarray(s2)
-        n2 = jnp.zeros((T, C), jnp.uint32) if n2 is None else jnp.asarray(n2)
-        args = (jnp.asarray(k2), w2, s2, n2)
-    t0 = time.time()
-    tr = fn(st, cl, *args)
-    jax.block_until_ready(tr.hits)
-    return tr, cfg, time.time() - t0
+        plan = None
+    xc = ExecConfig(backend=backend, batch=max(batch, 1), donate=False)
+    res = core_execute(cache, k2, plan=plan, exec_cfg=xc, is_write=w2,
+                       sizes=s2, tenants=n2, model=model)
+    return res, cfg, res.wall_s
 
 
 def hit_rate(tr) -> float:

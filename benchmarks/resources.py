@@ -7,10 +7,7 @@
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import CacheConfig, make_cache, run_trace
+from repro.core import CacheConfig, execute, make
 from benchmarks.common import emit, hit_rate, run_ditto
 from repro.workloads import interleave, lfu_friendly, loop_window, mixed_apps
 
@@ -20,10 +17,8 @@ CAP = 1024
 def _run_tensor(k2, capacity, experts, seed=0):
     cfg = CacheConfig(n_buckets=max(256, capacity // 2), assoc=8,
                       capacity=capacity, experts=experts)
-    st, cl, _ = make_cache(cfg, k2.shape[1], seed)
-    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(
-        st, cl, jnp.asarray(k2))
-    return hit_rate(tr)
+    res = execute(make(cfg, k2.shape[1], seed), k2)
+    return hit_rate(res)
 
 
 def run(quick=False):

@@ -1,4 +1,4 @@
-"""Hot-path throughput: sequential vs batched request-group execution,
+"""Hot-path throughput: sequential vs width-adaptive grouped execution,
 reference (pure jnp) vs fused (Pallas) backend.
 
 The ROADMAP north-star asks for a measurably faster hot path; this
@@ -7,21 +7,25 @@ YCSB A-D in two dimensions:
 
   * backend — reference vs fused (decision-equivalent; equality of hit
     rates is asserted on every run);
-  * batch width — sequential (one trace row per `lax.scan` step) vs the
-    batched engine (`run_trace_grouped`): the planner packs the trace
-    into bucket-disjoint G-round groups and one scan step retires a
-    whole group, amortizing per-step overhead (and, for the fused
-    backend, per-launch kernel overhead) across G rounds.
+  * plan — sequential (one trace row per `lax.scan` step) vs the
+    adaptive planner (`plan_adaptive`): per window it picks the group
+    width the cost model predicts cheapest under the hit-rate budget,
+    packs conflict-free chunks with the vectorized packer, and
+    degenerates to sequential rows where packing collapses (so a
+    write-heavy trace can never be scheduled slower than sequential by
+    more than the planning overhead).
 
-``steps_per_sec`` is trace rows retired per second (requests/sec ÷
-client count), measured on the same request stream for every cell, so
-``speedup`` columns compare like for like.  ``hit_rate`` is reported
-per cell: batched execution combines same-step duplicates (reads of a
-key that misses may dedup to one insert), so wide groups can trade a
-little hit rate for throughput — the numbers make that trade visible
-rather than hiding it.  The host-side packing cost is NOT inside the
-timed region (a plan is built once and amortizes over reuse); it is
-reported separately as ``plan_s`` per row so the trade stays visible.
+``us_per_call`` on batch rows is the AMORTIZED number — wall time plus
+the host-side planning time, divided by requests — so the planner pays
+for itself in the headline metric (the acceptance bar is amortized
+adaptive <= sequential on every workload).  ``us_steady`` is the
+steady-state number (plan reused across repeats, wall only); the gap
+between the two is exactly the planning cost.  Both backends execute
+the SAME schedule, so the backend hit-rate equality assert still binds.
+``hit_rate`` is reported per row: grouped execution combines same-step
+duplicates, so wide groups can trade a little hit rate for throughput —
+the planner bounds that trade (`hr_budget`) and the numbers make it
+visible rather than hiding it.
 
 On CPU the Pallas kernels execute in interpret mode, so the fused
 columns measure kernel overhead there; on a real TPU backend the same
@@ -34,10 +38,11 @@ from __future__ import annotations
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import default_n_buckets, emit, hit_rate, run_ditto
 from repro.workloads import interleave, ycsb
-from repro.workloads.plan import plan_groups
+from repro.workloads.plan import PlanCostModel, plan_adaptive
 
 BACKENDS = ("reference", "fused")
 N_CLIENTS = 16
@@ -45,7 +50,7 @@ CAPACITY = 2048
 N_KEYS = 4_000
 
 
-def _timed(keys, wr, backend, *, repeats=4, **kw):
+def _timed(keys, wr, backend, *, repeats=2, **kw):
     """Compile once, then time `repeats` cached executions (best wall)."""
     best = float("inf")
     tr = None
@@ -67,14 +72,94 @@ def run(quick=False):
         keys, wr = ycsb(w, n, n_keys=N_KEYS, seed=0)
         n_steps = n // N_CLIENTS
         k2, w2 = interleave(keys, N_CLIENTS, wr)
+        nb = default_n_buckets(CAPACITY)
 
-        seq_wall, seq_hr = {}, {}
+        # --- calibration + planning ---------------------------------
+        # The cost model calibrates online: warm executions feed their
+        # measured per-step wall times (and packing efficiencies) back
+        # through execute(), so the planner's width decisions reflect
+        # THIS machine and workload (fused-backend timings only — that
+        # is the headline column).  Per width the schedule is replanned
+        # once if the freshly calibrated model changes its mind — on a
+        # degenerate trace (write-heavy YCSB-A) the second plan
+        # collapses to the sequential fallback, whose plan cost is
+        # near-zero via the optimistic-bound prune.
+        model = PlanCostModel()
+        seq_hr = {}
         for backend in BACKENDS:
-            tr, wall = _timed(keys, wr, backend)
-            seq_wall[backend] = wall
+            # The sequential baseline is the denominator of every width
+            # decision — give it more samples than the grouped probes so
+            # its minimum has converged before any plan freezes.
+            tr, _ = _timed(keys, wr, backend, repeats=5,
+                           model=model if backend == "fused" else None)
             seq_hr[backend] = hit_rate(tr)
         # Decision equivalence is part of the measurement contract.
         assert abs(seq_hr["reference"] - seq_hr["fused"]) < 1e-9, seq_hr
+
+        scheds = {}
+        for width in widths:
+            attempts = 0
+            while True:
+                t0 = time.time()
+                sched = plan_adaptive(k2, nb, width, is_write=w2,
+                                      capacity=CAPACITY, model=model)
+                plan_s = time.time() - t0
+                _timed(keys, wr, "fused", batch=width, plan=sched,
+                       model=model)
+                attempts += 1
+                replan = plan_adaptive(k2, nb, width, is_write=w2,
+                                       capacity=CAPACITY, model=model)
+                if attempts >= 2 or (tuple(replan.widths)
+                                     == tuple(sched.widths)):
+                    break
+            hrs = {}
+            for backend in BACKENDS:
+                tr, _ = _timed(keys, wr, backend, repeats=0, batch=width,
+                               plan=sched,
+                               model=model if backend == "fused" else None)
+                hrs[backend] = hit_rate(tr)
+            # The grouped engine is backend-equivalent too.
+            assert abs(hrs["reference"] - hrs["fused"]) < 1e-9, hrs
+            scheds[width] = (sched, plan_s, hrs["fused"])
+
+        # --- interleaved measurement --------------------------------
+        # All modes (sequential + every width's final schedule) are
+        # timed round-robin in ONE block, so the sequential baseline
+        # each speedup divides by was measured seconds — not minutes —
+        # from its grouped counterpart.  Host timing on a shared box
+        # drifts several percent between blocks and swings +-15% per
+        # repeat, so the row-vs-row comparison (the acceptance bar) is
+        # a PAIRED estimator: the speedup is the median over repeats of
+        # each repeat's own seq/mode wall ratio — a slow repeat is slow
+        # for every mode it contains, and the ratio cancels that drift
+        # where a ratio of independent per-mode medians keeps it.  The
+        # mode order rotates every repeat (a run inherits its
+        # predecessor's allocator/GC debris) and `reps` is a multiple
+        # of the mode count so every mode occupies every position
+        # equally often — otherwise rotation itself biases the pairing.
+        modes = ("seq", *widths)
+        reps = 2 * len(modes)
+        samples = {m: {b: [] for b in BACKENDS} for m in modes}
+        for rep in range(reps):
+            order = modes[rep % len(modes):] + modes[:rep % len(modes)]
+            for backend in BACKENDS:
+                fm = model if backend == "fused" else None
+                for m in order:
+                    kw = ({} if m == "seq"
+                          else dict(batch=m, plan=scheds[m][0]))
+                    _, _, wall = run_ditto(
+                        keys, capacity=CAPACITY, n_clients=N_CLIENTS,
+                        is_write=wr, backend=backend, model=fm, **kw)
+                    samples[m][backend].append(wall)
+
+        def _ratio(m, backend, extra=0.0):
+            """Median per-repeat paired ratio seq/(mode + extra)."""
+            s, v = samples["seq"][backend], samples[m][backend]
+            return float(np.median([a / (b + extra)
+                                    for a, b in zip(s, v)]))
+
+        seq_wall = {b: float(np.median(samples["seq"][b]))
+                    for b in BACKENDS}
         rows.append(dict(
             name=f"ycsb_{w.lower()}_seq", n=n,
             us_per_call=seq_wall["fused"] / n * 1e6,
@@ -83,31 +168,35 @@ def run(quick=False):
             fused_steps_per_sec=n_steps / seq_wall["fused"],
             batch=1, fill=1.0, hit_rate=seq_hr["fused"],
             device=jax.default_backend()))
-
         for width in widths:
-            t0 = time.time()
-            plan = plan_groups(k2, default_n_buckets(CAPACITY), width,
-                               scope="lane", is_write=w2)
-            plan_s = time.time() - t0
-            walls, hrs = {}, {}
-            for backend in BACKENDS:
-                tr, wall = _timed(keys, wr, backend, batch=width, plan=plan)
-                walls[backend] = wall
-                hrs[backend] = hit_rate(tr)
-            # The batched engine is backend-equivalent too.
-            assert abs(hrs["reference"] - hrs["fused"]) < 1e-9, hrs
+            sched, plan_s, hr = scheds[width]
+            widths_used = sorted(set(int(s.width) for s in sched.segments))
+            # Absolute batch-row walls derive from the seq median and the
+            # paired ratio (seq_med / ratio): the ratio is the lowest-
+            # variance estimate of relative cost, so the derived wall is
+            # the consistent absolute one — us_per_call <= sequential
+            # and fused_speedup >= 1 are the same statement by
+            # construction, never two noisy measurements disagreeing.
+            sp = {b: _ratio(width, b, extra=plan_s) for b in BACKENDS}
+            sp_steady = {b: _ratio(width, b) for b in BACKENDS}
+            wl = {b: seq_wall[b] / sp_steady[b] for b in BACKENDS}
             rows.append(dict(
                 name=f"ycsb_{w.lower()}_batch{width}", n=n,
-                us_per_call=walls["fused"] / n * 1e6,
-                ref_us_per_call=walls["reference"] / n * 1e6,
-                ref_steps_per_sec=n_steps / walls["reference"],
-                fused_steps_per_sec=n_steps / walls["fused"],
-                ref_speedup=seq_wall["reference"] / walls["reference"],
-                fused_speedup=seq_wall["fused"] / walls["fused"],
-                batch=width, fill=round(plan.fill, 4),
-                rows_per_group=round(plan.rows_per_group, 2),
+                # Amortized: planning rides inside the headline number.
+                us_per_call=seq_wall["fused"] / sp["fused"] / n * 1e6,
+                us_steady=wl["fused"] / n * 1e6,
+                ref_us_per_call=seq_wall["reference"] / sp["reference"]
+                / n * 1e6,
+                ref_us_steady=wl["reference"] / n * 1e6,
+                ref_steps_per_sec=n_steps / wl["reference"],
+                fused_steps_per_sec=n_steps / wl["fused"],
+                ref_speedup=sp["reference"],
+                fused_speedup=sp["fused"],
+                batch=width, fill=round(sched.fill, 4),
+                widths="/".join(str(x) for x in widths_used),
+                n_segments=len(sched.segments),
                 plan_s=round(plan_s, 4),
-                hit_rate=hrs["fused"],
+                hit_rate=hr,
                 seq_hit_rate=seq_hr["fused"],
                 device=jax.default_backend()))
     emit(rows, "throughput")

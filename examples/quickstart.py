@@ -2,11 +2,9 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CacheConfig, make_cache, run_trace
+from repro.core import CacheConfig, execute, make
 from repro.workloads import interleave, loop_window
 
 CAP, CLIENTS = 1024, 8
@@ -14,13 +12,10 @@ trace = loop_window(40_000, CAP, seed=5)   # phases flip LRU<->LFU friendly
 
 for experts in (("lru",), ("lfu",), ("lru", "lfu")):
     cfg = CacheConfig(n_buckets=512, assoc=8, capacity=CAP, experts=experts)
-    state, clients, _ = make_cache(cfg, CLIENTS)
-    tr = jax.jit(lambda s, c, k: run_trace(cfg, s, c, k))(
-        state, clients, jnp.asarray(interleave(trace, CLIENTS)))
-    hr = float(tr.hits.sum()) / float(tr.ops.sum())
+    res = execute(make(cfg, CLIENTS), interleave(trace, CLIENTS))
     name = "Ditto(adaptive)" if len(experts) > 1 else f"Ditto-{experts[0].upper()}"
-    w = np.round(np.asarray(tr.state.weights), 2)
-    print(f"{name:16s} hit rate {hr:.3f}" +
+    w = np.round(np.asarray(res.state.weights), 2)
+    print(f"{name:16s} hit rate {res.hit_rate:.3f}" +
           (f"   final expert weights {w}" if len(experts) > 1 else ""))
 
 print("\nThe adaptive cache should match or beat BOTH fixed policies "

@@ -23,6 +23,12 @@ shipped) and that review keeps re-catching by hand:
          interpreter on TPU.
   DL006  Mutable default — a list/dict/set literal as a function-arg
          default or a dataclass field (shared-state config aliasing).
+  DL007  Deprecated execution entry point — a direct call to
+         ``run_trace``/``run_trace_grouped``/``dm_access`` outside the
+         compat shim and the analysis passes that audit those names on
+         purpose.  New call sites go through ``repro.core.execute``
+         (PR 8 API consolidation); the legacy names warn and will be
+         removed.
 
 Escape hatch: append ``# dittolint: disable=DL003`` (comma-separate for
 several rules) to the flagged line.  Use it to *document* an intentional
@@ -52,6 +58,9 @@ RULES: Dict[str, str] = {
              "outside tests (silent interpreter on TPU)",
     "DL006": "mutable default (list/dict/set) in a function signature or "
              "dataclass field",
+    "DL007": "direct call to a deprecated entry point "
+             "(run_trace/run_trace_grouped/dm_access); use "
+             "repro.core.execute()",
 }
 
 # Modules where code is jit-traced: DL001 applies here.
@@ -59,6 +68,15 @@ TRACED_MODULES = ("/core/", "/kernels/", "/dm/", "/elastic/resize")
 # The latency-critical subset: DL003 applies here.
 HOT_PATH_MODULES = ("/core/cache.py", "/core/fc_cache.py",
                     "/core/priority.py", "/kernels/", "/dm/")
+# The legacy execution surface and its deliberate callers: the shim
+# itself, the facade that wraps it, the DM engine the shim re-exports,
+# and the analysis passes that jit the legacy names to audit them.
+# Everywhere else a legacy call is migration debt — DL007 applies.
+LEGACY_SHIM_MODULES = ("/core/cache.py", "/core/execute.py",
+                       "/dm/sharded_cache.py", "/dm/__init__.py",
+                       "/analysis/")
+_DEPRECATED_ENTRYPOINTS = frozenset(
+    {"run_trace", "run_trace_grouped", "dm_access"})
 
 _DISABLE_RE = re.compile(r"#.*dittolint:\s*disable=([A-Z0-9_]+(?:\s*,\s*[A-Z0-9_]+)*)")
 
@@ -138,6 +156,8 @@ class _Linter(ast.NodeVisitor):
         norm = "/" + path.replace("\\", "/")
         self.traced = any(m in norm for m in TRACED_MODULES)
         self.hot = any(m in norm for m in HOT_PATH_MODULES)
+        self.legacy_ok = in_tests or any(m in norm
+                                         for m in LEGACY_SHIM_MODULES)
         self.findings: List[Finding] = []
 
     def flag(self, node: ast.AST, rule: str, detail: str = "") -> None:
@@ -268,6 +288,8 @@ class _Linter(ast.NodeVisitor):
         leaf = chain.rsplit(".", 1)[-1] if chain else ""
         if self.hot and leaf in _SORT_NAMES:
             self.flag(node, "DL003", chain or leaf)
+        if leaf in _DEPRECATED_ENTRYPOINTS and not self.legacy_ok:
+            self.flag(node, "DL007", chain or leaf)
         # DL004: .astype(float) / .astype(int) and dtype=float/int kwargs.
         if leaf == "astype" and node.args:
             a = node.args[0]

@@ -1,17 +1,27 @@
 """Ditto core: client-centric caching framework + distributed adaptive
-caching (paper §4), as functional JAX."""
+caching (paper §4), as functional JAX.
 
-from repro.core.cache import AccessResult, TraceResult, access, make_cache, run_trace
+The one execution surface is :func:`repro.core.execute` (DESIGN.md §13);
+``run_trace`` / ``run_trace_grouped`` remain as deprecated shims.
+"""
+
+from repro.core.cache import (AccessResult, TraceResult, access, make_cache,
+                              run_trace)
+from repro.core.execute import Cache, ExecResult, make
+from repro.core.execute import execute as execute  # noqa: PLC0414 — the
+# function deliberately shadows the submodule name so that
+# ``repro.core.execute(cache, trace, ...)`` is the documented call form.
 from repro.core.priority import ALL_ALGORITHMS, REGISTRY, loc_of
-from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
-                              byte_hit_ratio, hit_ratio, init_cache,
-                              init_clients, init_stats, stats_delta,
-                              stats_sum)
+from repro.core.types import (CacheConfig, CacheState, ClientState,
+                              ExecConfig, OpStats, byte_hit_ratio, hit_ratio,
+                              init_cache, init_clients, init_stats,
+                              merge_exec_config, stats_delta, stats_sum)
 
 __all__ = [
     "AccessResult", "TraceResult", "access", "make_cache", "run_trace",
+    "Cache", "ExecResult", "execute", "make",
     "ALL_ALGORITHMS", "REGISTRY", "loc_of",
-    "CacheConfig", "CacheState", "ClientState", "OpStats",
-    "byte_hit_ratio", "hit_ratio",
+    "CacheConfig", "CacheState", "ClientState", "ExecConfig", "OpStats",
+    "byte_hit_ratio", "hit_ratio", "merge_exec_config",
     "init_cache", "init_clients", "init_stats", "stats_delta", "stats_sum",
 ]

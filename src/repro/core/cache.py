@@ -288,15 +288,16 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     pen = jnp.power(d, h_age_sel.astype(F32))                # d^t
     bits = ((h_bmap[:, None] >> jnp.arange(E)[None, :]) & 1).astype(F32)
     pen_e = jnp.where(regret[:, None], pen[:, None] * bits, 0.0)   # [B, E]
-    ten_g = tenant_b.reshape(G, C)
-    pen_g = pen_e.reshape(G, C, E)
-    reg_g = regret.reshape(G, C)
-    pen_lane = jnp.stack(
-        [jnp.sum(jnp.where((ten_g == U32(t))[..., None], pen_g, 0.0), axis=0)
-         for t in range(Tn)], axis=1)                        # [C, T, E]
-    reg_lane = jnp.stack(
-        [jnp.sum(jnp.where(ten_g == U32(t), reg_g, False), axis=0)
-         for t in range(Tn)], axis=1)                        # [C, T]
+    # One scatter-add over the B requests replaces the per-tenant masked
+    # reductions (the old `for t in range(Tn)` stack traced O(Tn) full-
+    # width reductions; updates apply in request = round order, so the
+    # G=1 and single-tenant results are element-identical).
+    lane_b = jnp.tile(jnp.arange(C, dtype=I32), G)           # [B]
+    tb_i = tenant_b.astype(I32)
+    pen_lane = jnp.zeros((C, Tn, E), F32).at[lane_b, tb_i].add(
+        pen_e)                                               # [C, T, E]
+    reg_lane = jnp.zeros((C, Tn), I32).at[lane_b, tb_i].add(
+        regret.astype(I32))                                  # [C, T]
 
     # One threefry draw per request covers both the expert choice and the
     # sampling offset (step_rng is already a per-request folded stream).
@@ -324,9 +325,7 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     pacc = jnp.where(syncing[..., None], 0.0, pacc)
     pcnt = jnp.where(syncing, 0, pcnt)
     n_sync = jnp.sum(syncing).astype(I32)
-    lane_b = jnp.tile(jnp.arange(C, dtype=I32), G)           # [B]
-    e_choice = _choose_expert(
-        local_w[lane_b, tenant_b.astype(I32)], u_exp)        # [B]
+    e_choice = _choose_expert(local_w[lane_b, tb_i], u_exp)  # [B]
 
     # ------------------------------------------------------------------
     # 4. Inserts: read-through on miss. One insert per (key, bucket) per
@@ -415,12 +414,11 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         bud_t = state.tenant_budget
         charge_d = (jnp.where(consumes, obj_size.astype(I32), 0)
                     + jnp.where(hit & is_write, set_growth, 0))  # [B]
-        inc_t = jnp.stack(
-            [jnp.sum(jnp.where(tenant_b == U32(t), charge_d, 0))
-             for t in range(Tn)])                            # [T]
-        n_charge_t = jnp.stack(
-            [jnp.sum(chargers & (tenant_b == U32(t))) for t in range(Tn)]
-        ).astype(I32)                                        # [T]
+        # Integer scatter-adds over the tenant ids: exact (order-free)
+        # replacements for the old per-tenant masked reductions.
+        inc_t = jnp.zeros((Tn,), I32).at[tb_i].add(charge_d)     # [T]
+        n_charge_t = jnp.zeros((Tn,), I32).at[tb_i].add(
+            chargers.astype(I32))                                # [T]
         over_t = occ_t + inc_t - bud_t                       # [T]
         quota_t = jnp.where(
             over_t <= 0, 0,
@@ -528,11 +526,14 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         # free room for later charges in the same step).
         charge_seq = jnp.where(ins_ok, obj_size.astype(I32), 0) + set_growth
         chargeable = ins_ok | growing_set
-        cancel = jnp.zeros((B,), bool)
-        for t in range(Tn):
-            m = tenant_b == U32(t)
-            cum = jnp.cumsum(jnp.where(m, charge_seq, 0))
-            cancel = cancel | (m & chargeable & (cum > allow_t[t]))
+        # Round-ordered per-tenant running charge as ONE [B, T] one-hot
+        # cumsum (integer, so exactly the old per-tenant masked cumsum
+        # loop without the O(Tn) traced passes over B).
+        onehot = (tb_i[:, None] == jnp.arange(Tn, dtype=I32)[None, :])
+        cum = jnp.cumsum(jnp.where(onehot, charge_seq[:, None], 0),
+                         axis=0)                              # [B, T]
+        cum_own = jnp.take_along_axis(cum, tb_i[:, None], axis=1)[:, 0]
+        cancel = chargeable & (cum_own > allow_t[tb_i])
         plain = plain & ~cancel
         fallback_hist = fallback_hist & ~cancel
         fallback_obj = fallback_obj & ~cancel
@@ -744,10 +745,11 @@ class TraceResult(NamedTuple):
                            # (grouped runs: step-granular, repeated per round)
 
 
-def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
-              keys: jnp.ndarray, is_write: jnp.ndarray | None = None,
-              obj_size: jnp.ndarray | None = None,
-              tenant: jnp.ndarray | None = None) -> TraceResult:
+def _run_trace_impl(cfg: CacheConfig, state: CacheState,
+                    clients: ClientState, keys: jnp.ndarray,
+                    is_write: jnp.ndarray | None = None,
+                    obj_size: jnp.ndarray | None = None,
+                    tenant: jnp.ndarray | None = None) -> TraceResult:
     """Run a [T, C] trace (T steps of C concurrent client ops)."""
     T, C = keys.shape
     if is_write is None:
@@ -772,11 +774,11 @@ def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
     return TraceResult(state, clients, stats, hits, ops, weights)
 
 
-def run_trace_grouped(cfg: CacheConfig, state: CacheState,
-                      clients: ClientState, keys: jnp.ndarray,
-                      is_write: jnp.ndarray | None = None,
-                      obj_size: jnp.ndarray | None = None,
-                      tenant: jnp.ndarray | None = None) -> TraceResult:
+def _run_trace_grouped_impl(cfg: CacheConfig, state: CacheState,
+                            clients: ClientState, keys: jnp.ndarray,
+                            is_write: jnp.ndarray | None = None,
+                            obj_size: jnp.ndarray | None = None,
+                            tenant: jnp.ndarray | None = None) -> TraceResult:
     """Run a planned [NG, G, C] grouped trace: one scan step retires a
     whole G-round request group (see ``workloads.plan.plan_groups``).
 
@@ -805,6 +807,38 @@ def run_trace_grouped(cfg: CacheConfig, state: CacheState,
         step, (state, clients, stats), (keys, is_write, obj_size, tenant))
     return TraceResult(state, clients, stats, hits.reshape(-1),
                        ops.reshape(-1), jnp.repeat(weights, G, axis=0))
+
+
+def _deprecated_entrypoint(name: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{name} is deprecated; drive traces through repro.core.execute() "
+        "(DESIGN.md §13) — it wraps the same engine behind one planned, "
+        "width-adaptive surface", DeprecationWarning, stacklevel=3)
+
+
+def run_trace(cfg: CacheConfig, state: CacheState, clients: ClientState,
+              keys: jnp.ndarray, is_write: jnp.ndarray | None = None,
+              obj_size: jnp.ndarray | None = None,
+              tenant: jnp.ndarray | None = None) -> TraceResult:
+    """Deprecated sequential trace driver: use ``repro.core.execute``
+    with ``plan=None`` (bit-identical results)."""
+    _deprecated_entrypoint("run_trace")
+    return _run_trace_impl(cfg, state, clients, keys, is_write, obj_size,
+                           tenant)
+
+
+def run_trace_grouped(cfg: CacheConfig, state: CacheState,
+                      clients: ClientState, keys: jnp.ndarray,
+                      is_write: jnp.ndarray | None = None,
+                      obj_size: jnp.ndarray | None = None,
+                      tenant: jnp.ndarray | None = None) -> TraceResult:
+    """Deprecated grouped trace driver: use ``repro.core.execute`` with
+    a precomputed plan or ``plan="adaptive"`` (bit-identical results for
+    the same plan)."""
+    _deprecated_entrypoint("run_trace_grouped")
+    return _run_trace_grouped_impl(cfg, state, clients, keys, is_write,
+                                   obj_size, tenant)
 
 
 def make_cache(cfg: CacheConfig, n_clients: int, seed: int = 0):

@@ -13,7 +13,7 @@ every cache operation is a batched gather/scatter.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -138,6 +138,67 @@ class CacheConfig:
             raise ValueError("tenant budgets must be positive block counts")
         if self.backend not in ("reference", "fused"):
             raise ValueError(f"unknown backend {self.backend!r}")
+
+    def split(self) -> tuple:
+        """Compat shim (DESIGN.md §13): split this legacy config into a
+        pure-semantics ``CacheConfig`` plus the ``ExecConfig`` its
+        execution-time fields imply.  ``backend`` stays mirrored on the
+        semantic half so every existing consumer (and the seeded BENCH
+        baselines) is bit-identical whether it predates the split or
+        not; ``merge_exec_config`` is the inverse."""
+        return self, ExecConfig(backend=self.backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """HOW to execute, split from the WHAT of :class:`CacheConfig`.
+
+    CacheConfig fields define cache semantics (policy, capacity,
+    tenancy) and participate in decision-equivalence contracts;
+    ExecConfig fields only change how fast the same decisions are
+    reached — the engine backend, the group width the planner may use,
+    DM routing capacity and the Pallas interpret override.  Passed at
+    execution time (``repro.core.execute``), never stored in cache
+    state, so one cache can be driven at different widths/backends
+    without rebuilding it.
+    """
+
+    backend: str = "reference"      # "reference" | "fused" (same contract
+                                    # as the legacy CacheConfig.backend)
+    batch: int = 32                 # max group width G the planner may
+                                    # pick (1 = always sequential)
+    plan: Optional[str] = "adaptive"  # default planning mode for
+                                    # execute(): "adaptive" | "strict" |
+                                    # "lane" | None (sequential)
+    route_factor: int = 4           # DM router per-destination capacity
+                                    # factor (dm/sharded_cache.py)
+    interpret: Optional[bool] = None  # force the Pallas interpreter
+                                    # (True), compiled kernels (False)
+                                    # or the backend default (None)
+    window: int = 0                 # adaptive planner decision window in
+                                    # trace rows (0 = auto)
+    donate: Optional[bool] = None   # donate state buffers through the
+                                    # execution jit (None = on for
+                                    # accelerators, off on CPU where
+                                    # donation is a no-op warning)
+
+    def __post_init__(self):
+        if self.backend not in ("reference", "fused"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.batch < 1:
+            raise ValueError(f"batch={self.batch} must be >= 1")
+        if self.plan not in (None, "adaptive", "strict", "lane"):
+            raise ValueError(f"unknown plan mode {self.plan!r}")
+
+
+def merge_exec_config(cfg: CacheConfig, exec_cfg: ExecConfig) -> CacheConfig:
+    """The shim's other half: fold the ExecConfig fields the core engine
+    still reads (just ``backend``) back onto a CacheConfig, so the
+    engine's traced signature is unchanged and pre-split configs hash
+    and compare identically to split ones."""
+    if cfg.backend == exec_cfg.backend:
+        return cfg
+    return dataclasses.replace(cfg, backend=exec_cfg.backend)
 
 
 class CacheState(NamedTuple):

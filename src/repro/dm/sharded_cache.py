@@ -117,10 +117,150 @@ def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
     return mesh, DMCache(state, clients, stats), local
 
 
+def _squeeze_shard(state: CacheState, stats: OpStats):
+    """Shard-local scalars arrive in shard_map as [1]-slices; squeeze."""
+    state = state._replace(
+        n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
+        hist_ctr=state.hist_ctr[0],
+        clock=state.clock[0], weights=state.weights[0],
+        gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
+        tenant_bytes=state.tenant_bytes[0],
+        tenant_budget=state.tenant_budget[0])
+    return state, jax.tree.map(lambda x: x[0], stats)
+
+
+def _expand_shard(state: CacheState, stats: OpStats):
+    """Re-expand shard scalars for the sharded output layout."""
+    state = state._replace(
+        n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
+        hist_ctr=state.hist_ctr[None],
+        clock=state.clock[None], weights=state.weights[None],
+        gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
+        tenant_bytes=state.tenant_bytes[None],
+        tenant_budget=state.tenant_budget[None])
+    return state, jax.tree.map(lambda x: x[None], stats)
+
+
+def _make_route_one(local_cfg: CacheConfig, n_shards: int, lanes: int,
+                    q: int):
+    """Per-round client-side router: decide owners, pack per-destination
+    request blocks.  Pure function of the keys (state-independent), which
+    is exactly what lets ``dm_execute`` route group k+1 while group k is
+    still executing."""
+    global_buckets = local_cfg.n_buckets * n_shards
+
+    def route_one(keys_l, write_l, size_l, ten_l):
+        kh = hash_key(keys_l)
+        owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
+        # no-op lanes (key 0) route nowhere and never consume capacity
+        owner = jnp.where(keys_l != 0, owner, n_shards)
+        # rank within destination
+        # Segment packing, not priority ranking: a stable sort by owner
+        # is the one-shot way to pack per-destination request blocks
+        # (argmin-peel would cost O(lanes) peels).  dittolint: disable=DL003
+        order = jnp.argsort(owner * (lanes + 1)
+                            + jnp.arange(lanes, dtype=owner.dtype))
+        sorted_owner = owner[order]
+        first = jnp.concatenate([jnp.ones((1,), bool),
+                                 sorted_owner[1:] != sorted_owner[:-1]])
+        seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(lanes), 0))
+        rank = jnp.arange(lanes) - seg_start
+        send = jnp.zeros((n_shards, q), jnp.uint32)
+        wsend = jnp.zeros((n_shards, q), bool)
+        zsend = jnp.ones((n_shards, q), jnp.uint32)
+        nsend = jnp.zeros((n_shards, q), jnp.uint32)
+        src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
+        ok = rank < q
+        dst = jnp.where(ok, sorted_owner, n_shards)
+        rr = jnp.where(ok, rank, 0)
+        send = send.at[dst, rr].set(keys_l[order], mode="drop")
+        wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
+        zsend = zsend.at[dst, rr].set(size_l[order], mode="drop")
+        nsend = nsend.at[dst, rr].set(ten_l[order], mode="drop")
+        src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
+                                            mode="drop")
+        # Requests beyond the per-destination capacity are NOT executed
+        # this step (the caller sees hit=False and may reissue); count
+        # them so skewed-trace hit ratios stay honest.
+        n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
+        # The op sideband word (tenant id << 9 | object size << 1 |
+        # write bit) rides as a second u32 of the SAME collective.
+        meta = ((nsend.astype(jnp.uint32) << 9)
+                | (zsend.astype(jnp.uint32) << 1)
+                | wsend.astype(jnp.uint32))
+        packed = jnp.stack([send, meta], axis=-1)          # [S, q, 2]
+        return packed, src_slot, n_drop
+
+    return route_one
+
+
+def _unpack_recv(precv, n_shards: int, q: int):
+    """Split a received [G, S, q, 2] exchange back into op tensors."""
+    G = precv.shape[0]
+    recv = precv[..., 0].reshape(G, n_shards * q)
+    wrecv = (precv[..., 1] & 1).astype(bool).reshape(G, n_shards * q)
+    zrecv = ((precv[..., 1] >> 1) & 0xFF).reshape(G, n_shards * q)
+    nrecv = (precv[..., 1] >> 9).reshape(G, n_shards * q)
+    return recv, wrecv, zrecv, nrecv
+
+
+def _back_merge(hit_back, src_slot, lanes: int):
+    """Merge one round's returned [S, q] hit block back onto its source
+    lanes (reverse of the routing scatter)."""
+    valid = src_slot >= 0
+    return jnp.zeros((lanes,), bool).at[
+        jnp.where(valid, src_slot, 0).reshape(-1)].max(
+        jnp.where(valid, hit_back, False).reshape(-1))
+
+
+def _sync_weights(local_cfg: CacheConfig, state: CacheState,
+                  clients: ClientState):
+    """Lazy weight update: periodic psum of penalty aggregates — the
+    'RPC to the MN controller' (§4.3.2), shared by both DM drivers."""
+    tot = jnp.sum(clients.penalty_cnt)
+    # All shards agree on the sync decision (consistent global weights).
+    do_sync = jax.lax.pmax((tot >= local_cfg.sync_period).astype(
+        jnp.int32), AXIS) > 0
+    pen = jnp.sum(clients.penalty_acc, axis=0)
+    pen_global = jax.lax.psum(jnp.where(do_sync, pen, 0.0), AXIS)
+    lam = jnp.float32(local_cfg.learning_rate)
+    # Shared clamp-then-normalize update (core/cache.py): global
+    # weights sum to exactly 1 on the DM path too.
+    w = apply_penalties(state.weights, pen_global, lam)
+    state = state._replace(weights=jnp.where(do_sync, w, state.weights))
+    clients = clients._replace(
+        penalty_acc=jnp.where(do_sync, 0.0, clients.penalty_acc),
+        penalty_cnt=jnp.where(do_sync, 0, clients.penalty_cnt),
+        local_weights=jnp.where(
+            do_sync, jnp.broadcast_to(w, clients.local_weights.shape),
+            clients.local_weights))
+    return state, clients
+
+
+def _route_capacity(lanes: int, n_shards: int, route_factor: int) -> int:
+    if route_factor <= 0:
+        return lanes
+    return max(1, min(lanes, route_factor * lanes // n_shards + 1))
+
+
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
               keys: jnp.ndarray, is_write=None, obj_size=None,
               tenant=None,
               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+    """Deprecated single-step DM driver: drive traces through
+    ``repro.core.execute`` or :func:`dm_execute` (the pipelined scan is
+    bit-equal to calling this once per step, and overlaps the next
+    group's exchange with the current group's execution)."""
+    from repro.core.cache import _deprecated_entrypoint
+    _deprecated_entrypoint("dm_access")
+    return _dm_access_impl(mesh, local_cfg, dm, keys, is_write, obj_size,
+                           tenant, route_factor)
+
+
+def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
+                    keys: jnp.ndarray, is_write=None, obj_size=None,
+                    tenant=None,
+                    route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
     """One DM step: keys [n_shards * lanes] or a request group
     [G, n_shards * lanes] (0 = no-op). Returns hits of the same shape.
     ``obj_size`` ([.. like keys], 64B blocks, default 1) is bit-packed
@@ -157,11 +297,7 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             tenant = tenant[None]
     G = keys.shape[0]
     lanes = keys.shape[1] // n_shards
-    if route_factor <= 0:
-        q = lanes
-    else:
-        q = max(1, min(lanes, route_factor * lanes // n_shards + 1))
-    global_buckets = local_cfg.n_buckets * n_shards
+    q = _route_capacity(lanes, n_shards, route_factor)
 
     if is_write is None:
         is_write = jnp.zeros_like(keys, dtype=bool)
@@ -170,73 +306,21 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     if tenant is None:
         tenant = jnp.zeros_like(keys, dtype=jnp.uint32)
 
-    def route_one(keys_l, write_l, size_l, ten_l):
-        # --- client side: decide owners, pack per-destination slots -----
-        kh = hash_key(keys_l)
-        owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
-        # no-op lanes (key 0) route nowhere and never consume capacity
-        owner = jnp.where(keys_l != 0, owner, n_shards)
-        # rank within destination
-        # Segment packing, not priority ranking: a stable sort by owner
-        # is the one-shot way to pack per-destination request blocks
-        # (argmin-peel would cost O(lanes) peels).  dittolint: disable=DL003
-        order = jnp.argsort(owner * (lanes + 1)
-                            + jnp.arange(lanes, dtype=owner.dtype))
-        sorted_owner = owner[order]
-        first = jnp.concatenate([jnp.ones((1,), bool),
-                                 sorted_owner[1:] != sorted_owner[:-1]])
-        seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(lanes), 0))
-        rank = jnp.arange(lanes) - seg_start
-        send = jnp.zeros((n_shards, q), jnp.uint32)
-        wsend = jnp.zeros((n_shards, q), bool)
-        zsend = jnp.ones((n_shards, q), jnp.uint32)
-        nsend = jnp.zeros((n_shards, q), jnp.uint32)
-        src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
-        ok = rank < q
-        dst = jnp.where(ok, sorted_owner, n_shards)
-        rr = jnp.where(ok, rank, 0)
-        send = send.at[dst, rr].set(keys_l[order], mode="drop")
-        wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
-        zsend = zsend.at[dst, rr].set(size_l[order], mode="drop")
-        nsend = nsend.at[dst, rr].set(ten_l[order], mode="drop")
-        src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
-                                            mode="drop")
-        # Requests beyond the per-destination capacity are NOT executed
-        # this step (the caller sees hit=False and may reissue); count
-        # them so skewed-trace hit ratios stay honest.
-        n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
-        return send, wsend, zsend, nsend, src_slot, n_drop
+    route_one = _make_route_one(local_cfg, n_shards, lanes, q)
 
     def step(state, clients, stats, keys_l, write_l, size_l, ten_l):
-        # Shard-local scalars arrive as [1]-shaped slices; squeeze them.
-        state = state._replace(
-            n_cached=state.n_cached[0], bytes_cached=state.bytes_cached[0],
-            hist_ctr=state.hist_ctr[0],
-            clock=state.clock[0], weights=state.weights[0],
-            gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
-            tenant_bytes=state.tenant_bytes[0],
-            tenant_budget=state.tenant_budget[0])
-        stats = jax.tree.map(lambda x: x[0], stats)
+        state, stats = _squeeze_shard(state, stats)
         # --- per-round routing: group blocks per destination ------------
         # The sideband word carries size (bits 1-8) + tenant (bits 9+),
         # so sizes are clipped to the engine's own 8-bit clamp (the
         # access path clips identically — bit-identical results).
         size_c = jnp.clip(size_l, 1, 254).astype(jnp.uint32)
-        send, wsend, zsend, nsend, src_slot, n_drop = jax.vmap(route_one)(
-            keys_l, write_l, size_c, ten_l)
+        packed, src_slot, n_drop = jax.vmap(route_one)(
+            keys_l, write_l, size_c, ten_l)                # [G, S, q, 2]
         # --- the network: ONE exchange ships each destination's whole
-        # [G, q] request group (RDMA doorbell-batching analogue); the op
-        # sideband (tenant id << 9 | object size in 64B blocks << 1 |
-        # write bit) rides as a second u32 word of the SAME collective --
-        meta = ((nsend.astype(jnp.uint32) << 9)
-                | (zsend.astype(jnp.uint32) << 1)
-                | wsend.astype(jnp.uint32))
-        packed = jnp.stack([send, meta], axis=-1)         # [G, S, q, 2]
+        # [G, q] request group (RDMA doorbell-batching analogue) ---------
         precv = jax.lax.all_to_all(packed, AXIS, 1, 1, tiled=True)
-        recv = precv[..., 0].reshape(G, n_shards * q)
-        wrecv = (precv[..., 1] & 1).astype(bool).reshape(G, n_shards * q)
-        zrecv = ((precv[..., 1] >> 1) & 0xFF).reshape(G, n_shards * q)
-        nrecv = (precv[..., 1] >> 9).reshape(G, n_shards * q)
+        recv, wrecv, zrecv, nrecv = _unpack_recv(precv, n_shards, q)
 
         # --- memory-pool side: one widened client-centric group step ----
         state, clients2, stats, res = access_group(
@@ -244,46 +328,16 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv)
         stats = stats_add(stats, route_drops=jnp.sum(n_drop))
 
-        # --- route replies back + merge hit masks ------------------------
-        hit_back = jax.lax.all_to_all(
-            res.hit.reshape(G, n_shards, q), AXIS, 1, 1, tiled=True)
-
-        def back_one(hb, ss):
-            valid = ss >= 0
-            return jnp.zeros((lanes,), bool).at[
-                jnp.where(valid, ss, 0).reshape(-1)].max(
-                jnp.where(valid, hb, False).reshape(-1))
-
-        hits = jax.vmap(back_one)(hit_back, src_slot)        # [G, lanes]
+        # --- route replies back + merge hit masks -----------------------
+        hits = jax.vmap(
+            lambda hb, ss: _back_merge(hb, ss, lanes))(
+            jax.lax.all_to_all(res.hit.reshape(G, n_shards, q),
+                               AXIS, 1, 1, tiled=True), src_slot)
 
         # --- lazy weight update: periodic psum of penalty aggregates ----
         clients = _unpad_clients(clients, clients2, lanes)
-        tot = jnp.sum(clients.penalty_cnt)
-        # All shards agree on the sync decision (consistent global weights).
-        do_sync = jax.lax.pmax((tot >= local_cfg.sync_period).astype(
-            jnp.int32), AXIS) > 0
-        pen = jnp.sum(clients.penalty_acc, axis=0)
-        pen_global = jax.lax.psum(jnp.where(do_sync, pen, 0.0), AXIS)
-        lam = jnp.float32(local_cfg.learning_rate)
-        # Shared clamp-then-normalize update (core/cache.py): global
-        # weights sum to exactly 1 on the DM path too.
-        w = apply_penalties(state.weights, pen_global, lam)
-        state = state._replace(weights=jnp.where(do_sync, w, state.weights))
-        clients = clients._replace(
-            penalty_acc=jnp.where(do_sync, 0.0, clients.penalty_acc),
-            penalty_cnt=jnp.where(do_sync, 0, clients.penalty_cnt),
-            local_weights=jnp.where(
-                do_sync, jnp.broadcast_to(w, clients.local_weights.shape),
-                clients.local_weights))
-        # Re-expand shard scalars for the sharded output layout.
-        state = state._replace(
-            n_cached=state.n_cached[None], bytes_cached=state.bytes_cached[None],
-            hist_ctr=state.hist_ctr[None],
-            clock=state.clock[None], weights=state.weights[None],
-            gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
-            tenant_bytes=state.tenant_bytes[None],
-            tenant_budget=state.tenant_budget[None])
-        stats = jax.tree.map(lambda x: x[None], stats)
+        state, clients = _sync_weights(local_cfg, state, clients)
+        state, stats = _expand_shard(state, stats)
         return state, clients, stats, hits
 
     spec_state = jax.tree.map(lambda _: P(AXIS), dm.state)
@@ -302,6 +356,117 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
                                      tenant.astype(jnp.uint32))
     if squeeze:
         hits = hits[0]
+    return DMCache(state, clients, stats), hits
+
+
+def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
+               keys: jnp.ndarray, is_write=None, obj_size=None,
+               tenant=None,
+               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+    """Pipelined DM driver: execute a whole sequence of request groups in
+    ONE sharded scan, overlapping the router's ``all_to_all`` for group
+    k+1 with ``access_group`` for group k.
+
+    ``keys`` is [T, n_shards * lanes] (sequence of single rounds) or
+    [NG, G, n_shards * lanes] (sequence of width-G groups); hits come
+    back in the same leading shape.  Bit-equal to calling
+    :func:`dm_access` once per leading index: routing is a pure function
+    of the keys (state-independent), so every group's exchange can be
+    issued before the previous group's table access commits — the scan
+    carry holds the *received* buffer for the current group while the
+    next exchange is already in flight (double buffering).  Per-step
+    host dispatch, jit retraces and device round-trips collapse into one
+    compiled program; the epilogue issues one extra (discarded) exchange
+    for the wrapped tail group.
+
+    Weight sync, route-drop accounting and the op sideband word are the
+    exact per-step code paths (shared helpers), executed in the same
+    order inside the scan body."""
+    n_shards = mesh.shape[AXIS]
+    flat = keys.ndim == 2
+    if flat:
+        keys = keys[:, None, :]
+        if is_write is not None:
+            is_write = is_write[:, None, :]
+        if obj_size is not None:
+            obj_size = obj_size[:, None, :]
+        if tenant is not None:
+            tenant = tenant[:, None, :]
+    NG, G = keys.shape[0], keys.shape[1]
+    lanes = keys.shape[2] // n_shards
+    q = _route_capacity(lanes, n_shards, route_factor)
+
+    if is_write is None:
+        is_write = jnp.zeros_like(keys, dtype=bool)
+    if obj_size is None:
+        obj_size = jnp.ones_like(keys, dtype=jnp.uint32)
+    if tenant is None:
+        tenant = jnp.zeros_like(keys, dtype=jnp.uint32)
+    tenant = tenant.astype(jnp.uint32)
+
+    if NG == 0:
+        return dm, (jnp.zeros((0, keys.shape[2]), bool) if flat
+                    else jnp.zeros(keys.shape, bool))
+
+    route_one = _make_route_one(local_cfg, n_shards, lanes, q)
+
+    def run(state, clients, stats, keys_l, write_l, size_l, ten_l):
+        state, stats = _squeeze_shard(state, stats)
+        size_c = jnp.clip(size_l, 1, 254).astype(jnp.uint32)
+        # Route EVERY group up front — routing reads only the keys, so
+        # this is exact, and it is what the pipeline overlaps.
+        packed, src_slot, n_drop = jax.vmap(jax.vmap(route_one))(
+            keys_l, write_l, size_c, ten_l)          # [NG, G, S, q, 2]
+        # Summed once == added once per step (integer counter).
+        stats = stats_add(stats, route_drops=jnp.sum(n_drop))
+
+        # Prologue: group 0's exchange fills the first recv buffer.
+        recv0 = jax.lax.all_to_all(packed[0], AXIS, 1, 1, tiled=True)
+        # Scan inputs are each step's NEXT group (wrapped tail: the last
+        # step re-sends group 0 and discards the reply).
+        nxt = jnp.concatenate([packed[1:], packed[:1]], axis=0)
+
+        def body(carry, xs):
+            state, clients, stats, precv = carry
+            pnxt, ss = xs
+            # Issue the NEXT exchange before touching the table: it
+            # depends only on pre-routed keys, never on the carry, so
+            # the scheduler can run it concurrently with this group's
+            # access_group (the double-buffer overlap).
+            precv_next = jax.lax.all_to_all(pnxt, AXIS, 1, 1, tiled=True)
+            recv, wrecv, zrecv, nrecv = _unpack_recv(precv, n_shards, q)
+            state, clients2, stats, res = access_group(
+                local_cfg, state, _pad_clients(clients, n_shards * q),
+                stats, recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv)
+            hits = jax.vmap(
+                lambda hb, s: _back_merge(hb, s, lanes))(
+                jax.lax.all_to_all(res.hit.reshape(G, n_shards, q),
+                                   AXIS, 1, 1, tiled=True), ss)
+            clients = _unpad_clients(clients, clients2, lanes)
+            state, clients = _sync_weights(local_cfg, state, clients)
+            return (state, clients, stats, precv_next), hits
+
+        (state, clients, stats, _), hits = jax.lax.scan(
+            body, (state, clients, stats, recv0), (nxt, src_slot))
+        state, stats = _expand_shard(state, stats)
+        return state, clients, stats, hits
+
+    spec_state = jax.tree.map(lambda _: P(AXIS), dm.state)
+    spec_clients = jax.tree.map(lambda _: P(AXIS), dm.clients)
+    spec_stats = jax.tree.map(lambda _: P(AXIS), dm.stats)
+
+    fn = shard_map(
+        run, mesh=mesh,
+        in_specs=(spec_state, spec_clients, spec_stats,
+                  P(None, None, AXIS), P(None, None, AXIS),
+                  P(None, None, AXIS), P(None, None, AXIS)),
+        out_specs=(spec_state, spec_clients, spec_stats,
+                   P(None, None, AXIS)),
+        check_rep=False)
+    state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
+                                     keys, is_write, obj_size, tenant)
+    if flat:
+        hits = hits[:, 0, :]
     return DMCache(state, clients, stats), hits
 
 

@@ -24,6 +24,7 @@ import math
 from typing import NamedTuple, Optional
 
 from repro.core.types import hit_ratio
+from repro.workloads.plan import PlanCostModel
 
 
 class WindowMetrics(NamedTuple):
@@ -194,6 +195,74 @@ class Autoscaler:
         for k in self._streak:
             self._streak[k] = 0
         return Decision(action, target, reason)
+
+
+# ----------------------------------------------------------------------
+# Online pipeline-width adaptation (DESIGN.md §13).
+# ----------------------------------------------------------------------
+
+class WidthController:
+    """Hysteretic hill-climb over the DM pipeline chunk width.
+
+    The scenario driver dispatches the trace to ``dm_execute`` in chunks
+    of ``width`` rounds (one compiled scan per chunk; chunking is
+    execution-only — results are bit-equal at any width).  Each warm
+    chunk's measured wall time feeds the same linear cost model the
+    trace planner uses (``us_per_chunk(w) ~ alpha + beta*w``, so the
+    per-round cost ``alpha/w + beta`` falls as dispatch overhead
+    amortizes), and at every window boundary the controller climbs one
+    step toward the width the model predicts cheapest per round.
+
+    Stability mirrors the Autoscaler: moves are single steps on the
+    width ladder, need a ``patience`` streak of windows agreeing, and
+    must beat the current width by a ``margin`` factor — measurement
+    noise cannot make the width oscillate."""
+
+    def __init__(self, widths=(1, 2, 4, 8, 16, 32),
+                 model: Optional[PlanCostModel] = None,
+                 margin: float = 1.10, patience: int = 2,
+                 start: Optional[int] = None):
+        assert len(widths) > 0 and margin >= 1.0 and patience >= 1
+        self.widths = sorted(set(int(w) for w in widths))
+        self.model = model if model is not None else PlanCostModel()
+        self.margin = margin
+        self.patience = patience
+        self._i = (self.widths.index(start) if start in self.widths
+                   else len(self.widths) // 2)
+        self._streak = 0
+        self.log: list = []
+
+    @property
+    def width(self) -> int:
+        return self.widths[self._i]
+
+    def observe_chunk(self, n_rounds: int, wall_s: float) -> None:
+        """Record one WARM chunk's wall time (callers must skip the
+        compile call of each chunk shape — a compile would dwarf the
+        signal and freeze the controller)."""
+        if n_rounds > 0 and wall_s > 0:
+            self.model.observe(n_rounds, wall_s * 1e6)
+
+    def _per_round(self, w: int) -> float:
+        return self.model.us_per_step(w) / w
+
+    def propose(self) -> int:
+        """Window-boundary decision: the width to use next."""
+        cur = self._per_round(self.width)
+        lo = max(0, self._i - 1)
+        hi = min(len(self.widths) - 1, self._i + 1)
+        best = min(range(lo, hi + 1), key=lambda i:
+                   self._per_round(self.widths[i]))
+        if best != self._i and cur > self.margin * self._per_round(
+                self.widths[best]):
+            self._streak += 1
+            if self._streak >= self.patience:
+                self._i = best
+                self._streak = 0
+                self.log.append(self.width)
+        else:
+            self._streak = 0
+        return self.width
 
 
 # ----------------------------------------------------------------------

@@ -23,6 +23,7 @@ sees the window's metrics and its decisions are applied as events.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -31,9 +32,10 @@ import numpy as np
 
 from repro.baselines.systems import DittoModel
 from repro.core.types import CacheConfig, stats_delta, stats_sum
-from repro.dm.sharded_cache import dm_access, dm_make
+from repro.dm.sharded_cache import dm_execute, dm_make
 from repro.elastic.controller import (Autoscaler, TenantArbiter,
-                                      TenantWindow, WindowMetrics)
+                                      TenantWindow, WidthController,
+                                      WindowMetrics)
 from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
                                   resize_memory, set_tenant_budgets)
 
@@ -114,7 +116,9 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                  offered_mops: Optional[Callable[[int], float]] = None,
                  seed: int = 0, drain_batch: int = 64,
                  drain_max_steps: int = 256,
-                 sizes=None, tenants=None) -> ScenarioResult:
+                 sizes=None, tenants=None,
+                 width_controller: Optional[WidthController] = None
+                 ) -> ScenarioResult:
     """Run a [T, lanes] trace through the DM cache under an event stream.
 
     Args:
@@ -132,9 +136,16 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         `keys`; defaults to uniform 1-block objects.
       tenants: optional per-request tenant ids aligned with `keys`;
         defaults to tenant 0 everywhere.
+      width_controller: optional :class:`WidthController`.  The trace is
+        dispatched to the pipelined `dm_execute` scan in chunks; without
+        a controller each chunk spans to the next event/window boundary,
+        with one the chunk width adapts online from measured per-chunk
+        wall times (chunking is execution-only — results are bit-equal
+        at any width, so adaptation never perturbs cache decisions).
     """
     mesh, dm, local = dm_make(cfg, n_shards, lanes_per_shard)
-    step_fn = jax.jit(functools.partial(dm_access, mesh, local))
+    exec_fn = jax.jit(functools.partial(dm_execute, mesh, local))
+    compiled_shapes: set = set()
     model = DittoModel()
     workloads = workloads or {}
     n_ten = cfg.n_tenants
@@ -188,28 +199,51 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         events_log.append(dict(t=t, event=name, arg=arg,
                                report=report._asdict()))
 
-    for t in range(horizon):
+    t = 0
+    while t < horizon:
         while pending and pending[0][0] <= t:
             _, (name, arg) = pending.pop(0)
             apply_event(t, name, arg)
 
         L = n_shards * lanes
-        idx = (pos + np.arange(L)) % len(stream)
-        pos += L
-        step_ten = np.minimum(ten_stream[idx], np.uint32(n_ten - 1))
-        step_sz = size_stream[idx]
-        dm, hits = step_fn(dm, jnp.asarray(stream[idx]),
+        # Chunk: run as many rounds as possible in ONE pipelined scan —
+        # up to the next event step, the window boundary, the horizon,
+        # and (when adapting) the controller's current width.  Lanes and
+        # the workload are constant within a chunk by construction.
+        stop = min(horizon, (t // window + 1) * window)
+        if pending:
+            stop = min(stop, pending[0][0])
+        if width_controller is not None:
+            stop = min(stop, t + width_controller.width)
+        n = stop - t
+        idx = (pos + np.arange(n * L)) % len(stream)
+        pos += n * L
+        step_keys = stream[idx].reshape(n, L)
+        step_ten = np.minimum(ten_stream[idx],
+                              np.uint32(n_ten - 1)).reshape(n, L)
+        step_sz = size_stream[idx].reshape(n, L)
+        warm = (n, L) in compiled_shapes
+        tc0 = time.perf_counter()
+        dm, hits = exec_fn(dm, jnp.asarray(step_keys),
                            obj_size=jnp.asarray(step_sz),
                            tenant=jnp.asarray(step_ten))
-        hn = np.asarray(hits, bool)
-        ops_mask = stream[idx] != 0
-        np.add.at(t_ops, step_ten, ops_mask)
-        np.add.at(t_hits, step_ten, hn & ops_mask)
-        np.add.at(t_req_blocks, step_ten, np.where(ops_mask, step_sz, 0))
-        np.add.at(t_hit_blocks, step_ten,
-                  np.where(hn & ops_mask, step_sz, 0))
+        hn = np.asarray(hits, bool)          # host sync: bounds the wall
+        wall = time.perf_counter() - tc0
+        compiled_shapes.add((n, L))
+        if width_controller is not None and warm:
+            # Measured throughput closes the loop: warm chunk timings
+            # refine the width decision (compiles never count).
+            width_controller.observe_chunk(n, wall)
+        ops_mask = step_keys != 0
+        np.add.at(t_ops, step_ten.ravel(), ops_mask.ravel())
+        np.add.at(t_hits, step_ten.ravel(), (hn & ops_mask).ravel())
+        np.add.at(t_req_blocks, step_ten.ravel(),
+                  np.where(ops_mask, step_sz, 0).ravel())
+        np.add.at(t_hit_blocks, step_ten.ravel(),
+                  np.where(hn & ops_mask, step_sz, 0).ravel())
+        t = stop
 
-        if (t + 1) % window == 0 or t == horizon - 1:
+        if t % window == 0 or t == horizon:
             # Maintenance sweep: hold the byte budget between events
             # (the batched sampler alone drifts at low live density).
             dm, enforced = enforce_budget(mesh, local, dm,
@@ -224,7 +258,7 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             m = WindowMetrics.from_stats(
                 d, n_cached=n_cached, capacity=capacity, lanes=L,
                 blocks_cached=blocks, capacity_blocks=capacity,
-                offered_mops=offered_mops(t) if offered_mops else None,
+                offered_mops=offered_mops(t - 1) if offered_mops else None,
                 tput_mops=tput)
             # Per-tenant occupancy (exact, from the pool) + hit rates
             # (host-accumulated from routed hit masks).
@@ -238,7 +272,7 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 miss_blocks=float(t_req_blocks[i] - t_hit_blocks[i]))
                 for i in range(n_ten)]
             windows.append(dict(
-                t0=win_t0, t1=t + 1, capacity=capacity, lanes=L,
+                t0=win_t0, t1=t, capacity=capacity, lanes=L,
                 hit_rate=m.hit_rate, tput_mops=tput, n_cached=n_cached,
                 blocks_cached=blocks, bytes_cached=blocks * 64,
                 evictions=int(d.evictions), insert_drops=int(d.insert_drops),
@@ -248,7 +282,7 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 tenant_budget=[int(b) for b in tenant_budgets],
                 tenant_hit_rate=[round(float(h), 6) for h in ten_hr],
                 tenant_byte_hit_rate=[round(float(h), 6) for h in ten_bhr]))
-            win_t0 = t + 1
+            win_t0 = t
             win_mig = win_drain = 0
             win_events = []
             t_ops[:] = 0
@@ -256,16 +290,18 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             t_req_blocks[:] = 0.0
             t_hit_blocks[:] = 0.0
 
+            if width_controller is not None:
+                width_controller.propose()
             if controller is not None:
                 dec = controller.observe(m)
                 if dec.action == "grow_memory" or dec.action == "shrink_memory":
-                    apply_event(t + 1, "set_capacity", dec.target)
+                    apply_event(t, "set_capacity", dec.target)
                 elif dec.action in ("grow_lanes", "shrink_lanes"):
                     per_shard = -(-dec.target // n_shards)
-                    apply_event(t + 1, "set_lanes", per_shard)
+                    apply_event(t, "set_lanes", per_shard)
             if arbiter is not None and n_ten > 1:
                 prop = arbiter.propose(capacity, ten_windows)
                 if prop is not None:
-                    apply_event(t + 1, "set_tenant_budgets", prop)
+                    apply_event(t, "set_tenant_budgets", prop)
 
     return ScenarioResult(windows, events_log, dm)

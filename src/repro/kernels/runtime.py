@@ -11,7 +11,15 @@ fallback (dittolint rule DL005 enforces that no signature hard-codes
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+# Session-scoped override installed by ExecConfig.interpret (DESIGN.md
+# §13): callers that cannot thread the flag through every kernel
+# signature (the execute() facade jits whole trace drivers) set it for
+# the duration of a trace instead.  None = no override.
+_OVERRIDE: bool | None = None
 
 
 def interpret_default() -> bool:
@@ -20,7 +28,27 @@ def interpret_default() -> bool:
 
 
 def resolve_interpret(interpret) -> bool:
-    """Resolve a kernel's ``interpret`` argument: ``None`` -> backend
-    default.  Called inside jitted kernels; ``interpret`` is static, so
-    this runs at trace time and costs nothing at runtime."""
-    return interpret_default() if interpret is None else bool(interpret)
+    """Resolve a kernel's ``interpret`` argument: ``None`` -> the active
+    :func:`force_interpret` override, else the backend default.  Called
+    inside jitted kernels; ``interpret`` is static, so this runs at
+    trace time and costs nothing at runtime."""
+    if interpret is not None:
+        return bool(interpret)
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    return interpret_default()
+
+
+@contextlib.contextmanager
+def force_interpret(flag: bool | None):
+    """Trace-time override of every ``interpret=None`` kernel default.
+
+    ``None`` is a no-op context.  Callers jitting under the override
+    must key their jit caches on the flag: it binds at trace time."""
+    global _OVERRIDE
+    prev = _OVERRIDE
+    _OVERRIDE = None if flag is None else bool(flag)
+    try:
+        yield
+    finally:
+        _OVERRIDE = prev

@@ -116,6 +116,30 @@ def test_main_missing_file_tolerated(tmp_path):
     assert bc.main(["--file", str(tmp_path / "nope.json")]) == 0
 
 
+def test_speedup_floor_gates_batch_rows_only():
+    newest = rec(ycsb_a_batch32=dict(us_per_call=5.0, fused_speedup=0.90),
+                 ycsb_c_batch32=dict(us_per_call=5.0, fused_speedup=2.0),
+                 ycsb_a_seq=dict(us_per_call=10.0))
+    fails, lines = bc.speedup_floor_gate(newest, 0.95)
+    assert [f[0] for f in fails] == ["ycsb_a_batch32:fused_speedup"]
+    assert any("BELOW FLOOR" in ln for ln in lines)
+    fails, _ = bc.speedup_floor_gate(newest, 0.5)
+    assert fails == []
+    # rows without a fused_speedup field (other BENCH files) are skipped
+    assert bc.speedup_floor_gate(rec(x_batch2=dict(us_per_call=1.0)),
+                                 0.95) == ([], [])
+
+
+def test_speedup_floor_via_main(tmp_path):
+    # The floor is an absolute bar on the NEWEST record: it fires even on
+    # a first run where the regression gate has no baseline.
+    path = tmp_path / "BENCH_t.json"
+    path.write_text(json.dumps(
+        [rec(b_batch8=dict(us_per_call=5.0, fused_speedup=0.5))]))
+    assert bc.main(["--file", str(path)]) == 1
+    assert bc.main(["--file", str(path), "--speedup-floor", "0.4"]) == 0
+
+
 def test_merge_histories_appends_only_newer_records(tmp_path):
     """Artifact seeding must not clobber committed history: records at
     or before the committed tip never come back (a git-side prune of a

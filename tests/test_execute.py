@@ -1,0 +1,310 @@
+"""Unified execution facade + adaptive planner properties (DESIGN.md §13).
+
+Three contracts of the PR 8 API consolidation:
+
+  * ``execute()`` is bit-identical to the legacy drivers it replaces
+    (``run_trace`` sequentially, ``run_trace_grouped`` on the same
+    plan) — the facade adds planning and metrics, never decisions.
+  * Every schedule ``plan_adaptive`` emits is *valid*: segments tile
+    the trace, every non-pad request is scheduled exactly once, groups
+    respect the lane-scope packing invariant, and per-lane per-key
+    program order survives.  On an adversarial all-same-bucket write
+    trace the planner must degenerate to G=1.
+  * The pipelined DM driver ``dm_execute`` matches the per-step
+    ``dm_access`` bit for bit (multi-shard, in a subprocess).
+
+Property tests run under hypothesis when available and fall back to a
+deterministic seed sweep otherwise (the CI image has no hypothesis, and
+an importorskip would silently skip the whole module).
+"""
+
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig
+from repro.core.cache import run_trace, run_trace_grouped
+from repro.core.execute import execute, make
+from repro.core.types import ExecConfig
+from repro.workloads.plan import (_buckets_of, plan_adaptive, plan_groups)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+C = 4
+
+
+def _mk(n_buckets=64, capacity=128, seed=0, **kw):
+    cfg = CacheConfig(n_buckets=n_buckets, assoc=4, capacity=capacity, **kw)
+    return make(cfg, C, seed)
+
+
+def _trace(T=40, seed=0, n_keys=200):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(1.3, (T, C)) % n_keys + 1).astype(np.uint32)
+    wr = rng.random((T, C)) < 0.3
+    return keys, wr
+
+
+def _assert_leaves_equal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), what
+
+
+# ----------------------------------------------------------------------
+# Facade == legacy drivers, bit for bit.
+# ----------------------------------------------------------------------
+
+def test_execute_seq_bit_equal_run_trace():
+    cache = _mk()
+    keys, wr = _trace()
+    res = execute(cache, keys, plan=None, is_write=wr)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tr = run_trace(cache.cfg, cache.state, cache.clients,
+                       jnp.asarray(keys), jnp.asarray(wr))
+    _assert_leaves_equal((res.state, res.clients, res.stats),
+                         (tr.state, tr.clients, tr.stats))
+    assert np.array_equal(res.hits, np.asarray(tr.hits))
+    assert np.array_equal(res.ops, np.asarray(tr.ops))
+
+
+def test_execute_grouped_bit_equal_run_trace_grouped():
+    cache = _mk()
+    keys, wr = _trace(T=48, seed=1)
+    gp = plan_groups(keys, cache.cfg.n_buckets, 4, scope="strict",
+                     is_write=wr)
+    res = execute(cache, keys, plan=gp, is_write=wr)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tr = run_trace_grouped(cache.cfg, cache.state, cache.clients,
+                               jnp.asarray(gp.keys),
+                               jnp.asarray(gp.is_write),
+                               jnp.asarray(gp.sizes))
+    _assert_leaves_equal((res.state, res.clients, res.stats),
+                         (tr.state, tr.clients, tr.stats))
+
+
+def test_execute_explicit_plan_honored_at_batch_1():
+    """An explicit GroupPlan must execute grouped even when ExecConfig
+    caps the *planner* at batch=1 (batch limits planning, not plans)."""
+    cache = _mk()
+    keys, wr = _trace(T=32, seed=2)
+    gp = plan_groups(keys, cache.cfg.n_buckets, 4, scope="strict",
+                     is_write=wr)
+    res = execute(cache, keys, plan=gp, is_write=wr,
+                  exec_cfg=ExecConfig(batch=1))
+    assert res.schedule.max_width == gp.batch
+    ref = execute(cache, keys, plan=gp, is_write=wr)
+    _assert_leaves_equal((res.state, res.stats), (ref.state, ref.stats))
+
+
+def test_legacy_entrypoints_warn():
+    cache = _mk()
+    keys, _ = _trace(T=8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_trace(cache.cfg, cache.state, cache.clients, jnp.asarray(keys))
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+
+
+def test_execute_adaptive_conserves_requests():
+    """Whatever widths the planner picks, every non-pad request is
+    executed exactly once (total ops equals the trace's request count)
+    and the windows metadata accounts for the whole trace."""
+    cache = _mk()
+    keys, wr = _trace(T=128, seed=3, n_keys=50)
+    res = execute(cache, keys, plan="adaptive", is_write=wr,
+                  exec_cfg=ExecConfig(batch=8))
+    assert int(res.ops.sum()) == int((keys != 0).sum())
+    assert sum(w["n_requests"] for w in res.windows) == int((keys != 0).sum())
+    assert int(res.hits.sum()) <= int(res.ops.sum())
+
+
+# ----------------------------------------------------------------------
+# Adaptive-plan validity properties.
+# ----------------------------------------------------------------------
+
+def _check_adaptive_plan(keys, wr, n_buckets=16, max_batch=8):
+    """Validity of one plan_adaptive schedule, checked from scratch."""
+    keys = np.asarray(keys, np.uint32)
+    wr = np.asarray(wr, bool)
+    T, c = keys.shape
+    sched = plan_adaptive(keys, n_buckets, max_batch, is_write=wr,
+                          validate=True)
+
+    # Segments tile [0, T) contiguously, in trace order.
+    pos = 0
+    for s in sched.segments:
+        assert s.start == pos and s.stop > s.start, sched.segments
+        pos = s.stop
+    assert pos == T
+
+    bucket = _buckets_of(keys, n_buckets)
+    scheduled = []  # (t, lane, execution rank)
+    for si, s in enumerate(sched.segments):
+        if s.width == 1:
+            assert s.plan is None
+            for t in range(s.start, s.stop):
+                for ci in range(c):
+                    if keys[t, ci]:
+                        scheduled.append((t, ci, (si, t, 0)))
+            continue
+        gp = s.plan
+        ng, g, _ = gp.keys.shape
+        for gi in range(ng):
+            for ci in range(c):
+                # Lane-scope invariant: a lane revisiting a bucket
+                # within one group is only legal when every op involved
+                # is a read (read-read reuse).
+                seen_write = {}
+                for r in range(g):
+                    t = int(gp.src_t[gi, r, ci])
+                    if t < 0:
+                        continue
+                    assert gp.keys[gi, r, ci] == keys[t, ci]
+                    assert bool(gp.is_write[gi, r, ci]) == bool(wr[t, ci])
+                    b = int(bucket[t, ci])
+                    w = bool(wr[t, ci])
+                    if b in seen_write:
+                        assert not (seen_write[b] or w), \
+                            (si, gi, ci, b, "write revisit within group")
+                    seen_write[b] = seen_write.get(b, False) or w
+                    scheduled.append((t, ci, (si, gi, r)))
+
+    # Exactly the non-pad requests, each exactly once.
+    want = {(t, ci) for t in range(T) for ci in range(c) if keys[t, ci]}
+    got = [(t, ci) for t, ci, _ in scheduled]
+    assert len(got) == len(set(got)) == len(want)
+    assert set(got) == want
+
+    # Per-lane per-key program order survives scheduling.
+    by_lane_key = {}
+    for t, ci, rank in scheduled:
+        by_lane_key.setdefault((ci, int(keys[t, ci])), []).append((rank, t))
+    for seq in by_lane_key.values():
+        ts = [t for _, t in sorted(seq)]
+        assert ts == sorted(ts), "program order broken"
+    return sched
+
+
+def _check_strict_plan(keys, wr, n_buckets=16, batch=4):
+    """plan_groups scope=strict: a bucket in at most one round/group."""
+    keys = np.asarray(keys, np.uint32)
+    gp = plan_groups(keys, n_buckets, batch, scope="strict",
+                     is_write=np.asarray(wr, bool), validate=True)
+    bucket = _buckets_of(gp.keys, n_buckets)
+    for gi in range(gp.n_groups):
+        rounds_of = {}
+        for r in range(gp.batch):
+            for ci in range(keys.shape[1]):
+                if gp.src_t[gi, r, ci] >= 0:
+                    rounds_of.setdefault(int(bucket[gi, r, ci]),
+                                         set()).add(r)
+        for b, rset in rounds_of.items():
+            assert len(rset) == 1, (gi, b, rset, "bucket in two rounds")
+
+
+def test_adaptive_degenerates_on_all_same_bucket():
+    """Adversarial trace: every request writes the same key (one bucket)
+    — no two rows ever commute, so the planner must fall back to G=1."""
+    keys = np.full((256, C), 7, np.uint32)
+    wr = np.ones((256, C), bool)
+    sched = plan_adaptive(keys, 64, 32, is_write=wr)
+    assert sched.max_width == 1
+    assert all(s.plan is None for s in sched.segments)
+    _check_adaptive_plan(keys, wr, n_buckets=64, max_batch=32)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _trace_st = st.lists(
+        st.lists(st.integers(min_value=0, max_value=30),
+                 min_size=C, max_size=C),
+        min_size=1, max_size=48)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_trace_st, st.integers(min_value=0, max_value=2 ** 31))
+    def test_adaptive_plan_valid_property(rows, wseed):
+        keys = np.asarray(rows, np.uint32)
+        wr = np.random.default_rng(wseed).random(keys.shape) < 0.4
+        _check_adaptive_plan(keys, wr)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_trace_st, st.integers(min_value=0, max_value=2 ** 31))
+    def test_strict_plan_valid_property(rows, wseed):
+        keys = np.asarray(rows, np.uint32)
+        wr = np.random.default_rng(wseed).random(keys.shape) < 0.4
+        _check_strict_plan(keys, wr)
+
+except ImportError:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_adaptive_plan_valid_property(seed):
+        rng = np.random.default_rng(seed)
+        T = int(rng.integers(1, 48))
+        keys = rng.integers(0, 31, (T, C)).astype(np.uint32)
+        wr = rng.random((T, C)) < 0.4
+        _check_adaptive_plan(keys, wr)
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_strict_plan_valid_property(seed):
+        rng = np.random.default_rng(seed)
+        T = int(rng.integers(1, 48))
+        keys = rng.integers(0, 31, (T, C)).astype(np.uint32)
+        wr = rng.random((T, C)) < 0.4
+        _check_strict_plan(keys, wr)
+
+
+# ----------------------------------------------------------------------
+# Pipelined DM driver == per-step driver (multi-shard subprocess).
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dm_execute_bit_equal_per_step():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import functools, warnings
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CacheConfig
+from repro.dm.sharded_cache import _dm_access_impl, dm_execute, dm_make
+
+cfg = CacheConfig(n_buckets=64, assoc=4, capacity=128, capacity_blocks=256,
+                  n_tenants=2, tenant_budget_blocks=(128, 128))
+mesh, dm0, local = dm_make(cfg, n_shards=4, lanes_per_shard=8, seed=0)
+rng = np.random.default_rng(0)
+T, L = 24, 4 * 8
+keys = (rng.zipf(1.2, size=(T, L)) % 500 + 1).astype(np.uint32)
+wr = rng.random((T, L)) < 0.3
+sz = rng.integers(1, 8, size=(T, L)).astype(np.uint32)
+tn = rng.integers(0, 2, size=(T, L)).astype(np.uint32)
+
+step = jax.jit(functools.partial(_dm_access_impl, mesh, local))
+dm_seq, hits_seq = dm0, []
+for t in range(T):
+    dm_seq, h = step(dm_seq, jnp.asarray(keys[t]), jnp.asarray(wr[t]),
+                     jnp.asarray(sz[t]), jnp.asarray(tn[t]))
+    hits_seq.append(np.asarray(h))
+hits_seq = np.stack(hits_seq)
+
+dm_pipe, hits_pipe = dm_execute(mesh, local, dm0, jnp.asarray(keys),
+                                jnp.asarray(wr), jnp.asarray(sz),
+                                jnp.asarray(tn))
+assert np.array_equal(hits_seq, np.asarray(hits_pipe))
+for part in ("state", "clients", "stats"):
+    for a, b in zip(jax.tree.leaves(getattr(dm_seq, part)),
+                    jax.tree.leaves(getattr(dm_pipe, part))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), part
+print("dm_execute bit-equal: OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "dm_execute bit-equal: OK" in out.stdout
