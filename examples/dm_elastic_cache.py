@@ -2,7 +2,10 @@
 devices with all_to_all request routing, then driven through a full
 elasticity timeline — memory grow (zero migration), compute grow/shrink
 (lane width with client-state carry-over), memory shrink (online drain),
-and a workload shift — via the elastic runtime's scenario driver.
+a workload shift, and a kill-a-shard failover leg (hot-bucket
+replication + heartbeat detection + rewarming recovery, DESIGN.md §14)
+— via the elastic runtime's scenario driver and the `dm.Cluster`
+membership handle.
 
   PYTHONPATH=src python examples/dm_elastic_cache.py
 (must be its own process: it forces an 8-device host platform)
@@ -15,7 +18,7 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import numpy as np
 
 from repro.core import CacheConfig
-from repro.elastic import run_scenario
+from repro.elastic import HealthMonitor, run_scenario
 from repro.workloads import lru_friendly, zipfian
 
 cfg = CacheConfig(n_buckets=1024, assoc=8, capacity=2048,
@@ -27,25 +30,40 @@ timeline = [
     (250, ("set_lanes", 8)),             # compute shrink: decommission flush
     (300, ("set_capacity", 1024)),       # memory shrink: online drain
     (350, ("switch_workload", "shift")),  # recency-heavy phase
+    (400, ("fail_shard", 3)),            # shard 3's DRAM is gone; routing
+    #                                    # doesn't know yet — bounces until
+    #                                    # the heartbeat monitor re-routes
+    (475, ("recover_shard", 3)),         # replacement up: rewarm from the
+    #                                    # survivors, route home again
 ]
 res = run_scenario(
     cfg, zipfian(64 * 500, 20_000, seed=0), timeline,
-    n_shards=8, lanes_per_shard=8, horizon=500, window=50,
-    workloads={"shift": lru_friendly(20_000, seed=3)})
+    n_shards=8, lanes_per_shard=8, horizon=500, window=25,
+    workloads={"shift": lru_friendly(20_000, seed=3)},
+    health=HealthMonitor(8),             # missed-beat failover detection
+    replicate_hot=64)                    # hot-bucket replica election
 
 print(f"{'window':>10} {'cap':>5} {'lanes':>5} {'hit%':>6} "
-      f"{'cached':>6} {'KiB':>6} {'Mops':>6} {'drain':>5} events")
+      f"{'cached':>6} {'KiB':>6} {'Mops':>6} {'drop':>5} {'up':>3} events")
 for w in res.windows:
     print(f"{w['t0']:>4}-{w['t1']:<5} {w['capacity']:>5} {w['lanes']:>5} "
           f"{100 * w['hit_rate']:>6.1f} {w['n_cached']:>6} "
           f"{w['bytes_cached'] // 1024:>6} "
-          f"{w['tput_mops']:>6.2f} {w['drain_steps']:>5} "
+          f"{w['tput_mops']:>6.2f} {w['route_drops']:>5} "
+          f"{sum(w['routed']):>3} "
           f"{','.join(w['events']) or '-'}")
 
-mig = sum(e["report"]["migration_bytes"] for e in res.events)
-print(f"\nresize events: {len(res.events)}, migrated bytes (measured): {mig}")
-per_shard = np.asarray(res.dm.state.bytes_cached)
+resize_ev = [e for e in res.events
+             if e["event"] in ("set_capacity", "set_lanes")]
+mig = sum(e["report"]["migration_bytes"] for e in resize_ev)
+rewarm = [e for e in res.events if e["event"] == "recover_shard"][0]
+print(f"\nresize events: {len(resize_ev)}, migrated bytes (measured): {mig}")
+print(f"failover: detected {[e['t'] for e in res.events if e['event'] == 'mark_failed']},"
+      f" rewarmed {rewarm['report']['drained_objects']} objects "
+      f"({rewarm['report']['migration_bytes']} bytes) on recovery")
+per_shard = np.asarray(res.cluster.dm.state.bytes_cached)
 print(f"final byte occupancy {per_shard.sum()} blocks <= budget "
       f"{res.windows[-1]['capacity']} blocks, per-shard: {per_shard}")
-assert mig == 0
+assert mig == 0, "capacity/lane resizes must not move data"
+assert all(res.cluster.alive) and all(res.cluster.routed)
 assert per_shard.sum() <= res.windows[-1]["capacity"] + 64

@@ -60,7 +60,14 @@ if [[ "$FAST" == "1" ]]; then
         "from benchmarks import sizes; sizes.run(quick=True)"
     phase bench-tenants python -c \
         "from benchmarks import tenants; tenants.run(quick=True)"
+    # Kill-a-shard failover rows only (the full elasticity timeline is
+    # the slow lane's); asserts the replication win, and bench_compare
+    # gates the recovery-window hit_rate against history.
+    phase bench-failover python benchmarks/elasticity.py \
+        --quick --failover-only
     phase bench-compare python scripts/bench_compare.py
+    phase bench-compare-elastic python scripts/bench_compare.py \
+        --file BENCH_elasticity.json --threshold 0.6
     # sizes/tenants rows are un-repeated single measurements: gate them
     # at a looser threshold so jitter cannot redden the lane
     phase bench-compare-sizes python scripts/bench_compare.py \
@@ -88,5 +95,7 @@ phase bench-compare-sizes python scripts/bench_compare.py \
     --file BENCH_sizes.json --threshold 0.6
 phase bench-compare-tenants python scripts/bench_compare.py \
     --file BENCH_tenants.json --threshold 0.6
+phase bench-compare-elastic python scripts/bench_compare.py \
+    --file BENCH_elasticity.json --threshold 0.6
 
 echo "check: OK"

@@ -76,6 +76,14 @@ _AST_FIXTURES = {
               "from repro.core.cache import run_trace\n"
               "def f(cfg, st, cl, keys, wr):\n"
               "    return run_trace(cfg, st, cl, keys, wr)\n"),
+    # Placed OUTSIDE the membership-shim allowlist so both the named
+    # entry point and the positional set_capacity spelling flag.
+    "DL008": ("src/repro/workloads/_fixture.py",
+              "from repro.dm import dm_set_capacity\n"
+              "from repro.elastic import set_capacity\n"
+              "def f(dm):\n"
+              "    dm = dm_set_capacity(dm, 1024, 8)\n"
+              "    return set_capacity(dm, 1024, 8)\n"),
 }
 
 

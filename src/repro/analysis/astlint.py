@@ -29,6 +29,13 @@ shipped) and that review keeps re-catching by hand:
          purpose.  New call sites go through ``repro.core.execute``
          (PR 8 API consolidation); the legacy names warn and will be
          removed.
+  DL008  Deprecated membership entry point — a direct call to
+         ``dm_make``/``dm_set_capacity``, or to bare ``set_capacity``
+         with a positional ``n_shards``, outside the shims.  Cluster
+         membership (mesh, topology, replica map, liveness) lives on one
+         handle now: build with ``repro.dm.Cluster.make`` and mutate
+         through its methods (``with_capacity`` & co, PR 9 API
+         consolidation); the legacy names warn and will be removed.
 
 Escape hatch: append ``# dittolint: disable=DL003`` (comma-separate for
 several rules) to the flagged line.  Use it to *document* an intentional
@@ -61,6 +68,9 @@ RULES: Dict[str, str] = {
     "DL007": "direct call to a deprecated entry point "
              "(run_trace/run_trace_grouped/dm_access); use "
              "repro.core.execute()",
+    "DL008": "direct call to a deprecated membership entry point "
+             "(dm_make/dm_set_capacity/positional set_capacity); use "
+             "repro.dm.Cluster",
 }
 
 # Modules where code is jit-traced: DL001 applies here.
@@ -77,6 +87,15 @@ LEGACY_SHIM_MODULES = ("/core/cache.py", "/core/execute.py",
                        "/analysis/")
 _DEPRECATED_ENTRYPOINTS = frozenset(
     {"run_trace", "run_trace_grouped", "dm_access"})
+# The membership surface consolidated onto repro.dm.Cluster (PR 9): the
+# shims themselves, the handle that wraps them, and the resize module
+# whose ``_set_capacity_impl`` the shims pass through.  A bare
+# ``set_capacity`` only flags when called with a positional ``n_shards``
+# (3+ positional args) — that is the legacy resize spelling; other
+# two-arg ``set_capacity`` names in scope are not the DM entry point.
+MEMBERSHIP_SHIM_MODULES = LEGACY_SHIM_MODULES + ("/dm/cluster.py",
+                                                 "/elastic/resize.py")
+_MEMBERSHIP_ENTRYPOINTS = frozenset({"dm_make", "dm_set_capacity"})
 
 _DISABLE_RE = re.compile(r"#.*dittolint:\s*disable=([A-Z0-9_]+(?:\s*,\s*[A-Z0-9_]+)*)")
 
@@ -158,6 +177,8 @@ class _Linter(ast.NodeVisitor):
         self.hot = any(m in norm for m in HOT_PATH_MODULES)
         self.legacy_ok = in_tests or any(m in norm
                                          for m in LEGACY_SHIM_MODULES)
+        self.membership_ok = in_tests or any(
+            m in norm for m in MEMBERSHIP_SHIM_MODULES)
         self.findings: List[Finding] = []
 
     def flag(self, node: ast.AST, rule: str, detail: str = "") -> None:
@@ -290,6 +311,12 @@ class _Linter(ast.NodeVisitor):
             self.flag(node, "DL003", chain or leaf)
         if leaf in _DEPRECATED_ENTRYPOINTS and not self.legacy_ok:
             self.flag(node, "DL007", chain or leaf)
+        if not self.membership_ok:
+            if leaf in _MEMBERSHIP_ENTRYPOINTS:
+                self.flag(node, "DL008", chain or leaf)
+            elif leaf == "set_capacity" and len(node.args) >= 3:
+                self.flag(node, "DL008",
+                          f"{chain or leaf} with positional n_shards")
         # DL004: .astype(float) / .astype(int) and dtype=float/int kwargs.
         if leaf == "astype" and node.args:
             a = node.args[0]

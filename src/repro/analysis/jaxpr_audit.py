@@ -251,14 +251,15 @@ def _audit_dm() -> List[Finding]:
     """Audit ``dm_access`` on however many devices this process has (the
     routing/collective structure is shard-count independent)."""
     from repro.core.types import CacheConfig
-    from repro.dm.sharded_cache import dm_access, dm_make
+    from repro.dm.sharded_cache import _dm_access_impl, _dm_make_impl
     n_shards = len(jax.devices())
     cfg = CacheConfig(n_buckets=64 * n_shards, assoc=4,
                       capacity=64 * n_shards, hist_len=64 * n_shards)
-    mesh, dm, local = dm_make(cfg, n_shards=n_shards, lanes_per_shard=4)
+    mesh, dm, local = _dm_make_impl(cfg, n_shards=n_shards,
+                                    lanes_per_shard=4)
     keys = jnp.ones((n_shards * 4,), jnp.uint32)
     closed = jax.make_jaxpr(
-        functools.partial(dm_access, mesh, local))(dm, keys)
+        functools.partial(_dm_access_impl, mesh, local))(dm, keys)
     return audit_closed(closed, "dm_access", CONVERT_BUDGETS["dm_access"])
 
 

@@ -118,6 +118,7 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
                  values: jnp.ndarray | None = None,
                  tenant: jnp.ndarray | None = None,
                  insert_on_miss: bool = True,
+                 shadow: jnp.ndarray | None = None,
                  ) -> Tuple[CacheState, ClientState, OpStats, AccessResult]:
     """One batched cache step over a [G, C] request group.
 
@@ -140,6 +141,12 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         (and the per-slot tenant column left untouched) when
         cfg.n_tenants == 1, so single-tenant behavior is bit-identical
         to the pre-tenant engine.
+      shadow: bool[G, C] — write-through replica mirrors (DM layer).
+        Shadow ops execute fully (state mutation, RDMA/wire counters)
+        but are excluded from the client-visible counters
+        (gets/sets/hits/misses/hit_bytes/miss_bytes) and tallied in
+        ``replica_writes`` instead, so hit ratios keep the offered-load
+        denominator.  ``None`` is bit-identical to all-False.
     """
     G, C = keys.shape
     B = G * C
@@ -679,15 +686,35 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
                + ins_blocks * 64 + n_ins * SLOT_B   # payload + slot init
                + set_blocks * 64                    # SET payload rewrite
                + jnp.sum(write_hist) * 16 + sep_hist * SLOT_B)
+    if shadow is None:
+        gets_v, sets_v = n_op - n_set, n_set
+        hits_v, misses_v = n_hit, jnp.sum(miss)
+        hit_bytes_v, miss_bytes_v = hit_blocks * 64, miss_blocks * 64
+        n_rep = 0
+    else:
+        # Mirror ops execute (RDMA/wire counters above see them) but are
+        # invisible to the client-facing ratios — they are replication
+        # traffic, not offered load.
+        sh = shadow.reshape(B) & op
+        vis = op & ~sh
+        n_set_v = jnp.sum(vis & is_write)
+        gets_v, sets_v = jnp.sum(vis) - n_set_v, n_set_v
+        hits_v = jnp.sum(hit & ~sh)
+        misses_v = jnp.sum(miss & ~sh)
+        hit_bytes_v = jnp.sum(
+            jnp.where(hit & ~sh, old_sz, U32(0))).astype(I32) * 64
+        miss_bytes_v = jnp.sum(
+            jnp.where(miss & ~sh, obj_size, U32(0))).astype(I32) * 64
+        n_rep = jnp.sum(sh)
     stats = stats_add(
         stats, rdma_read=reads, rdma_write=writes, rdma_cas=cas,
-        rdma_faa=faa, rpc=n_sync, gets=n_op - n_set, sets=n_set,
+        rdma_faa=faa, rpc=n_sync, gets=gets_v, sets=sets_v,
         rdma_read_bytes=read_b, rdma_write_bytes=write_b,
-        hit_bytes=hit_blocks * 64, miss_bytes=miss_blocks * 64,
-        hits=n_hit, misses=jnp.sum(miss), regrets=jnp.sum(regret),
+        hit_bytes=hit_bytes_v, miss_bytes=miss_bytes_v,
+        hits=hits_v, misses=misses_v, regrets=jnp.sum(regret),
         evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
         insert_drops=jnp.sum(dropped), fc_hits=n_fc_hit,
-        fc_flushes=n_faa, weight_syncs=n_sync)
+        fc_flushes=n_faa, weight_syncs=n_sync, replica_writes=n_rep)
 
     if cfg.sanitize:
         # dittolint pass 3 (DESIGN.md §12): jittable invariant checks on

@@ -194,13 +194,76 @@ def _schedule_for(plan, keys, run_cfg: CacheConfig, xc: ExecConfig,
     raise ValueError(f"unknown plan mode {plan!r}")
 
 
+def _execute_cluster(cluster, trace, *, plan, exec_cfg, is_write, sizes,
+                     tenants) -> ExecResult:
+    """Cluster branch of :func:`execute`: one pipelined, failover-aware
+    ``dm_execute`` scan under the handle's membership (replica fan-out,
+    re-routes and dead-shard bounces all ride the routing maps).  The DM
+    router packs per-destination groups itself, so host-side planning
+    does not apply — ``plan`` must be left unset/None."""
+    from repro.dm.sharded_cache import dm_execute
+    if plan is not _UNSET and plan is not None:
+        raise ValueError(
+            "execute(Cluster, ...) runs the pipelined DM scan — the "
+            "router packs per-destination request groups itself; pass "
+            "plan=None (or omit it)")
+    xc = exec_cfg if exec_cfg is not None else cluster.cfg.split()[1]
+    keys = np.asarray(trace, np.uint32)
+    if keys.ndim != 2:
+        raise ValueError(f"trace must be [T, S*lanes]; got {keys.shape}")
+    T, L = keys.shape
+    if L % cluster.n_shards != 0:
+        raise ValueError(
+            f"trace width {L} not divisible by n_shards={cluster.n_shards}")
+
+    key = ("cluster", cluster.local, cluster.n_shards, xc.route_factor)
+    hit = _JIT_CACHE.get(key)
+    if hit is None:
+        import functools
+        fn = jax.jit(functools.partial(
+            dm_execute, cluster.mesh, cluster.local,
+            route_factor=xc.route_factor))
+        hit = _JIT_CACHE[key] = (fn, set())
+    fn, warm = hit
+
+    args = dict(
+        is_write=None if is_write is None else jnp.asarray(
+            np.asarray(is_write, bool)),
+        obj_size=None if sizes is None else jnp.asarray(
+            np.asarray(sizes, np.uint32)),
+        tenant=None if tenants is None else jnp.asarray(
+            np.asarray(tenants, np.uint32)))
+    shape_key = (keys.shape, *(None if v is None else v.shape
+                               for v in args.values()))
+    was_warm = shape_key in warm
+    t0 = time.perf_counter()
+    dm, hits = fn(cluster.dm, jnp.asarray(keys),
+                  member=cluster.membership(), **args)
+    hits = np.asarray(jax.block_until_ready(hits), bool)
+    wall = time.perf_counter() - t0
+    warm.add(shape_key)
+
+    new_cluster = cluster._replace(dm=dm)
+    ops = (keys != 0).sum(axis=1).astype(np.int32)
+    n_req = int(ops.sum())
+    windows = (dict(start=0, stop=T, width=1, n_steps=T, n_requests=n_req,
+                    fill=1.0, wall_s=wall,
+                    us_per_call=wall * 1e6 / max(n_req, 1),
+                    compiled=not was_warm),)
+    return ExecResult(new_cluster, hits.sum(axis=1).astype(np.int32), ops,
+                      np.zeros((0,), np.float32), windows, 0.0, wall, None)
+
+
 def execute(cache, trace, *, plan=_UNSET, exec_cfg: ExecConfig | None = None,
             is_write=None, sizes=None, tenants=None,
             model: Optional[PlanCostModel] = None) -> ExecResult:
     """Execute a [T, C] request trace against a cache, planned.
 
     Args:
-      cache: :class:`Cache` handle (or (cfg, state, clients, stats)).
+      cache: :class:`Cache` handle (or (cfg, state, clients, stats)) —
+        or a :class:`repro.dm.Cluster`, in which case the trace is
+        [T, n_shards*lanes] and runs as one failover-aware pipelined DM
+        scan under the cluster's membership (see `_execute_cluster`).
       trace: u32[T, C] keys; 0 marks a padded no-op lane.
       plan: ``"adaptive" | "strict" | "lane" | None``, or a precomputed
         ``GroupPlan`` / ``SegmentSchedule``.  Defaults to
@@ -216,6 +279,11 @@ def execute(cache, trace, *, plan=_UNSET, exec_cfg: ExecConfig | None = None,
     round* (planned segments execute the plan's round order, sequential
     segments the trace's); totals in ``stats`` are order-free.
     """
+    from repro.dm.cluster import Cluster
+    if isinstance(cache, Cluster):
+        return _execute_cluster(cache, trace, plan=plan, exec_cfg=exec_cfg,
+                                is_write=is_write, sizes=sizes,
+                                tenants=tenants)
     cache = _as_cache(cache)
     if exec_cfg is None:
         exec_cfg = cache.cfg.split()[1]

@@ -299,7 +299,18 @@ class OpStats(NamedTuple):
     bucket_evictions: jnp.ndarray   # in-bucket fallback evictions
     insert_drops: jnp.ndarray       # inserts dropped on full buckets
     route_drops: jnp.ndarray        # DM requests beyond the router's lane
-                                    # capacity (counted, never silent)
+                                    # capacity, or bounced off a dead
+                                    # shard before failover re-route
+                                    # (counted, never silent)
+    replica_writes: jnp.ndarray     # write-through mirror ops executed at
+                                    # a secondary replica (internal
+                                    # replication traffic: excluded from
+                                    # gets/sets/hits so client-visible
+                                    # ratios keep their denominator)
+    replica_drops: jnp.ndarray      # mirror ops dropped (router capacity
+                                    # or dead secondary) — the replica
+                                    # staleness budget, counted like
+                                    # route_drops
     fc_hits: jnp.ndarray
     fc_flushes: jnp.ndarray
     weight_syncs: jnp.ndarray

@@ -1,3 +1,12 @@
-from repro.dm.sharded_cache import (DMCache, dm_make, dm_access, dm_set_capacity)
+from repro.dm.cluster import (Cluster, mark_failed, replica_map,
+                              with_capacity, with_lanes,
+                              with_tenant_budgets)
+from repro.dm.sharded_cache import (DMCache, Membership, dm_access,
+                                    dm_make, dm_set_capacity,
+                                    identity_membership)
 
-__all__ = ["DMCache", "dm_make", "dm_access", "dm_set_capacity"]
+__all__ = ["Cluster", "DMCache", "Membership", "identity_membership",
+           "mark_failed", "replica_map", "with_capacity", "with_lanes",
+           "with_tenant_budgets",
+           # deprecated shims (DL008 lints new callers)
+           "dm_make", "dm_access", "dm_set_capacity"]

@@ -26,18 +26,50 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.cache import access_group, apply_penalties
-from repro.core.hashing import bucket_of, hash_key
+from repro.core.hashing import bucket_of, hash_key, splitmix32
 from repro.core.types import (CacheConfig, CacheState, ClientState, OpStats,
                               init_cache, init_clients, init_stats,
                               split_tenant_budgets, stats_add)
 
 AXIS = "pool"
 
+# Salt decorrelating the replica-pick hash from the bucket hash: a request
+# whose key lands in bucket b must not always pick the same replica side as
+# every other key in b, or the "fan reads across replicas" load split
+# degenerates per bucket.
+_PICK_SALT = jnp.uint32(0x9E3779B9)
+
 
 class DMCache(NamedTuple):
     state: CacheState      # slot arrays sharded over AXIS (bucket ranges)
     clients: ClientState   # client lanes sharded over AXIS
     stats: OpStats         # per-shard counters (psum at read time)
+
+
+class Membership(NamedTuple):
+    """Routing-time cluster membership, threaded through the DM drivers as
+    dynamic (traced) arrays so failover/replica changes never recompile.
+
+    ``primary``/``replica`` are the ROUTER's view (what `Cluster.membership`
+    computed from the shards it believes alive); ``serving`` is ground
+    truth.  Between a failure and its heartbeat detection the two disagree:
+    requests still route to the dead shard and bounce (counted in
+    ``route_drops`` — the timeout analogue), which is exactly the
+    detection-latency dip the failover benchmark measures.
+    """
+    primary: jnp.ndarray   # i32[global_buckets] owner shard per bucket
+    replica: jnp.ndarray   # i32[global_buckets] secondary (n_shards = none)
+    serving: jnp.ndarray   # bool[n_shards] ground-truth liveness
+
+
+def identity_membership(n_shards: int, global_buckets: int) -> Membership:
+    """The no-replication, all-alive membership: bit-identical routing to
+    the pre-Membership router (owner = bucket // local_buckets)."""
+    local_buckets = global_buckets // n_shards
+    return Membership(
+        primary=jnp.arange(global_buckets, dtype=jnp.int32) // local_buckets,
+        replica=jnp.full((global_buckets,), n_shards, jnp.int32),
+        serving=jnp.ones((n_shards,), bool))
 
 
 def _pad_clients(clients: ClientState, n: int) -> ClientState:
@@ -79,6 +111,17 @@ def _mesh(n: int) -> Mesh:
 
 def dm_make(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
             seed: int = 0) -> Tuple[Mesh, "DMCache", CacheConfig]:
+    """Deprecated: build clusters through ``repro.dm.Cluster.make`` (the
+    one membership handle — mesh, topology, replica map, liveness).  This
+    shim returns the same (mesh, DMCache, local_cfg) triple, bit-identical
+    to ``Cluster.make(...)``'s fields."""
+    from repro.core.cache import _deprecated_entrypoint
+    _deprecated_entrypoint("dm_make")
+    return _dm_make_impl(cfg, n_shards, lanes_per_shard, seed)
+
+
+def _dm_make_impl(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
+                  seed: int = 0) -> Tuple[Mesh, "DMCache", CacheConfig]:
     """Build a sharded cache. cfg describes the GLOBAL pool; each shard
     runs a local core cache over 1/n_shards of the buckets/capacity."""
     assert cfg.n_buckets % n_shards == 0
@@ -143,53 +186,88 @@ def _expand_shard(state: CacheState, stats: OpStats):
 
 def _make_route_one(local_cfg: CacheConfig, n_shards: int, lanes: int,
                     q: int):
-    """Per-round client-side router: decide owners, pack per-destination
-    request blocks.  Pure function of the keys (state-independent), which
-    is exactly what lets ``dm_execute`` route group k+1 while group k is
-    still executing."""
-    global_buckets = local_cfg.n_buckets * n_shards
+    """Per-round client-side router: decide owners from the Membership
+    maps, pack per-destination request blocks.  Pure function of the keys
+    and membership (state-independent), which is exactly what lets
+    ``dm_execute`` route group k+1 while group k is still executing.
 
-    def route_one(keys_l, write_l, size_l, ten_l):
+    Replication (DESIGN.md §14): a bucket with a secondary replica fans
+    its reads across both copies — a deterministic per-request rendezvous
+    bit (``splitmix32(key_hash ^ salt)``) picks the side, so reference and
+    fused backends make bit-equal routing decisions.  Writes go to the
+    primary AND emit a write-through mirror to the secondary; mirrors ride
+    the same packing pass as lane indices [lanes, 2*lanes), carry the
+    shadow sideband bit, and sort after every real request of the same
+    destination, so a membership with no replicas packs bit-identically
+    to the legacy single-owner router."""
+    global_buckets = local_cfg.n_buckets * n_shards
+    L2 = 2 * lanes
+
+    def route_one(keys_l, write_l, size_l, ten_l, member):
         kh = hash_key(keys_l)
-        owner = (bucket_of(kh, global_buckets) // local_cfg.n_buckets)
+        bkt = bucket_of(kh, global_buckets)
+        primary = member.primary[bkt]
+        sec = member.replica[bkt]
+        live = keys_l != 0
+        has_sec = (sec < n_shards) & (sec != primary)
+        # Deterministic replica fan-out for reads: pure hash of the key,
+        # independent of cache state and backend.
+        pick = (splitmix32(kh ^ _PICK_SALT) & 1).astype(bool)
+        owner = jnp.where(has_sec & ~write_l & pick, sec, primary)
         # no-op lanes (key 0) route nowhere and never consume capacity
-        owner = jnp.where(keys_l != 0, owner, n_shards)
+        owner = jnp.where(live, owner, n_shards)
+        # Write-through mirror copies for replicated buckets (shadow ops).
+        mirror = live & write_l & has_sec
+        keys_c = jnp.concatenate([keys_l, jnp.where(mirror, keys_l, 0)])
+        owner_c = jnp.concatenate([owner, jnp.where(mirror, sec, n_shards)])
+        write_c = jnp.concatenate([write_l, write_l])
+        size_c = jnp.concatenate([size_l, size_l])
+        ten_c = jnp.concatenate([ten_l, ten_l])
+        shadow_c = jnp.concatenate([jnp.zeros((lanes,), bool),
+                                    jnp.ones((lanes,), bool)])
         # rank within destination
         # Segment packing, not priority ranking: a stable sort by owner
         # is the one-shot way to pack per-destination request blocks
         # (argmin-peel would cost O(lanes) peels).  dittolint: disable=DL003
-        order = jnp.argsort(owner * (lanes + 1)
-                            + jnp.arange(lanes, dtype=owner.dtype))
-        sorted_owner = owner[order]
+        order = jnp.argsort(owner_c * (L2 + 1)
+                            + jnp.arange(L2, dtype=owner_c.dtype))
+        sorted_owner = owner_c[order]
         first = jnp.concatenate([jnp.ones((1,), bool),
                                  sorted_owner[1:] != sorted_owner[:-1]])
-        seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(lanes), 0))
-        rank = jnp.arange(lanes) - seg_start
+        seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(L2), 0))
+        rank = jnp.arange(L2) - seg_start
         send = jnp.zeros((n_shards, q), jnp.uint32)
         wsend = jnp.zeros((n_shards, q), bool)
         zsend = jnp.ones((n_shards, q), jnp.uint32)
         nsend = jnp.zeros((n_shards, q), jnp.uint32)
+        shsend = jnp.zeros((n_shards, q), bool)
         src_slot = jnp.zeros((n_shards, q), jnp.int32) - 1
         ok = rank < q
         dst = jnp.where(ok, sorted_owner, n_shards)
         rr = jnp.where(ok, rank, 0)
-        send = send.at[dst, rr].set(keys_l[order], mode="drop")
-        wsend = wsend.at[dst, rr].set(write_l[order], mode="drop")
-        zsend = zsend.at[dst, rr].set(size_l[order], mode="drop")
-        nsend = nsend.at[dst, rr].set(ten_l[order], mode="drop")
+        send = send.at[dst, rr].set(keys_c[order], mode="drop")
+        wsend = wsend.at[dst, rr].set(write_c[order], mode="drop")
+        zsend = zsend.at[dst, rr].set(size_c[order], mode="drop")
+        nsend = nsend.at[dst, rr].set(ten_c[order], mode="drop")
+        shsend = shsend.at[dst, rr].set(shadow_c[order], mode="drop")
         src_slot = src_slot.at[dst, rr].set(order.astype(jnp.int32),
                                             mode="drop")
         # Requests beyond the per-destination capacity are NOT executed
         # this step (the caller sees hit=False and may reissue); count
-        # them so skewed-trace hit ratios stay honest.
-        n_drop = jnp.sum(~ok & (keys_l[order] != 0)).astype(jnp.int32)
-        # The op sideband word (tenant id << 9 | object size << 1 |
-        # write bit) rides as a second u32 of the SAME collective.
-        meta = ((nsend.astype(jnp.uint32) << 9)
+        # them so skewed-trace hit ratios stay honest.  Dropped MIRRORS
+        # are replica staleness, not lost client ops — separate counter.
+        over = ~ok & (keys_c[order] != 0)
+        n_drop = jnp.sum(over & (order < lanes)).astype(jnp.int32)
+        n_rep_drop = jnp.sum(over & (order >= lanes)).astype(jnp.int32)
+        # The op sideband word (tenant id << 10 | shadow << 9 |
+        # object size << 1 | write bit) rides as a second u32 of the
+        # SAME collective.
+        meta = ((nsend.astype(jnp.uint32) << 10)
+                | (shsend.astype(jnp.uint32) << 9)
                 | (zsend.astype(jnp.uint32) << 1)
                 | wsend.astype(jnp.uint32))
         packed = jnp.stack([send, meta], axis=-1)          # [S, q, 2]
-        return packed, src_slot, n_drop
+        return packed, src_slot, n_drop, n_rep_drop
 
     return route_one
 
@@ -200,14 +278,33 @@ def _unpack_recv(precv, n_shards: int, q: int):
     recv = precv[..., 0].reshape(G, n_shards * q)
     wrecv = (precv[..., 1] & 1).astype(bool).reshape(G, n_shards * q)
     zrecv = ((precv[..., 1] >> 1) & 0xFF).reshape(G, n_shards * q)
-    nrecv = (precv[..., 1] >> 9).reshape(G, n_shards * q)
-    return recv, wrecv, zrecv, nrecv
+    shrecv = ((precv[..., 1] >> 9) & 1).astype(bool).reshape(
+        G, n_shards * q)
+    nrecv = (precv[..., 1] >> 10).reshape(G, n_shards * q)
+    return recv, wrecv, zrecv, nrecv, shrecv
+
+
+def _bounce_dead(member: Membership, recv, shrecv):
+    """Ground-truth liveness gate on the memory-pool side: a request that
+    arrives at a non-serving shard is lost (the RDMA timeout analogue).
+    Bounced keys become no-op lanes — never executed, never counted as
+    misses — and are tallied as drops (real → route_drops, mirror →
+    replica_drops) so ``issued == gets + sets + route_drops`` survives
+    the detection window."""
+    up = member.serving[jax.lax.axis_index(AXIS)]
+    bounced = (recv != 0) & ~up
+    n_real = jnp.sum(bounced & ~shrecv).astype(jnp.int32)
+    n_shadow = jnp.sum(bounced & shrecv).astype(jnp.int32)
+    return jnp.where(up, recv, 0), n_real, n_shadow
 
 
 def _back_merge(hit_back, src_slot, lanes: int):
     """Merge one round's returned [S, q] hit block back onto its source
-    lanes (reverse of the routing scatter)."""
-    valid = src_slot >= 0
+    lanes (reverse of the routing scatter).  Mirror entries (src_slot >=
+    lanes) are replication traffic: excluded, so the client sees exactly
+    its primary/picked-replica reply — and the scatter below never gets
+    an out-of-range index to clip."""
+    valid = (src_slot >= 0) & (src_slot < lanes)
     return jnp.zeros((lanes,), bool).at[
         jnp.where(valid, src_slot, 0).reshape(-1)].max(
         jnp.where(valid, hit_back, False).reshape(-1))
@@ -246,7 +343,9 @@ def _route_capacity(lanes: int, n_shards: int, route_factor: int) -> int:
 def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
               keys: jnp.ndarray, is_write=None, obj_size=None,
               tenant=None,
-              route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+              route_factor: int = 4,
+              member: Membership | None = None,
+              ) -> Tuple[DMCache, jnp.ndarray]:
     """Deprecated single-step DM driver: drive traces through
     ``repro.core.execute`` or :func:`dm_execute` (the pipelined scan is
     bit-equal to calling this once per step, and overlaps the next
@@ -254,13 +353,15 @@ def dm_access(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     from repro.core.cache import _deprecated_entrypoint
     _deprecated_entrypoint("dm_access")
     return _dm_access_impl(mesh, local_cfg, dm, keys, is_write, obj_size,
-                           tenant, route_factor)
+                           tenant, route_factor, member)
 
 
 def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
                     keys: jnp.ndarray, is_write=None, obj_size=None,
                     tenant=None,
-                    route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+                    route_factor: int = 4,
+                    member: Membership | None = None,
+                    ) -> Tuple[DMCache, jnp.ndarray]:
     """One DM step: keys [n_shards * lanes] or a request group
     [G, n_shards * lanes] (0 = no-op). Returns hits of the same shape.
     ``obj_size`` ([.. like keys], 64B blocks, default 1) is bit-packed
@@ -284,7 +385,10 @@ def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     beyond the capacity — possible only under extreme key skew — are
     *counted* in ``OpStats.route_drops`` (they behave like failed-CAS
     retries: callers subtract them from issued ops, they are never
-    silently lost; see DESIGN.md §2)."""
+    silently lost; see DESIGN.md §2).
+
+    ``member`` (a :class:`Membership`, default identity) supplies the
+    failover/replication routing maps; see DESIGN.md §14."""
     n_shards = mesh.shape[AXIS]
     squeeze = keys.ndim == 1
     if squeeze:
@@ -305,28 +409,36 @@ def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
         obj_size = jnp.ones_like(keys, dtype=jnp.uint32)
     if tenant is None:
         tenant = jnp.zeros_like(keys, dtype=jnp.uint32)
+    if member is None:
+        member = identity_membership(n_shards,
+                                     local_cfg.n_buckets * n_shards)
 
     route_one = _make_route_one(local_cfg, n_shards, lanes, q)
 
-    def step(state, clients, stats, keys_l, write_l, size_l, ten_l):
+    def step(state, clients, stats, keys_l, write_l, size_l, ten_l, mem):
         state, stats = _squeeze_shard(state, stats)
         # --- per-round routing: group blocks per destination ------------
-        # The sideband word carries size (bits 1-8) + tenant (bits 9+),
-        # so sizes are clipped to the engine's own 8-bit clamp (the
-        # access path clips identically — bit-identical results).
+        # The sideband word carries size (bits 1-8) + shadow (bit 9) +
+        # tenant (bits 10+), so sizes are clipped to the engine's own
+        # 8-bit clamp (the access path clips identically — bit-identical
+        # results).
         size_c = jnp.clip(size_l, 1, 254).astype(jnp.uint32)
-        packed, src_slot, n_drop = jax.vmap(route_one)(
-            keys_l, write_l, size_c, ten_l)                # [G, S, q, 2]
+        packed, src_slot, n_drop, n_rep_drop = jax.vmap(
+            route_one, in_axes=(0, 0, 0, 0, None))(
+            keys_l, write_l, size_c, ten_l, mem)           # [G, S, q, 2]
         # --- the network: ONE exchange ships each destination's whole
         # [G, q] request group (RDMA doorbell-batching analogue) ---------
         precv = jax.lax.all_to_all(packed, AXIS, 1, 1, tiled=True)
-        recv, wrecv, zrecv, nrecv = _unpack_recv(precv, n_shards, q)
+        recv, wrecv, zrecv, nrecv, shrecv = _unpack_recv(precv, n_shards, q)
+        recv, n_bnc, n_bnc_sh = _bounce_dead(mem, recv, shrecv)
 
         # --- memory-pool side: one widened client-centric group step ----
         state, clients2, stats, res = access_group(
             local_cfg, state, _pad_clients(clients, n_shards * q), stats,
-            recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv)
-        stats = stats_add(stats, route_drops=jnp.sum(n_drop))
+            recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv,
+            shadow=shrecv)
+        stats = stats_add(stats, route_drops=jnp.sum(n_drop) + n_bnc,
+                          replica_drops=jnp.sum(n_rep_drop) + n_bnc_sh)
 
         # --- route replies back + merge hit masks -----------------------
         hits = jax.vmap(
@@ -344,16 +456,18 @@ def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     spec_clients = jax.tree.map(lambda _: P(AXIS), dm.clients)
     spec_stats = jax.tree.map(lambda _: P(AXIS), dm.stats)
 
+    spec_member = jax.tree.map(lambda _: P(), member)
+
     fn = shard_map(
         step, mesh=mesh,
         in_specs=(spec_state, spec_clients, spec_stats,
                   P(None, AXIS), P(None, AXIS), P(None, AXIS),
-                  P(None, AXIS)),
+                  P(None, AXIS), spec_member),
         out_specs=(spec_state, spec_clients, spec_stats, P(None, AXIS)),
         check_rep=False)
     state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
                                      keys, is_write, obj_size,
-                                     tenant.astype(jnp.uint32))
+                                     tenant.astype(jnp.uint32), member)
     if squeeze:
         hits = hits[0]
     return DMCache(state, clients, stats), hits
@@ -362,7 +476,9 @@ def _dm_access_impl(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
                keys: jnp.ndarray, is_write=None, obj_size=None,
                tenant=None,
-               route_factor: int = 4) -> Tuple[DMCache, jnp.ndarray]:
+               route_factor: int = 4,
+               member: Membership | None = None,
+               ) -> Tuple[DMCache, jnp.ndarray]:
     """Pipelined DM driver: execute a whole sequence of request groups in
     ONE sharded scan, overlapping the router's ``all_to_all`` for group
     k+1 with ``access_group`` for group k.
@@ -403,6 +519,9 @@ def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     if tenant is None:
         tenant = jnp.zeros_like(keys, dtype=jnp.uint32)
     tenant = tenant.astype(jnp.uint32)
+    if member is None:
+        member = identity_membership(n_shards,
+                                     local_cfg.n_buckets * n_shards)
 
     if NG == 0:
         return dm, (jnp.zeros((0, keys.shape[2]), bool) if flat
@@ -410,15 +529,19 @@ def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
     route_one = _make_route_one(local_cfg, n_shards, lanes, q)
 
-    def run(state, clients, stats, keys_l, write_l, size_l, ten_l):
+    def run(state, clients, stats, keys_l, write_l, size_l, ten_l, mem):
         state, stats = _squeeze_shard(state, stats)
         size_c = jnp.clip(size_l, 1, 254).astype(jnp.uint32)
-        # Route EVERY group up front — routing reads only the keys, so
-        # this is exact, and it is what the pipeline overlaps.
-        packed, src_slot, n_drop = jax.vmap(jax.vmap(route_one))(
-            keys_l, write_l, size_c, ten_l)          # [NG, G, S, q, 2]
+        # Route EVERY group up front — routing reads only the keys and
+        # the (step-constant) membership, so this is exact, and it is
+        # what the pipeline overlaps.
+        packed, src_slot, n_drop, n_rep_drop = jax.vmap(
+            jax.vmap(route_one, in_axes=(0, 0, 0, 0, None)),
+            in_axes=(0, 0, 0, 0, None))(
+            keys_l, write_l, size_c, ten_l, mem)     # [NG, G, S, q, 2]
         # Summed once == added once per step (integer counter).
-        stats = stats_add(stats, route_drops=jnp.sum(n_drop))
+        stats = stats_add(stats, route_drops=jnp.sum(n_drop),
+                          replica_drops=jnp.sum(n_rep_drop))
 
         # Prologue: group 0's exchange fills the first recv buffer.
         recv0 = jax.lax.all_to_all(packed[0], AXIS, 1, 1, tiled=True)
@@ -434,10 +557,15 @@ def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
             # the scheduler can run it concurrently with this group's
             # access_group (the double-buffer overlap).
             precv_next = jax.lax.all_to_all(pnxt, AXIS, 1, 1, tiled=True)
-            recv, wrecv, zrecv, nrecv = _unpack_recv(precv, n_shards, q)
+            recv, wrecv, zrecv, nrecv, shrecv = _unpack_recv(
+                precv, n_shards, q)
+            recv, n_bnc, n_bnc_sh = _bounce_dead(mem, recv, shrecv)
+            stats = stats_add(stats, route_drops=n_bnc,
+                              replica_drops=n_bnc_sh)
             state, clients2, stats, res = access_group(
                 local_cfg, state, _pad_clients(clients, n_shards * q),
-                stats, recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv)
+                stats, recv, is_write=wrecv, obj_size=zrecv, tenant=nrecv,
+                shadow=shrecv)
             hits = jax.vmap(
                 lambda hb, s: _back_merge(hb, s, lanes))(
                 jax.lax.all_to_all(res.hit.reshape(G, n_shards, q),
@@ -454,17 +582,19 @@ def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
     spec_state = jax.tree.map(lambda _: P(AXIS), dm.state)
     spec_clients = jax.tree.map(lambda _: P(AXIS), dm.clients)
     spec_stats = jax.tree.map(lambda _: P(AXIS), dm.stats)
+    spec_member = jax.tree.map(lambda _: P(), member)
 
     fn = shard_map(
         run, mesh=mesh,
         in_specs=(spec_state, spec_clients, spec_stats,
                   P(None, None, AXIS), P(None, None, AXIS),
-                  P(None, None, AXIS), P(None, None, AXIS)),
+                  P(None, None, AXIS), P(None, None, AXIS), spec_member),
         out_specs=(spec_state, spec_clients, spec_stats,
                    P(None, None, AXIS)),
         check_rep=False)
     state, clients, stats, hits = fn(dm.state, dm.clients, dm.stats,
-                                     keys, is_write, obj_size, tenant)
+                                     keys, is_write, obj_size, tenant,
+                                     member)
     if flat:
         hits = hits[:, 0, :]
     return DMCache(state, clients, stats), hits
@@ -472,11 +602,11 @@ def dm_execute(mesh: Mesh, local_cfg: CacheConfig, dm: DMCache,
 
 def dm_set_capacity(dm: DMCache, new_global_capacity: int,
                     n_shards: int) -> DMCache:
-    """Elastic memory resize (budget in 64B blocks): one scalar write per
-    shard, no migration.
-
-    Thin alias for `repro.elastic.resize.set_capacity` (the single resize
-    entry point); use `repro.elastic.resize.resize_memory` for the online
-    path that also drains shrinks to the new capacity."""
-    from repro.elastic.resize import set_capacity
-    return set_capacity(dm, new_global_capacity, n_shards)
+    """Deprecated elastic memory resize (budget in 64B blocks): use
+    ``Cluster.with_capacity(blocks)`` — the membership handle carries
+    mesh/n_shards, so nothing is re-threaded positionally.  Bit-identical
+    pass-through (one scalar write per shard, no migration)."""
+    from repro.core.cache import _deprecated_entrypoint
+    _deprecated_entrypoint("dm_set_capacity")
+    from repro.elastic.resize import _set_capacity_impl
+    return _set_capacity_impl(dm, new_global_capacity, n_shards)

@@ -1,19 +1,23 @@
 """Elastic resource runtime: online pool resize, feedback autoscaling,
-multi-tenant budget arbitration, and scenario-driven elasticity
-timelines (DESIGN.md §8, §11)."""
+multi-tenant budget arbitration, shard health/failover, and
+scenario-driven elasticity timelines (DESIGN.md §8, §11, §14)."""
 
 from repro.elastic.controller import (Autoscaler, AutoscalerConfig, Decision,
+                                      HealthConfig, HealthMonitor,
                                       TenantArbiter, TenantArbiterConfig,
                                       TenantWindow, WindowMetrics)
-from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
-                                  resize_memory, set_capacity,
+from repro.elastic.resize import (ResizeReport, enforce_budget,
+                                  fail_wipe_shard, resize_lanes,
+                                  resize_memory, rewarm_shard, set_capacity,
                                   set_tenant_budgets)
 from repro.elastic.scenario import ScenarioResult, run_scenario
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "Decision", "WindowMetrics",
+    "HealthConfig", "HealthMonitor",
     "TenantArbiter", "TenantArbiterConfig", "TenantWindow",
     "ResizeReport", "enforce_budget", "resize_lanes", "resize_memory",
+    "fail_wipe_shard", "rewarm_shard",
     "set_capacity", "set_tenant_budgets",
     "ScenarioResult", "run_scenario",
 ]

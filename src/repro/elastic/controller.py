@@ -348,3 +348,75 @@ class TenantArbiter:
             return None
         self.log.append(budgets)
         return budgets
+
+
+# ----------------------------------------------------------------------
+# Shard health: heartbeat / missed-beat failure detection (DESIGN.md §14).
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HealthConfig:
+    """Detection hysteresis, in observation windows.  One missed beat is
+    noise (a slow window, a stalled collective); ``miss_threshold``
+    consecutive misses declare the shard dead — the same patience-streak
+    shape the Autoscaler uses for scale triggers."""
+
+    miss_threshold: int = 2       # consecutive missed beats → failed
+    beat_threshold: int = 1       # consecutive beats from a failed
+    #                             # shard → recovered (replacement up)
+
+    def __post_init__(self):
+        if self.miss_threshold < 1 or self.beat_threshold < 1:
+            raise ValueError("health thresholds must be >= 1 window")
+
+
+class HealthMonitor:
+    """Per-shard heartbeat state machine: alive → (missed beats x
+    patience) → failed → (beats x patience) → alive.
+
+    The monitor only *detects*; acting on a transition — re-routing via
+    ``Cluster.mark_failed``, rewarming via ``Cluster.recover`` — is the
+    scenario driver's job, so detection latency (the windows between a
+    ground-truth failure and its ``newly_failed`` report) is visible in
+    the measured timeline rather than hidden inside the router."""
+
+    def __init__(self, n_shards: int,
+                 cfg: Optional[HealthConfig] = None):
+        self.cfg = cfg or HealthConfig()
+        self.n_shards = n_shards
+        self._missed = [0] * n_shards
+        self._beats = [0] * n_shards
+        self._failed = [False] * n_shards
+        self.log: list[tuple[int, str]] = []   # (shard, "failed"|"recovered")
+
+    @property
+    def failed(self) -> tuple[bool, ...]:
+        """Current detected-failed view (what routing should avoid)."""
+        return tuple(self._failed)
+
+    def observe(self, beats) -> tuple[list[int], list[int]]:
+        """Feed one window of heartbeats (``beats[k]`` True iff shard k
+        responded).  Returns (newly_failed, newly_recovered) shard ids —
+        each transition is reported exactly once."""
+        beats = list(beats)
+        assert len(beats) == self.n_shards
+        newly_failed: list[int] = []
+        newly_recovered: list[int] = []
+        for k, beat in enumerate(beats):
+            if beat:
+                self._missed[k] = 0
+                self._beats[k] += 1
+                if (self._failed[k]
+                        and self._beats[k] >= self.cfg.beat_threshold):
+                    self._failed[k] = False
+                    newly_recovered.append(k)
+                    self.log.append((k, "recovered"))
+            else:
+                self._beats[k] = 0
+                self._missed[k] += 1
+                if (not self._failed[k]
+                        and self._missed[k] >= self.cfg.miss_threshold):
+                    self._failed[k] = True
+                    newly_failed.append(k)
+                    self.log.append((k, "failed"))
+        return newly_failed, newly_recovered

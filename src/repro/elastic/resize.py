@@ -38,6 +38,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import priority as prio
 from repro.core.cache import _is_live, _md_view
+from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import (SIZE_EMPTY, SIZE_HISTORY, CacheConfig,
                               init_clients, split_tenant_budgets, stats_add)
 
@@ -59,6 +60,15 @@ class ResizeReport(NamedTuple):
 
 
 def set_capacity(dm, new_global_capacity: int, n_shards: int):
+    """Deprecated: use ``Cluster.with_capacity(blocks)`` — the membership
+    handle already knows ``n_shards``, so nothing is re-threaded
+    positionally.  Bit-identical pass-through to the same scalar write."""
+    from repro.core.cache import _deprecated_entrypoint
+    _deprecated_entrypoint("set_capacity")
+    return _set_capacity_impl(dm, new_global_capacity, n_shards)
+
+
+def _set_capacity_impl(dm, new_global_capacity: int, n_shards: int):
     """The paper's elastic resize primitive: one scalar write per shard,
     no data movement. The budget is denominated in 64B blocks (resizing
     by GB is ``gb * (1 << 30) // 64`` blocks). Shrinks done through this
@@ -201,10 +211,16 @@ def _measured_migration_bytes(before, after) -> int:
     shard_of = np.arange(key_b.shape[0]) // local
     live_b = (size_b != SIZE_EMPTY) & (size_b != SIZE_HISTORY)
     live_a = (size_a != SIZE_EMPTY) & (size_a != SIZE_HISTORY)
-    home = {int(k): int(s) for k, s in zip(key_b[live_b], shard_of[live_b])}
+    # A hot key may legitimately live on several shards at once (primary
+    # plus write-through replica mirrors, DESIGN.md §14), so home must be
+    # a set per key — counting a standing replica as a move would charge
+    # phantom migration to every resize.
+    home: dict = {}
+    for k, s in zip(key_b[live_b], shard_of[live_b]):
+        home.setdefault(int(k), set()).add(int(s))
     moved = 0
     for k, s, sz in zip(key_a[live_a], shard_of[live_a], size_a[live_a]):
-        if int(k) in home and home[int(k)] != int(s):
+        if int(k) in home and int(s) not in home[int(k)]:
             moved += int(sz) * 64 + 4 * value_words
     return moved
 
@@ -230,7 +246,7 @@ def resize_memory(mesh: Mesh, local_cfg: CacheConfig, dm,
     n_shards = mesh.shape[AXIS]
     assert new_global_capacity % n_shards == 0
     before = _snapshot(dm, n_shards, local_cfg.value_words)
-    dm = set_capacity(dm, new_global_capacity, n_shards)
+    dm = _set_capacity_impl(dm, new_global_capacity, n_shards)
 
     steps = drained = freed = 0
     if drain:
@@ -357,3 +373,121 @@ def resize_lanes(mesh: Mesh, local_cfg: CacheConfig, dm,
     return dm, ResizeReport(
         migration_bytes=_measured_migration_bytes(before, dm),
         drained_objects=0, drained_bytes=0, drain_steps=0)
+
+
+# ----------------------------------------------------------------------
+# Shard failure + recovery rewarm (DESIGN.md §14).
+# ----------------------------------------------------------------------
+
+def _put_like(arr, host):
+    return jax.device_put(jnp.asarray(host), arr.sharding)
+
+
+def fail_wipe_shard(mesh: Mesh, local_cfg: CacheConfig, dm, k: int):
+    """Ground-truth shard loss: shard k's DRAM is gone.  Zeroes its slot
+    arrays and per-shard occupancy counters in place (same host-side
+    surgery pattern as `resize_lanes`).  Control-plane scalars — the
+    logical clock and the expert weights — survive: the replacement node
+    re-syncs them on join, and keeping the clock in lockstep is what
+    makes post-recovery decisions deterministic across reruns."""
+    n_shards = mesh.shape[AXIS]
+    assert 0 <= k < n_shards
+    ls = local_cfg.n_slots
+    sl = slice(k * ls, (k + 1) * ls)
+    st = dm.state
+    out = {}
+    for name in ("key", "key_hash", "ptr", "insert_ts", "last_ts",
+                 "freq", "tenant"):
+        h = np.array(getattr(st, name))
+        h[sl] = 0
+        out[name] = _put_like(getattr(st, name), h)
+    sz = np.array(st.size)
+    sz[sl] = SIZE_EMPTY
+    out["size"] = _put_like(st.size, sz)
+    for name in ("ext", "values"):
+        h = np.array(getattr(st, name))
+        h[sl] = 0
+        out[name] = _put_like(getattr(st, name), h)
+    for name in ("n_cached", "bytes_cached", "tenant_bytes", "hist_ctr",
+                 "gds_L"):
+        h = np.array(getattr(st, name))
+        h[k] = 0
+        out[name] = _put_like(getattr(st, name), h)
+    return dm._replace(state=st._replace(**out))
+
+
+def rewarm_shard(mesh: Mesh, local_cfg: CacheConfig, dm, k: int, *,
+                 max_objects: int = 512) -> Tuple["DMCache", ResizeReport]:
+    """Recovery drain: rewarm a rejoined shard from the survivors.
+
+    While shard k was out, requests for its buckets re-routed to survivor
+    shards (`Cluster.membership` rendezvous), which absorbed k's working
+    set into their own tables.  On rejoin those objects would sit cold on
+    the survivors while k re-misses everything; this bounded host-side
+    drain moves the hottest survivor-held objects whose home bucket
+    belongs to k back onto k — hottest-first by frequency, respecting
+    k's byte capacity and per-tenant budgets, each move clearing the
+    survivor's slot.  Reported ``migration_bytes`` uses the same
+    ``size*64 + value`` formula as `_measured_migration_bytes` (these
+    moves are real cross-shard traffic, unlike a capacity resize)."""
+    n_shards = mesh.shape[AXIS]
+    assert 0 <= k < n_shards
+    ls, lb, A = local_cfg.n_slots, local_cfg.n_buckets, local_cfg.assoc
+    st = dm.state
+    names = ("key", "key_hash", "size", "ptr", "insert_ts", "last_ts",
+             "freq", "ext", "values", "tenant")
+    arr = {n: np.array(getattr(st, n)) for n in names}
+    kh = np.asarray(hash_key(jnp.asarray(arr["key"])))
+    home = np.asarray(bucket_of(jnp.asarray(kh), lb * n_shards)) // lb
+    local_bkt = np.asarray(bucket_of(jnp.asarray(kh), lb))
+    slot_shard = np.arange(arr["key"].shape[0]) // ls
+    live = (arr["size"] != SIZE_EMPTY) & (arr["size"] != SIZE_HISTORY)
+    cand = np.nonzero(live & (slot_shard != k) & (home == k))[0]
+    if cand.size == 0:
+        return dm, ResizeReport(0, 0, 0, 0)
+    cand = cand[np.argsort(-arr["freq"][cand].astype(np.int64),
+                           kind="stable")][:max_objects]
+
+    nc = np.array(st.n_cached)
+    bc = np.array(st.bytes_cached)
+    tb = np.array(st.tenant_bytes)
+    tbud = np.array(st.tenant_budget)
+    cap_k = int(np.array(st.capacity_blocks)[k])
+    multi = local_cfg.n_tenants > 1
+    moved = moved_bytes = freed_blocks = 0
+    for s_idx in cand:
+        sz = int(arr["size"][s_idx])
+        if bc[k] + sz > cap_k:
+            continue
+        t = int(arr["tenant"][s_idx])
+        if multi and tb[k, t] + sz > tbud[k, t]:
+            continue
+        base = k * ls + int(local_bkt[s_idx]) * A
+        free = np.nonzero(arr["size"][base:base + A] == SIZE_EMPTY)[0]
+        if free.size == 0:
+            continue
+        dst = base + int(free[0])
+        for n in names:
+            arr[n][dst] = arr[n][s_idx]
+        src = int(slot_shard[s_idx])
+        arr["key"][s_idx] = 0
+        arr["key_hash"][s_idx] = 0
+        arr["size"][s_idx] = SIZE_EMPTY
+        arr["ptr"][s_idx] = 0
+        nc[k] += 1
+        nc[src] -= 1
+        bc[k] += sz
+        bc[src] -= sz
+        tb[k, t] += sz
+        tb[src, t] -= sz
+        moved += 1
+        freed_blocks += sz
+        moved_bytes += sz * 64 + 4 * local_cfg.value_words
+    out = {n: _put_like(getattr(st, n), arr[n]) for n in names}
+    out["n_cached"] = _put_like(st.n_cached, nc)
+    out["bytes_cached"] = _put_like(st.bytes_cached, bc)
+    out["tenant_bytes"] = _put_like(st.tenant_bytes, tb)
+    dm = dm._replace(state=st._replace(**out))
+    return dm, ResizeReport(
+        migration_bytes=moved_bytes, drained_objects=moved,
+        drained_bytes=freed_blocks * 64, drain_steps=1 if moved else 0)

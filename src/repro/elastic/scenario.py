@@ -31,17 +31,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines.systems import DittoModel
+from repro.core.hashing import bucket_of, hash_key
 from repro.core.types import CacheConfig, stats_delta, stats_sum
-from repro.dm.sharded_cache import dm_execute, dm_make
-from repro.elastic.controller import (Autoscaler, TenantArbiter,
-                                      TenantWindow, WidthController,
-                                      WindowMetrics)
+from repro.dm.cluster import Cluster
+from repro.dm.sharded_cache import dm_execute
+from repro.elastic.controller import (Autoscaler, HealthMonitor,
+                                      TenantArbiter, TenantWindow,
+                                      WidthController, WindowMetrics)
 from repro.elastic.resize import (ResizeReport, enforce_budget, resize_lanes,
                                   resize_memory, set_tenant_budgets)
 
 Event = Tuple[str, object]          # ("set_capacity"|"set_lanes"|
 #                                   #  "set_tenant_budgets"|
-#                                   #  "switch_workload", arg)
+#                                   #  "switch_workload"|"set_replicas"|
+#                                   #  "fail_shard"|"mark_failed"|
+#                                   #  "recover_shard", arg)
 
 
 class ScenarioResult(NamedTuple):
@@ -51,6 +55,7 @@ class ScenarioResult(NamedTuple):
                         # in REAL bytes: == 64 * blocks_cached)
     events: list        # applied events: dict(t, event, arg, report)
     dm: object          # final DMCache (for state inspection in tests)
+    cluster: object = None   # final dm.Cluster membership handle
 
     def phase(self, t0: float, t1: float, key: str) -> np.ndarray:
         """Values of `key` for windows fully inside [t0, t1)."""
@@ -117,7 +122,9 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                  seed: int = 0, drain_batch: int = 64,
                  drain_max_steps: int = 256,
                  sizes=None, tenants=None,
-                 width_controller: Optional[WidthController] = None
+                 width_controller: Optional[WidthController] = None,
+                 health: Optional[HealthMonitor] = None,
+                 replicate_hot: int = 0, replica_ema: float = 0.5,
                  ) -> ScenarioResult:
     """Run a [T, lanes] trace through the DM cache under an event stream.
 
@@ -142,9 +149,23 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         with one the chunk width adapts online from measured per-chunk
         wall times (chunking is execution-only — results are bit-equal
         at any width, so adaptation never perturbs cache decisions).
+      health: optional :class:`HealthMonitor`.  At every window boundary
+        it observes ground-truth heartbeats (`cluster.alive`); shards it
+        declares failed are re-routed via ``Cluster.mark_failed`` — so a
+        ("fail_shard", k) timeline event dips until detection kicks in
+        (DESIGN.md §14).  Without a monitor, failures keep bouncing
+        until an explicit ("mark_failed", k) or ("recover_shard", k).
+      replicate_hot: when > 0, maintain a per-global-bucket load EMA
+        (decay ``replica_ema``) and re-elect replica sets for the
+        hottest ``replicate_hot`` buckets at every window boundary.
     """
-    mesh, dm, local = dm_make(cfg, n_shards, lanes_per_shard)
+    cluster = Cluster.make(cfg, n_shards, lanes_per_shard)
+    mesh, local = cluster.mesh, cluster.local
+    dm = cluster.dm
     exec_fn = jax.jit(functools.partial(dm_execute, mesh, local))
+    member = cluster.membership()
+    bucket_loads = np.zeros(cfg.n_buckets, np.float64)
+    win_counts = np.zeros(cfg.n_buckets, np.float64)
     compiled_shapes: set = set()
     model = DittoModel()
     workloads = workloads or {}
@@ -173,8 +194,9 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
 
     def apply_event(t: int, name: str, arg) -> None:
         nonlocal dm, lanes, capacity, win_mig, win_drain, stream, pos
-        nonlocal size_stream, ten_stream, tenant_budgets
+        nonlocal size_stream, ten_stream, tenant_budgets, cluster, member
         report = ResizeReport(0, 0, 0, 0)
+        member_changed = False
         if name == "set_capacity":
             capacity = _round_capacity(int(arg), cfg, n_shards)
             dm, report = resize_memory(
@@ -191,8 +213,32 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             stream, size_stream, ten_stream = _as_sized_stream(
                 workloads[arg] if isinstance(arg, str) else arg)
             pos = 0
+        elif name == "set_replicas":
+            # int → elect that many hot buckets from the load EMA;
+            # array → install the explicit per-bucket secondary map.
+            cluster = cluster._replace(dm=dm)
+            if isinstance(arg, (int, np.integer)):
+                cluster = cluster.elect_replicas(bucket_loads, int(arg))
+            else:
+                cluster = cluster.with_replicas(arg)
+            dm, member_changed = cluster.dm, True
+        elif name == "fail_shard":
+            # Ground truth only: the shard's state is wiped and it stops
+            # serving, but routing still targets it (bounce → drops)
+            # until the health monitor — or an explicit mark_failed
+            # event — re-routes.  That gap is the detection latency.
+            cluster = cluster._replace(dm=dm).inject_failure(int(arg))
+            dm, member_changed = cluster.dm, True
+        elif name == "mark_failed":
+            cluster = cluster._replace(dm=dm).mark_failed(int(arg))
+            dm, member_changed = cluster.dm, True
+        elif name == "recover_shard":
+            cluster, report = cluster._replace(dm=dm).recover(int(arg))
+            dm, member_changed = cluster.dm, True
         else:
             raise ValueError(f"unknown scenario event {name!r}")
+        if member_changed:
+            member = cluster.membership()
         win_mig += report.migration_bytes
         win_drain += report.drain_steps
         win_events.append(name)
@@ -226,9 +272,18 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
         tc0 = time.perf_counter()
         dm, hits = exec_fn(dm, jnp.asarray(step_keys),
                            obj_size=jnp.asarray(step_sz),
-                           tenant=jnp.asarray(step_ten))
+                           tenant=jnp.asarray(step_ten),
+                           member=member)
         hn = np.asarray(hits, bool)          # host sync: bounds the wall
         wall = time.perf_counter() - tc0
+        if replicate_hot > 0:
+            # Per-bucket offered load for this chunk (same hash the
+            # router uses), accumulated into the window's counts.
+            kk = step_keys.ravel()
+            kk = kk[kk != 0]
+            gb = np.asarray(bucket_of(hash_key(jnp.asarray(kk)),
+                                      cfg.n_buckets))
+            win_counts += np.bincount(gb, minlength=cfg.n_buckets)
         compiled_shapes.add((n, L))
         if width_controller is not None and warm:
             # Measured throughput closes the loop: warm chunk timings
@@ -278,6 +333,12 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 evictions=int(d.evictions), insert_drops=int(d.insert_drops),
                 migration_bytes=win_mig, drain_steps=win_drain,
                 enforced_evictions=enforced, events=list(win_events),
+                route_drops=int(d.route_drops),
+                replica_writes=int(d.replica_writes),
+                replica_drops=int(d.replica_drops),
+                alive=[bool(a) for a in cluster.alive],
+                routed=[bool(r) for r in cluster.routed],
+                n_replicated=int((cluster.replicas < n_shards).sum()),
                 tenant_blocks=[int(b) for b in ten_blocks],
                 tenant_budget=[int(b) for b in tenant_budgets],
                 tenant_hit_rate=[round(float(h), 6) for h in ten_hr],
@@ -289,6 +350,23 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
             t_hits[:] = 0
             t_req_blocks[:] = 0.0
             t_hit_blocks[:] = 0.0
+
+            # Heartbeat detection: the monitor sees ground truth and its
+            # verdicts re-route (the detection→mark_failed state machine
+            # of DESIGN.md §14).  Recoveries need no action here — the
+            # recover_shard event restores routing itself.
+            if health is not None:
+                newly_failed, _ = health.observe(cluster.alive)
+                for k in newly_failed:
+                    apply_event(t, "mark_failed", k)
+            # Hot-bucket replica election from the load EMA.
+            if replicate_hot > 0:
+                bucket_loads *= replica_ema
+                bucket_loads += (1.0 - replica_ema) * win_counts
+                win_counts[:] = 0.0
+                cluster = cluster._replace(dm=dm).elect_replicas(
+                    bucket_loads, replicate_hot)
+                member = cluster.membership()
 
             if width_controller is not None:
                 width_controller.propose()
@@ -304,4 +382,5 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 if prop is not None:
                     apply_event(t, "set_tenant_budgets", prop)
 
-    return ScenarioResult(windows, events_log, dm)
+    return ScenarioResult(windows, events_log, dm,
+                          cluster._replace(dm=dm))

@@ -409,5 +409,5 @@ class TestCli:
 
     def test_all_rules_catalogued(self):
         cat = all_rules()
-        assert len(cat) == 18
+        assert len(cat) == 19
         assert {r[:2] for r in cat} == {"DL", "JX", "SA"}

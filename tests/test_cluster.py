@@ -1,0 +1,351 @@
+"""`dm.Cluster` membership API: shim bit-equality, replica election,
+health state machine, and (subprocess, real 4-shard mesh) failover
+determinism + accounting (DESIGN.md §14).
+
+In-process tests run the 1-shard mesh on the session's single device;
+everything that needs real shards runs in a subprocess with a forced
+host device count (the test_dm.py pattern).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig
+from repro.dm import Cluster
+from repro.elastic.controller import HealthConfig, HealthMonitor
+from repro.workloads.gen import failover_trace, keys_owned_by, shard_of
+
+pytestmark = pytest.mark.fast
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(**kw):
+    kw.setdefault("n_buckets", 64)
+    kw.setdefault("assoc", 4)
+    kw.setdefault("capacity", 96)
+    return CacheConfig(**kw)
+
+
+def _tree_equal(a, b):
+    import jax
+    eq = jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)
+    return all(jax.tree.leaves(eq))
+
+
+# ---------------------------------------------------------------------
+# Shims: the legacy membership entry points must warn and stay
+# bit-identical pass-throughs of the Cluster surface.
+# ---------------------------------------------------------------------
+
+def test_dm_make_shim_warns_and_matches_cluster_make():
+    from repro.dm import dm_make
+    cfg = _cfg()
+    with pytest.warns(DeprecationWarning):
+        mesh, dm, local = dm_make(cfg, 1, 8)
+    cl = Cluster.make(cfg, 1, 8)
+    assert local == cl.local
+    assert _tree_equal(dm, cl.dm)
+
+
+def test_set_capacity_shims_warn_and_match_with_capacity():
+    from repro.dm import dm_set_capacity
+    from repro.elastic import set_capacity
+    cl = Cluster.make(_cfg(), 1, 8)
+    with pytest.warns(DeprecationWarning):
+        a = dm_set_capacity(cl.dm, 64, 1)
+    with pytest.warns(DeprecationWarning):
+        b = set_capacity(cl.dm, 64, 1)
+    c = cl.with_capacity(64)
+    assert _tree_equal(a, c.dm) and _tree_equal(b, c.dm)
+    # free-function spelling too
+    from repro.dm import with_capacity
+    assert _tree_equal(with_capacity(cl, 64).dm, c.dm)
+
+
+def test_identity_membership_is_bit_equal_to_memberless_path():
+    """member=None and the explicit identity membership must execute
+    identically — the Membership plumbing cannot perturb routing."""
+    import jax
+
+    from repro.dm.sharded_cache import dm_execute, identity_membership
+    cfg = _cfg()
+    cl = Cluster.make(cfg, 1, 8)
+    rng = np.random.default_rng(1)
+    keys = rng.integers(1, 400, size=(16, 8)).astype(np.uint32)
+    dm_a, hits_a = dm_execute(cl.mesh, cl.local, cl.dm, keys)
+    dm_b, hits_b = dm_execute(cl.mesh, cl.local, cl.dm, keys,
+                              member=identity_membership(1, cfg.n_buckets))
+    dm_c, hits_c = cl.execute(keys)[0].dm, cl.execute(keys)[1]
+    np.testing.assert_array_equal(np.asarray(hits_a), np.asarray(hits_b))
+    np.testing.assert_array_equal(np.asarray(hits_a), np.asarray(hits_c))
+    assert _tree_equal(dm_a.state, dm_b.state)
+    assert _tree_equal(dm_a.state, dm_c.state)
+    del jax
+
+
+def test_execute_facade_dispatches_cluster():
+    from repro.core.execute import execute
+    cl = Cluster.make(_cfg(), 1, 8)
+    rng = np.random.default_rng(2)
+    keys = rng.integers(1, 300, size=(12, 8)).astype(np.uint32)
+    res = execute(cl, keys)
+    assert type(res.cache).__name__ == "Cluster"
+    assert int(res.ops.sum()) == int((keys != 0).sum())
+    assert 0.0 <= res.hit_rate <= 1.0
+    cl2, hits = cl.execute(keys)
+    np.testing.assert_array_equal(
+        res.hits, np.asarray(hits, bool).sum(axis=1).astype(np.int32))
+    with pytest.raises(ValueError):
+        execute(cl, keys, plan="adaptive")
+
+
+# ---------------------------------------------------------------------
+# Membership maps
+# ---------------------------------------------------------------------
+
+def test_membership_reroutes_dead_home_deterministically():
+    cl = Cluster.make(_cfg(n_buckets=64), 4, 2)
+    m0 = cl.membership()
+    lb = cl.local.n_buckets
+    np.testing.assert_array_equal(np.asarray(m0.primary),
+                                  np.arange(64) // lb)
+    assert bool(np.asarray(m0.serving).all())
+    cl2 = cl.mark_failed(1)
+    m1 = cl2.membership()
+    prim = np.asarray(m1.primary)
+    # shard 1's buckets moved off 1; everyone else's stayed put.
+    home = np.arange(64) // lb
+    assert (prim[home == 1] != 1).all()
+    np.testing.assert_array_equal(prim[home != 1], home[home != 1])
+    # serving tracks ground truth (alive), not router belief.
+    assert bool(np.asarray(m1.serving)[1])
+    # pure function of (alive, routed, replicas): reruns identical.
+    np.testing.assert_array_equal(prim, np.asarray(cl2.membership().primary))
+
+
+def test_membership_promotes_live_secondary_first():
+    cl = Cluster.make(_cfg(n_buckets=64), 4, 2)
+    lb = cl.local.n_buckets
+    rep = np.full(64, 4, np.int32)
+    victims = np.where(np.arange(64) // lb == 1)[0]
+    rep[victims[0]] = 3                      # warm copy on shard 3
+    cl = cl.with_replicas(rep).mark_failed(1)
+    m = cl.membership()
+    assert int(np.asarray(m.primary)[victims[0]]) == 3
+    # promoted secondary is scrubbed from the replica slot
+    assert int(np.asarray(m.replica)[victims[0]]) == 4
+
+
+def test_with_replicas_validates():
+    cl = Cluster.make(_cfg(), 2, 4)
+    with pytest.raises(ValueError):
+        cl.with_replicas(np.zeros(3, np.int32))
+    with pytest.raises(ValueError):
+        cl.with_replicas(np.full(64, 5, np.int32))
+
+
+def test_elect_replicas_is_deterministic_and_excludes_home():
+    cl = Cluster.make(_cfg(n_buckets=64), 4, 2)
+    loads = np.zeros(64)
+    hot = [3, 17, 40, 63]
+    loads[hot] = [100, 90, 80, 70]
+    a = cl.elect_replicas(loads, 3)
+    b = cl.elect_replicas(loads, 3)
+    np.testing.assert_array_equal(a.replicas, b.replicas)
+    lb = cl.local.n_buckets
+    chosen = np.where(a.replicas < 4)[0]
+    assert set(chosen) == {3, 17, 40}        # top-3 by load, not 63
+    for gb in chosen:
+        assert a.replicas[gb] != gb // lb    # never the home shard
+    # single survivor -> nothing to replicate onto
+    lone = cl.mark_failed(1).mark_failed(2).mark_failed(3)
+    assert (lone.elect_replicas(loads, 3).replicas == 4).all()
+
+
+# ---------------------------------------------------------------------
+# HealthMonitor state machine
+# ---------------------------------------------------------------------
+
+def test_health_monitor_patience_both_directions():
+    hm = HealthMonitor(3, HealthConfig(miss_threshold=2, beat_threshold=2))
+    assert hm.observe([True, True, True]) == ([], [])
+    assert hm.observe([True, False, True]) == ([], [])   # streak 1
+    assert hm.observe([True, False, True]) == ([1], [])  # streak 2: failed
+    assert hm.failed == (False, True, False)
+    assert hm.observe([True, False, True]) == ([], [])   # reported once
+    assert hm.observe([True, True, True]) == ([], [])    # beat streak 1
+    assert hm.observe([True, True, True]) == ([], [1])   # recovered
+    assert hm.failed == (False, False, False)
+    assert hm.log == [(1, "failed"), (1, "recovered")]
+
+
+def test_health_config_validates():
+    with pytest.raises(ValueError):
+        HealthConfig(miss_threshold=0)
+
+
+# ---------------------------------------------------------------------
+# Workload helpers
+# ---------------------------------------------------------------------
+
+def test_keys_owned_by_lands_on_shard():
+    ks = keys_owned_by(2, 64, 4, 256, seed=9)
+    assert len(set(ks.tolist())) == 64
+    assert (shard_of(ks, 4, 256) == 2).all()
+    tr = failover_trace(16, 4, 4, 256, hot_shard=2, hot_fraction=0.8,
+                        seed=9)
+    frac = (shard_of(tr.ravel(), 4, 256) == 2).mean()
+    assert frac > 0.5                       # hot share dominates
+    np.testing.assert_array_equal(
+        tr, failover_trace(16, 4, 4, 256, hot_shard=2, hot_fraction=0.8,
+                           seed=9))
+
+
+# ---------------------------------------------------------------------
+# Real 4-shard mesh: failover determinism, accounting, backends,
+# tenant budgets, rewarm (subprocess; slow lane).
+# ---------------------------------------------------------------------
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return out.stdout
+
+
+_SUB_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CacheConfig
+from repro.core.types import stats_sum
+from repro.dm import Cluster
+from repro.workloads.gen import failover_trace
+S, lanes = 4, 8
+cfg = CacheConfig(n_buckets=256, assoc=8, capacity=1024,
+                  experts=("lru", "lfu"))
+keys = failover_trace(48, lanes, S, cfg.n_buckets, hot_shard=1,
+                      hot_fraction=0.6, n_hot=32, n_keys=2000, seed=3)
+
+def drive(cl, kill_at=None, mark_at=None, backend=None):
+    # chunked drive with a mid-trace failure; returns (cl, hits list)
+    if backend is not None:
+        import dataclasses
+        cl = cl._replace(local=dataclasses.replace(cl.local,
+                                                   backend=backend))
+    out = []
+    for t0 in range(0, 48, 8):
+        if kill_at == t0:
+            cl = cl.inject_failure(1)
+        if mark_at == t0:
+            cl = cl.mark_failed(1)
+        cl, hits = cl.execute(keys[t0:t0 + 8])
+        out.append(np.asarray(hits, bool))
+    return cl, np.concatenate(out)
+"""
+
+
+@pytest.mark.slow
+def test_failover_rerun_determinism_and_accounting():
+    """Same seeded trace + same failure schedule => bit-identical hits
+    and counters across reruns; every issued request is accounted as a
+    get, a set, or a route_drop — nothing silently vanishes."""
+    out = run_sub(_SUB_PRELUDE + """
+runs = []
+for _ in range(2):
+    cl = Cluster.make(cfg, S, lanes)
+    loads = np.zeros(cfg.n_buckets); loads[:] = 1.0
+    cl = cl.elect_replicas(loads, 64)
+    cl, hits = drive(cl, kill_at=16, mark_at=32)
+    st = stats_sum(jax.tree.map(np.asarray, cl.dm.stats))
+    runs.append((hits, {f: int(getattr(st, f)) for f in st._fields}))
+assert (runs[0][0] == runs[1][0]).all(), "hits differ across reruns"
+assert runs[0][1] == runs[1][1], "counters differ across reruns"
+st = runs[0][1]
+issued = int((keys != 0).sum())
+accounted = st["gets"] + st["sets"] + st["route_drops"]
+assert accounted == issued, (accounted, issued, st)
+assert st["route_drops"] > 0, "dead-shard window must bounce requests"
+print("DETOK", st["route_drops"])
+""")
+    assert "DETOK" in out
+
+
+@pytest.mark.slow
+def test_replicated_reads_bit_equal_reference_vs_fused():
+    """Replica fan-out picks are pure hash decisions — the reference and
+    fused backends must produce identical hits under replication."""
+    out = run_sub(_SUB_PRELUDE + """
+loads = np.ones(cfg.n_buckets)
+def one(backend):
+    cl = Cluster.make(cfg, S, lanes).elect_replicas(loads, 64)
+    return drive(cl, kill_at=16, mark_at=32, backend=backend)[1]
+a = one("reference"); b = one("fused")
+assert (a == b).all(), "backends diverge under replication/failover"
+print("EQOK", int(a.sum()))
+""")
+    assert "EQOK" in out
+
+
+@pytest.mark.slow
+def test_tenant_budgets_hold_through_failover():
+    """The per-tenant byte budget is a hard invariant on every shard,
+    including through wipe -> reroute -> rewarm."""
+    out = run_sub("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.core import CacheConfig
+from repro.dm import Cluster
+from repro.workloads.gen import failover_trace
+S, lanes = 4, 8
+cfg = CacheConfig(n_buckets=256, assoc=8, capacity=1024, n_tenants=2,
+                  tenant_budget_blocks=(384, 640), experts=("lru", "lfu"))
+keys = failover_trace(48, lanes, S, cfg.n_buckets, hot_shard=1,
+                      hot_fraction=0.6, n_hot=32, n_keys=2000, seed=3)
+ten = (keys % 2).astype(np.uint32)
+cl = Cluster.make(cfg, S, lanes).elect_replicas(np.ones(cfg.n_buckets), 64)
+for t0 in range(0, 48, 8):
+    if t0 == 16:
+        cl = cl.inject_failure(1)
+    if t0 == 32:
+        cl = cl.mark_failed(1)
+    cl, _ = cl.execute(keys[t0:t0 + 8], tenant=ten[t0:t0 + 8])
+cl, rep = cl.recover(1)
+tb = np.asarray(cl.dm.state.tenant_bytes)       # [S, n_tenants]
+budget = np.asarray(cl.dm.state.tenant_budget)  # [S, n_tenants]
+assert (tb <= budget).all(), (tb.tolist(), budget.tolist())
+print("BUDGETOK", tb.sum())
+""")
+    assert "BUDGETOK" in out
+
+
+@pytest.mark.slow
+def test_recover_rewarms_from_survivors():
+    """After mark_failed the hot working set accumulates on the
+    survivors; recover() must move a nonzero number of those objects
+    home and restore the hit rate on the recovered shard's keys."""
+    out = run_sub(_SUB_PRELUDE + """
+cl = Cluster.make(cfg, S, lanes)
+cl, _ = drive(cl, kill_at=8, mark_at=16)
+dead_cached = int(np.asarray(cl.dm.state.n_cached)[1])
+assert dead_cached == 0, "wiped shard must stay empty while routed away"
+cl, rep = cl.recover(1)
+assert rep.drained_objects > 0, "rewarm moved nothing home"
+assert rep.migration_bytes > 0
+assert int(np.asarray(cl.dm.state.n_cached)[1]) == rep.drained_objects
+# rewarmed copies answer immediately: drive the same trace again and
+# the first post-recovery chunk must hit on shard 1's hot keys.
+cl2, hits = cl.execute(keys[:8])
+assert float(np.asarray(hits, bool).mean()) > 0.3
+print("REWARMOK", rep.drained_objects)
+""")
+    assert "REWARMOK" in out
