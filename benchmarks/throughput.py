@@ -41,7 +41,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import default_n_buckets, emit, hit_rate, run_ditto
-from repro.workloads import interleave, ycsb
+from repro.workloads import interleave, ycsb, zipfian
 from repro.workloads.plan import PlanCostModel, plan_adaptive
 
 BACKENDS = ("reference", "fused")
@@ -60,6 +60,61 @@ def _timed(keys, wr, backend, *, repeats=2, **kw):
                                   backend=backend, **kw)
         best = min(best, wall)  # first call includes compile; keep best
     return tr, best
+
+
+def _l0_rows(quick=False):
+    """Near-cache (L0) offload rows (DESIGN.md §15): one zipfian
+    read-mostly trace at 16 clients, executed with the per-lane L0 tier
+    disabled and enabled.  The paired rows make the offload visible in
+    the two dimensions that matter for a client-side tier:
+
+      * ``rdma_wire_bytes`` — remote wire traffic (read + write bytes);
+        every L0 hit is served from the lane's own arrays, so a skewed
+        read trace sheds most of its GET traffic.  Asserted >= 30%
+        reduction — the acceptance bar for the tier.
+      * ``hit_rate`` — L0 hits bypass the remote frequency/recency
+        metadata (§15 "when L0 is a loss"), so eviction decisions can
+        drift.  On a hot-set-fits workload like this one the drift is
+        zero; asserted within 1pp so a regression that un-fits the hot
+        set trips the run, and bench_compare's quality gate holds the
+        recorded rate thereafter.
+
+    The workload is chosen so the hot set fits the L0-visible capacity
+    (zipf theta=1.5 over 500 keys, capacity 256): that is the regime the
+    tier is FOR, and the regime where the metadata-skip costs nothing.
+    """
+    n = 4_096 if quick else 16_384
+    n_keys, theta, cap, entries = 500, 1.5, 256, 8
+    wr = np.random.default_rng(7).random(n) < 0.05
+    keys = zipfian(n, n_keys, theta, seed=7)
+    rows, out = [], {}
+    for tag, l0 in (("off", 0), ("on", entries)):
+        best, tr = float("inf"), None
+        for _ in range(3):  # first call compiles; keep best wall
+            tr, _, wall = run_ditto(keys, capacity=cap,
+                                    n_clients=N_CLIENTS, is_write=wr,
+                                    backend="fused", l0_entries=l0)
+            best = min(best, wall)
+        st = tr.stats
+        wire = int(st.rdma_read_bytes) + int(st.rdma_write_bytes)
+        out[tag] = (hit_rate(tr), wire)
+        rows.append(dict(
+            name=f"l0_zipf_{tag}", n=n, batch=1, l0_entries=l0,
+            us_per_call=best / n * 1e6,
+            hit_rate=hit_rate(tr),
+            l0_hits=int(st.l0_hits),
+            l0_invalidations=int(st.l0_invalidations),
+            rdma_wire_bytes=wire,
+            device=jax.default_backend()))
+    reduction = 1.0 - out["on"][1] / out["off"][1]
+    delta_pp = abs(out["on"][0] - out["off"][0]) * 100
+    assert reduction >= 0.30, (
+        f"L0 wire-byte reduction {reduction:.1%} < 30% acceptance bar")
+    assert delta_pp <= 1.0, (
+        f"L0 hit-rate drift {delta_pp:.2f}pp > 1pp acceptance bar")
+    rows[-1]["wire_reduction"] = round(reduction, 4)
+    rows[-1]["hit_delta_pp"] = round(delta_pp, 4)
+    return rows
 
 
 def run(quick=False):
@@ -199,6 +254,7 @@ def run(quick=False):
                 hit_rate=hr,
                 seq_hit_rate=seq_hr["fused"],
                 device=jax.default_backend()))
+    rows.extend(_l0_rows(quick))
     emit(rows, "throughput")
     return rows
 

@@ -5,7 +5,11 @@ elasticity timeline — memory grow (zero migration), compute grow/shrink
 a workload shift, and a kill-a-shard failover leg (hot-bucket
 replication + heartbeat detection + rewarming recovery, DESIGN.md §14)
 — via the elastic runtime's scenario driver and the `dm.Cluster`
-membership handle.
+membership handle.  Client lanes run a small L0 near-cache
+(`l0_entries=8`, DESIGN.md §15): the `l0hit` column counts requests
+served entirely lane-locally — watch it dip in the failover window
+(the epoch flush drops every lane's L0 wholesale) and climb back as
+the lanes refill.
 
   PYTHONPATH=src python examples/dm_elastic_cache.py
 (must be its own process: it forces an 8-device host platform)
@@ -22,7 +26,7 @@ from repro.elastic import HealthMonitor, run_scenario
 from repro.workloads import lru_friendly, zipfian
 
 cfg = CacheConfig(n_buckets=1024, assoc=8, capacity=2048,
-                  experts=("lru", "lfu"))
+                  experts=("lru", "lfu"), l0_entries=8)
 
 timeline = [
     (100, ("set_capacity", 4096)),       # memory grow: one scalar/shard
@@ -44,12 +48,13 @@ res = run_scenario(
     replicate_hot=64)                    # hot-bucket replica election
 
 print(f"{'window':>10} {'cap':>5} {'lanes':>5} {'hit%':>6} "
-      f"{'cached':>6} {'KiB':>6} {'Mops':>6} {'drop':>5} {'up':>3} events")
+      f"{'cached':>6} {'KiB':>6} {'Mops':>6} {'l0hit':>5} {'drop':>5} "
+      f"{'up':>3} events")
 for w in res.windows:
     print(f"{w['t0']:>4}-{w['t1']:<5} {w['capacity']:>5} {w['lanes']:>5} "
           f"{100 * w['hit_rate']:>6.1f} {w['n_cached']:>6} "
           f"{w['bytes_cached'] // 1024:>6} "
-          f"{w['tput_mops']:>6.2f} {w['route_drops']:>5} "
+          f"{w['tput_mops']:>6.2f} {w['l0_hits']:>5} {w['route_drops']:>5} "
           f"{sum(w['routed']):>3} "
           f"{','.join(w['events']) or '-'}")
 

@@ -53,7 +53,12 @@ phase dittolint python scripts/dittolint.py --plan-check
 
 phase tier-1 python -m pytest "${PYTEST_ARGS[@]}"
 
+# Docs gate (scripts/check_docs.py): intra-repo markdown links/anchors
+# must resolve, and the gated examples must run with DeprecationWarning
+# promoted to an error.  Fast lane: links only (milliseconds); the full
+# lane runs the examples too.
 if [[ "$FAST" == "1" ]]; then
+    phase docs python scripts/check_docs.py --no-examples
     phase bench-throughput python -c \
         "from benchmarks import throughput; throughput.run(quick=True)"
     phase bench-sizes python -c \
@@ -77,6 +82,8 @@ if [[ "$FAST" == "1" ]]; then
     echo "check --fast: OK"
     exit 0
 fi
+
+phase docs python scripts/check_docs.py
 
 phase dittolint-full python scripts/dittolint.py --no-astlint \
     --jaxpr --sanitize-smoke

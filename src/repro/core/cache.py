@@ -19,6 +19,14 @@ Every operation is also metered in "issued remote ops" (OpStats) — the
 RDMA-verb counts of the paper's cost model — so the efficiency/ablation
 benchmarks (Figs. 2/14/24/25) are driven by real counters from this
 implementation, not hand-derived formulas.
+
+When ``cfg.l0_entries > 0`` each client lane additionally runs a tiny
+near-cache (L0) probed before any remote work (step 1a): valid read
+hits are served lane-locally and masked out of the step, moving zero
+RDMA counters.  Coherence is per-bucket version tokens plus a
+structural epoch — see DESIGN.md §15.  ``l0_entries=0`` (default)
+compiles the tier away entirely; the step is bit-identical to a build
+without it.
 """
 
 from __future__ import annotations
@@ -189,6 +197,46 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     ts_req = jnp.repeat(ts_round, C)                               # [B]
     rng_b = jnp.tile(clients.rng, (G, 1))                          # [B, 2]
     step_rng = jax.vmap(jax.random.fold_in)(rng_b, ts_req)
+    lane_b = jnp.tile(jnp.arange(C, dtype=I32), G)                 # [B]
+
+    # ------------------------------------------------------------------
+    # 1a. L0 near-cache probe (DESIGN.md §15): serve GETs from the
+    #     per-lane near-cache before any remote machinery runs.  An
+    #     entry is valid only while its captured bucket-version token
+    #     still equals the owning bucket's current version AND the lane
+    #     has observed the current flush epoch — any committed mutation
+    #     of the bucket (or an out-of-band drain/failover) silently
+    #     invalidates it, so an L0 hit can never serve a stale value.
+    #     Requests served here are masked to padded no-op lanes (key 0):
+    #     the entire remote path below — probe, metadata, inserts,
+    #     eviction, RDMA/wire counters — sees them exactly as it sees
+    #     padding, which is what makes the `l0_entries == 0` gate (zero
+    #     added equations, untouched keys) bit-identical to the pre-L0
+    #     engine.
+    # ------------------------------------------------------------------
+    l0 = cfg.l0_entries > 0
+    if l0:
+        shadow_b = (jnp.zeros((B,), bool) if shadow is None
+                    else shadow.reshape(B))
+        ent_bkt = jnp.clip(clients.l0_bkt, 0, cfg.n_buckets - 1)
+        ent_present = clients.l0_key != 0                      # [C, L0]
+        ent_valid = (ent_present
+                     & (clients.l0_seen_epoch == state.l0_epoch)[:, None]
+                     & (clients.l0_tok == state.bucket_ver[ent_bkt]))
+        l0_stale = ent_present & ~ent_valid
+        n_l0_inval = jnp.sum(l0_stale)
+        l0_match = (ent_valid[lane_b]
+                    & (clients.l0_key[lane_b] == keys_b[:, None]))  # [B, L0]
+        l0_idx = jnp.argmax(l0_match, axis=1)                  # [B]
+        # Only plain GETs are servable locally: writes (and replica
+        # mirrors) must travel to the pool so they bump the bucket
+        # version every other lane's entries validate against.
+        l0_hit = jnp.any(l0_match, axis=1) & op & ~is_write & ~shadow_b
+        l0_value = clients.l0_val[lane_b, l0_idx]              # [B, W]
+        l0_size = clients.l0_sz[lane_b, l0_idx]                # [B]
+        keys_b = jnp.where(l0_hit, U32(0), keys_b)
+        op = keys_b != 0
+        n_l0_hit = jnp.sum(l0_hit)
 
     # ------------------------------------------------------------------
     # 1. Bucket probe (1 RDMA_READ per op; with SFHT it carries metadata).
@@ -299,7 +347,6 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
     # reductions (the old `for t in range(Tn)` stack traced O(Tn) full-
     # width reductions; updates apply in request = round order, so the
     # G=1 and single-tenant results are element-identical).
-    lane_b = jnp.tile(jnp.arange(C, dtype=I32), G)           # [B]
     tb_i = tenant_b.astype(I32)
     pen_lane = jnp.zeros((C, Tn, E), F32).at[lane_b, tb_i].add(
         pen_e)                                               # [C, T, E]
@@ -628,6 +675,62 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
 
     result_vals = state.values[jnp.maximum(slot, 0)]
 
+    # ------------------------------------------------------------------
+    # 6b. L0 coherence tokens + fill (DESIGN.md §15).  Every bucket that
+    #     commits a mutation this step — SET payload, insert, eviction —
+    #     bumps its version exactly once; the bump is what invalidates
+    #     other lanes' L0 copies.  Fills are restricted to non-write GET
+    #     hits on buckets with ZERO bumps this step: for those the
+    #     step-entry snapshot the hit served IS the post-step table
+    #     content, so entry validity (token match) always implies value
+    #     currency.  One fill per lane per step (the last fillable
+    #     request, matching last-writer-wins recency); victim order is
+    #     same-key refresh → first empty slot → local LRU.
+    # ------------------------------------------------------------------
+    if l0:
+        nb = cfg.n_buckets
+        touched = jnp.zeros((nb + 1,), bool)
+        touched = touched.at[jnp.where(set_ok | ins_ok, bucket, nb)].set(True)
+        touched = touched.at[jnp.where(ev_winner, victims // A, nb)].set(True)
+        touched = touched[:nb]                                 # bool[nb]
+        bucket_ver2 = state.bucket_ver + touched.astype(U32)
+
+        fill_ok = hit & ~is_write & ~shadow_b & ~touched[bucket]   # [B]
+        pos = jnp.arange(B, dtype=I32)
+        last_fill = jnp.full((C,), -1, I32).at[
+            jnp.where(fill_ok, lane_b, C)].max(pos, mode="drop")   # [C]
+        f_req = jnp.maximum(last_fill, 0)                      # [C] -> B idx
+        do_fill = last_fill >= 0
+        fill_key = keys_b[f_req]
+        fill_bkt = bucket[f_req]
+        fill_tok = state.bucket_ver[fill_bkt]   # step-entry == post-step
+        fill_sz = old_sz[f_req]
+        fill_val = result_vals[f_req]
+        fill_ts = ts_req[f_req]
+
+        # Drop stale entries, then refresh the local LRU stamp of every
+        # entry that served an L0 hit this step (max request-ts wins).
+        key1 = jnp.where(l0_stale, U32(0), clients.l0_key)
+        last1 = clients.l0_last.at[
+            jnp.where(l0_hit, lane_b, C), l0_idx].max(ts_req, mode="drop")
+        same = key1 == fill_key[:, None]                       # [C, L0]
+        empty = key1 == 0
+        pick = jnp.where(
+            jnp.any(same, axis=1), jnp.argmax(same, axis=1),
+            jnp.where(jnp.any(empty, axis=1), jnp.argmax(empty, axis=1),
+                      jnp.argmin(last1, axis=1)))              # [C]
+        wl = jnp.where(do_fill, jnp.arange(C, dtype=I32), C)
+        l0_key2 = key1.at[wl, pick].set(fill_key, mode="drop")
+        l0_bkt2 = clients.l0_bkt.at[wl, pick].set(
+            fill_bkt.astype(I32), mode="drop")
+        l0_tok2 = clients.l0_tok.at[wl, pick].set(fill_tok, mode="drop")
+        l0_sz2 = clients.l0_sz.at[wl, pick].set(fill_sz, mode="drop")
+        l0_val2 = clients.l0_val.at[wl, pick].set(fill_val, mode="drop")
+        l0_last2 = last1.at[wl, pick].set(fill_ts, mode="drop")
+        l0_seen2 = jnp.broadcast_to(state.l0_epoch, (C,))
+    else:
+        bucket_ver2 = state.bucket_ver
+
     new_state = CacheState(
         key=key2, key_hash=khash2, size=sizes3, ptr=ptr3,
         insert_ts=ins_ts3, last_ts=last_ts, freq=freq, ext=ext, values=vals,
@@ -636,11 +739,17 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         clock=clock + U32(G), weights=gw if multi else gw[0], gds_L=gds_L,
         capacity_blocks=state.capacity_blocks,
         tenant=tenant2, tenant_bytes=tenant_bytes,
-        tenant_budget=state.tenant_budget)
-    new_clients = clients._replace(
+        tenant_budget=state.tenant_budget,
+        bucket_ver=bucket_ver2, l0_epoch=state.l0_epoch)
+    cl_upd = dict(
         local_weights=local_w if multi else local_w[:, 0],
         penalty_acc=pacc if multi else pacc[:, 0],
         penalty_cnt=pcnt if multi else pcnt[:, 0])
+    if l0:
+        cl_upd.update(l0_key=l0_key2, l0_bkt=l0_bkt2, l0_tok=l0_tok2,
+                      l0_sz=l0_sz2, l0_val=l0_val2, l0_last=l0_last2,
+                      l0_seen_epoch=l0_seen2)
+    new_clients = clients._replace(**cl_upd)
 
     # ------------------------------------------------------------------
     # 7. Remote-op accounting (cost model; see DESIGN.md §2).
@@ -706,6 +815,15 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         miss_bytes_v = jnp.sum(
             jnp.where(miss & ~sh, obj_size, U32(0))).astype(I32) * 64
         n_rep = jnp.sum(sh)
+    if l0:
+        # L0 hits are client-visible (gets/hits/hit_bytes keep their
+        # offered-load meaning) but issue ZERO rdma ops/bytes — that
+        # delta against the remote counters above is the wire-byte
+        # offload the tier exists to buy.
+        gets_v = gets_v + n_l0_hit
+        hits_v = hits_v + n_l0_hit
+        hit_bytes_v = hit_bytes_v + jnp.sum(
+            jnp.where(l0_hit, l0_size, U32(0))).astype(I32) * 64
     stats = stats_add(
         stats, rdma_read=reads, rdma_write=writes, rdma_cas=cas,
         rdma_faa=faa, rpc=n_sync, gets=gets_v, sets=sets_v,
@@ -715,6 +833,13 @@ def access_group(cfg: CacheConfig, state: CacheState, clients: ClientState,
         evictions=n_evict, bucket_evictions=jnp.sum(fallback_obj),
         insert_drops=jnp.sum(dropped), fc_hits=n_fc_hit,
         fc_flushes=n_faa, weight_syncs=n_sync, replica_writes=n_rep)
+    if l0:
+        stats = stats_add(stats, l0_hits=n_l0_hit,
+                          l0_invalidations=n_l0_inval)
+        # Merge the locally-served requests back into the caller-facing
+        # result (they were masked to padding for the remote path).
+        hit = hit | l0_hit
+        result_vals = jnp.where(l0_hit[:, None], l0_value, result_vals)
 
     if cfg.sanitize:
         # dittolint pass 3 (DESIGN.md §12): jittable invariant checks on

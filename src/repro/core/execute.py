@@ -63,7 +63,12 @@ class Cache(NamedTuple):
 
 
 def make(cfg: CacheConfig, n_clients: int, seed: int = 0) -> Cache:
-    """Build a fresh :class:`Cache` handle."""
+    """Build a fresh :class:`Cache` handle: an empty pool per ``cfg``
+    plus ``n_clients`` client lanes (FC caches, expert weights, and —
+    when ``cfg.l0_entries > 0`` — per-lane L0 near-caches, all empty).
+    The handle is what :func:`execute` consumes and returns advanced;
+    it replaces the legacy ``make_cache`` triple, which lacked the cfg.
+    """
     state, clients, stats = make_cache(cfg, n_clients, seed)
     return Cache(cfg, state, clients, stats)
 

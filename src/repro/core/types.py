@@ -75,6 +75,11 @@ class CacheConfig:
     use_lwh: bool = True                # lightweight (embedded) history
     use_lwu: bool = True                # lazy weight update
     use_fc: bool = True                 # frequency-counter cache
+    l0_entries: int = 0                 # per-lane near-cache (L0) entries
+                                        # probed before the DM router
+                                        # (DESIGN.md §15); 0 disables the
+                                        # tier entirely — the engine stays
+                                        # bit-identical to the pre-L0 path
     sanitize: bool = False              # arm the dittolint invariant
                                         # sanitizer (analysis/sanitize.py)
                                         # inside access_group; eager calls
@@ -138,6 +143,8 @@ class CacheConfig:
             raise ValueError("tenant budgets must be positive block counts")
         if self.backend not in ("reference", "fused"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.l0_entries < 0:
+            raise ValueError(f"l0_entries={self.l0_entries} must be >= 0")
 
     def split(self) -> tuple:
         """Compat shim (DESIGN.md §13): split this legacy config into a
@@ -243,6 +250,17 @@ class CacheState(NamedTuple):
                             # arbiter rewrites online; when n_tenants==1
                             # the engine reads capacity_blocks instead
                             # so classic resizes stay one scalar write
+    # --- L0 near-cache coherence tokens (DESIGN.md §15) ---
+    bucket_ver: jnp.ndarray     # u32[n_buckets] monotone bucket version;
+                            # bumped once per step for every bucket that
+                            # commits a write/insert/eviction.  An L0
+                            # entry is valid only while its captured
+                            # token equals this — never reset, so tokens
+                            # from before a wipe can never revalidate
+    l0_epoch: jnp.ndarray       # u32[] L0 flush epoch; bumped by the
+                            # out-of-band mutators (drain/failover/
+                            # rewarm) that bypass access_group, dropping
+                            # every lane's L0 contents at the next step
 
 
 class ClientState(NamedTuple):
@@ -263,6 +281,15 @@ class ClientState(NamedTuple):
     penalty_cnt: jnp.ndarray  # i32[]   buffered regret count
                               # (i32[T] when n_tenants > 1)
     rng: jnp.ndarray          # PRNG key
+    # --- L0 near-cache tier (DESIGN.md §15; all [C, l0_entries]) ---
+    l0_key: jnp.ndarray       # u32[C, L0] cached object ID, 0 = empty
+    l0_bkt: jnp.ndarray       # i32[C, L0] home bucket of the entry
+    l0_tok: jnp.ndarray       # u32[C, L0] bucket_ver token captured at fill
+    l0_sz: jnp.ndarray        # u32[C, L0] object size in 64B blocks
+    l0_val: jnp.ndarray       # u32[C, L0, value_words] cached payload
+    l0_last: jnp.ndarray      # u32[C, L0] last-touch logical ts (local LRU)
+    l0_seen_epoch: jnp.ndarray  # u32[C] CacheState.l0_epoch the lane last
+                              # observed; a mismatch drops all entries
 
 
 class OpStats(NamedTuple):
@@ -314,6 +341,14 @@ class OpStats(NamedTuple):
     fc_hits: jnp.ndarray
     fc_flushes: jnp.ndarray
     weight_syncs: jnp.ndarray
+    l0_hits: jnp.ndarray            # GETs served from the per-lane L0
+                                    # near-cache: counted in gets/hits
+                                    # (client-visible) but issuing ZERO
+                                    # rdma ops/bytes — the wire-byte
+                                    # offload the tier exists for
+    l0_invalidations: jnp.ndarray   # L0 entries dropped on version-token
+                                    # or epoch mismatch (coherence work,
+                                    # not an error counter)
 
 
 class MDView(NamedTuple):
@@ -377,6 +412,8 @@ def init_cache(cfg: CacheConfig) -> CacheState:
         tenant=jnp.zeros((n,), jnp.uint32),
         tenant_bytes=jnp.zeros((cfg.n_tenants,), jnp.int32),
         tenant_budget=jnp.asarray(cfg.tenant_budgets, jnp.int32),
+        bucket_ver=jnp.zeros((cfg.n_buckets,), jnp.uint32),
+        l0_epoch=jnp.zeros((), jnp.uint32),
     )
 
 
@@ -395,6 +432,14 @@ def init_clients(cfg: CacheConfig, n_clients: int, seed: int = 0) -> ClientState
         penalty_acc=jnp.zeros((n_clients,) + wshape, jnp.float32),
         penalty_cnt=jnp.zeros(cnt_shape, jnp.int32),
         rng=keys,
+        l0_key=jnp.zeros((n_clients, cfg.l0_entries), jnp.uint32),
+        l0_bkt=jnp.zeros((n_clients, cfg.l0_entries), jnp.int32),
+        l0_tok=jnp.zeros((n_clients, cfg.l0_entries), jnp.uint32),
+        l0_sz=jnp.zeros((n_clients, cfg.l0_entries), jnp.uint32),
+        l0_val=jnp.zeros((n_clients, cfg.l0_entries, cfg.value_words),
+                         jnp.uint32),
+        l0_last=jnp.zeros((n_clients, cfg.l0_entries), jnp.uint32),
+        l0_seen_epoch=jnp.zeros((n_clients,), jnp.uint32),
     )
 
 

@@ -144,6 +144,7 @@ def _dm_make_impl(cfg: CacheConfig, n_shards: int, lanes_per_shard: int,
         gds_L=rep(state.gds_L),
         capacity_blocks=rep(jnp.asarray(local.budget_blocks, jnp.int32)),
         tenant_bytes=rep(state.tenant_bytes),
+        l0_epoch=rep(state.l0_epoch),
         # Exact per-shard split (column sums == the global budgets).
         tenant_budget=jnp.asarray(
             split_tenant_budgets(cfg.tenant_budgets, n_shards)))
@@ -168,7 +169,8 @@ def _squeeze_shard(state: CacheState, stats: OpStats):
         clock=state.clock[0], weights=state.weights[0],
         gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
         tenant_bytes=state.tenant_bytes[0],
-        tenant_budget=state.tenant_budget[0])
+        tenant_budget=state.tenant_budget[0],
+        l0_epoch=state.l0_epoch[0])
     return state, jax.tree.map(lambda x: x[0], stats)
 
 
@@ -180,7 +182,8 @@ def _expand_shard(state: CacheState, stats: OpStats):
         clock=state.clock[None], weights=state.weights[None],
         gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
         tenant_bytes=state.tenant_bytes[None],
-        tenant_budget=state.tenant_budget[None])
+        tenant_budget=state.tenant_budget[None],
+        l0_epoch=state.l0_epoch[None])
     return state, jax.tree.map(lambda x: x[None], stats)
 
 

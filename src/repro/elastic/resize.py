@@ -115,7 +115,8 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         clock=state.clock[0], weights=state.weights[0],
         gds_L=state.gds_L[0], capacity_blocks=state.capacity_blocks[0],
         tenant_bytes=state.tenant_bytes[0],
-        tenant_budget=state.tenant_budget[0])
+        tenant_budget=state.tenant_budget[0],
+        l0_epoch=state.l0_epoch[0])
     stats = jax.tree.map(lambda x: x[0], stats)
 
     n_slots = state.key.shape[0]
@@ -168,7 +169,12 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         tenant_bytes=jnp.zeros((n_tenants,), I32).at[
             state.tenant.astype(I32)].add(
             jnp.where(live2, size2, U32(0)).astype(I32)),
-        hist_ctr=state.hist_ctr + n_hist)
+        hist_ctr=state.hist_ctr + n_hist,
+        # Drain evictions bypass access_group's bucket-version bumps, so
+        # a draining shard flushes every lane's L0 via the epoch instead
+        # (DESIGN.md §15) — otherwise a near-cache copy of a drained
+        # object could keep serving phantom hits.
+        l0_epoch=state.l0_epoch + (n_evict > 0).astype(U32))
     # Cost accounting: the drain is a server-driven sweep — one sampling
     # read per victim batch, one CAS per victim, history writes + FAA.
     stats = stats_add(
@@ -182,7 +188,8 @@ def _drain_shard(local_cfg: CacheConfig, batch: int, state, stats):
         clock=state.clock[None], weights=state.weights[None],
         gds_L=state.gds_L[None], capacity_blocks=state.capacity_blocks[None],
         tenant_bytes=state.tenant_bytes[None],
-        tenant_budget=state.tenant_budget[None])
+        tenant_budget=state.tenant_budget[None],
+        l0_epoch=state.l0_epoch[None])
     stats = jax.tree.map(lambda x: x[None], stats)
     return state, stats, n_evict[None], freed.astype(I32)[None]
 
@@ -413,6 +420,13 @@ def fail_wipe_shard(mesh: Mesh, local_cfg: CacheConfig, dm, k: int):
         h = np.array(getattr(st, name))
         h[k] = 0
         out[name] = _put_like(getattr(st, name), h)
+    # Global L0 flush (DESIGN.md §15): the wipe — and the re-routing that
+    # follows — happens outside access_group's version bumps, and after
+    # failover the same key may be served by a different shard's lanes,
+    # so EVERY shard's epoch advances to drop all near-cache copies.
+    # bucket_ver stays as-is (monotone): pre-wipe tokens can then never
+    # revalidate against the rebuilt table.
+    out["l0_epoch"] = _put_like(st.l0_epoch, np.array(st.l0_epoch) + 1)
     return dm._replace(state=st._replace(**out))
 
 
@@ -487,6 +501,11 @@ def rewarm_shard(mesh: Mesh, local_cfg: CacheConfig, dm, k: int, *,
     out["n_cached"] = _put_like(st.n_cached, nc)
     out["bytes_cached"] = _put_like(st.bytes_cached, bc)
     out["tenant_bytes"] = _put_like(st.tenant_bytes, tb)
+    if moved:
+        # Rewarm moves objects between shards without touching bucket
+        # versions — flush every lane's L0 via the epoch (DESIGN.md §15)
+        # so a survivor-filled near-cache copy can't outlive the move.
+        out["l0_epoch"] = _put_like(st.l0_epoch, np.array(st.l0_epoch) + 1)
     dm = dm._replace(state=st._replace(**out))
     return dm, ResizeReport(
         migration_bytes=moved_bytes, drained_objects=moved,

@@ -336,6 +336,8 @@ def run_scenario(cfg: CacheConfig, keys, timeline: Sequence[Tuple[int, Event]],
                 route_drops=int(d.route_drops),
                 replica_writes=int(d.replica_writes),
                 replica_drops=int(d.replica_drops),
+                l0_hits=int(d.l0_hits),
+                l0_invalidations=int(d.l0_invalidations),
                 alive=[bool(a) for a in cluster.alive],
                 routed=[bool(r) for r in cluster.routed],
                 n_replicated=int((cluster.replicas < n_shards).sum()),

@@ -171,3 +171,36 @@ def test_merge_histories_rotates(tmp_path):
     bc.merge_histories(str(art), repo_root=str(tmp_path))
     out = json.loads((tmp_path / "BENCH_z.json").read_text())
     assert len(out) == 50 and out[-1] == recs[-1]
+
+
+def test_speedup_floor_and_quality_gates_combine(tmp_path):
+    """The --speedup-floor gate (absolute bar on the newest record) and
+    the QUALITY_KEYS drop gate (baseline-relative) are independent: one
+    row can trip both in a single main() run, relaxing one flag must not
+    mask the other, and rows that carry a quality key but no
+    ``fused_speedup`` (e.g. the L0 zipfian offload rows) are seen only
+    by the quality gate."""
+    path = tmp_path / "BENCH_c.json"
+    base = dict(us_per_call=10.0, fused_speedup=1.2, hit_rate=0.90)
+    # Newest record regresses BOTH dimensions of the batch row, and the
+    # floor-exempt l0 row regresses quality only.
+    hist = [rec(a_batch8=dict(base), l0_zipf_on=dict(us_per_call=5.0,
+                                                     hit_rate=0.94)),
+            rec(a_batch8=dict(base, fused_speedup=0.50, hit_rate=0.50),
+                l0_zipf_on=dict(us_per_call=5.0, hit_rate=0.50))]
+    path.write_text(json.dumps(hist))
+    assert bc.main(["--file", str(path)]) == 1
+    # Relaxing the floor alone leaves the two quality drops failing...
+    assert bc.main(["--file", str(path), "--speedup-floor", "0.4"]) == 1
+    # ...relaxing the quality bar alone leaves the floor failing...
+    assert bc.main(["--file", str(path), "--quality-drop", "0.5"]) == 1
+    # ...and only relaxing both lets the record through.
+    assert bc.main(["--file", str(path), "--speedup-floor", "0.4",
+                    "--quality-drop", "0.5"]) == 0
+    # Floor-only failure on a quality-healthy record: the batch row
+    # keeps its hit rate, so the quality gate stays green.
+    path.write_text(json.dumps(
+        [rec(a_batch8=dict(base)),
+         rec(a_batch8=dict(base, fused_speedup=0.50))]))
+    assert bc.main(["--file", str(path)]) == 1
+    assert bc.main(["--file", str(path), "--speedup-floor", "0.4"]) == 0
